@@ -1,0 +1,47 @@
+"""Shared benchmark helpers.
+
+Wall-clock benchmarks run reduced-width configs on CPU (full-size configs are
+exercised shape-only by the dry-run); the quantities compared are the ones the
+paper claims — ratios and phase structure, not absolute GPU seconds.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+
+from repro.configs.registry import get_arch
+from repro.models.model import Model
+from repro.serving.engine import ServingEngine
+
+# the paper's primary model (qwen3-14b) + a second family, reduced
+BENCH_ARCHS = ["qwen3-14b", "smollm-360m"]
+
+
+def make_engine(arch: str, *, max_batch: int = 16, max_seq: int = 64,
+                bucket_mode: str = "all") -> ServingEngine:
+    cfg = get_arch(arch).reduced()
+    model = Model(cfg)
+    eng = ServingEngine(model, max_batch=max_batch, max_seq=max_seq,
+                        bucket_mode=bucket_mode)
+    eng.load_weights(rng=jax.random.PRNGKey(0))
+    return eng
+
+
+def timed(fn: Callable, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return time.perf_counter() - t0, out
+
+
+def fresh_jax_caches():
+    """Clear jit caches between cold-start measurements so 'vanilla' really
+    retraces/recompiles (a fresh process is the honest baseline; clearing
+    caches is the in-process approximation)."""
+    jax.clear_caches()
+
+
+def emit(rows):
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")

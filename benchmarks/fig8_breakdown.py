@@ -1,0 +1,62 @@
+"""[Fig 8] Engine-initialization phase breakdown: vanilla vs checkpoint-image
+vs Foundry.
+
+The "CUDA-checkpoint" analogue bundles EVERY bucket's instantiated executable
+into the archive (no templating, no on-demand work) — restore deserializes
+them all; Foundry deserializes only templates. Phases are reported
+separately, mirroring the paper's stacked bars.
+"""
+from __future__ import annotations
+
+import pickle
+
+from benchmarks.common import BENCH_ARCHS, fresh_jax_caches, make_engine, timed
+from repro.core import foundry_load
+
+
+def run():
+    rows = []
+    arch = BENCH_ARCHS[0]
+    eng = make_engine(arch)
+    archive_t, _ = eng.save_archive()                     # templated
+    archive_all, _ = eng.save_archive(serialize_all_executables=True)
+
+    # vanilla phases
+    fresh_jax_caches()
+    eng_v = make_engine(arch)
+    rep = eng_v.cold_start_vanilla()
+    for phase, s in rep.phases.items():
+        rows.append((f"fig8.vanilla.{phase}", s * 1e6, ""))
+
+    # checkpoint-image analogue: deserialize every bucket executable
+    fresh_jax_caches()
+    eng_c = make_engine(arch)
+
+    def restore_all():
+        from repro.core.restore import _deserialize_template
+        spec_m = archive_all.manifest["specs"]["decode"]
+        n = 0
+        for g in spec_m["groups"]:
+            for blob in g["bucket_executable_blobs"].values():
+                _deserialize_template(archive_all.get_blob(blob))
+                n += 1
+        return n
+
+    t_ckpt, n = timed(restore_all)
+    rows.append(("fig8.ckpt_image.restore_all", t_ckpt * 1e6,
+                 f"{n}_executables"))
+
+    # foundry phases
+    fresh_jax_caches()
+    eng_f = make_engine(arch)
+    rep_f = eng_f.cold_start_foundry(archive_t, background_exact=False)
+    for phase, s in rep_f.phases.items():
+        rows.append((f"fig8.foundry.{phase}", s * 1e6, ""))
+    rows.append(("fig8.foundry.total", rep_f.total_s * 1e6,
+                 f"vs_vanilla_{rep.total_s:.2f}s"))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run())

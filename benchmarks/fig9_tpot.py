@@ -1,0 +1,82 @@
+"""[Fig 9] Serving-throughput preservation: TPOT with natively-captured vs
+Foundry-restored programs, across batch sizes — plus the paper's token-
+identity check (§6.3: "the tokens generated are identical").
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import BENCH_ARCHS, fresh_jax_caches, make_engine, timed
+
+
+def _tpot(eng, bucket: int, steps: int = 20):
+    """Mean decode-step time at a given active batch (pad path included)."""
+    m = eng.model
+    exec_bucket, exe, path = eng.programs.lookup(bucket)
+    cache = m.init_cache(exec_bucket, eng.max_seq)
+    cache = {**cache, "lengths": jnp.full((exec_bucket,), 4, jnp.int32)}
+    toks = jnp.ones((exec_bucket,), jnp.int32)
+    # warmup
+    cache, logits = exe(eng.params, cache, toks)
+    jax.block_until_ready(logits)
+    t0 = time.perf_counter()
+    for _ in range(steps):
+        cache, logits = exe(eng.params, cache, toks)
+    jax.block_until_ready(logits)
+    return (time.perf_counter() - t0) / steps, path
+
+
+def run():
+    rows = []
+    arch = BENCH_ARCHS[0]
+    eng = make_engine(arch, bucket_mode="pow2")
+    archive, _ = eng.save_archive()
+    eng.cold_start_vanilla()
+
+    eng_f = make_engine(arch, bucket_mode="pow2")
+    eng_f.cold_start_foundry(archive, background_exact=True)
+
+    # transient: right after LOAD every bucket pad-serves via its template
+    t_pad, path0 = _tpot(eng_f, 1)
+    rows.append((f"fig9.{arch}.b1.foundry_tpot_transient", t_pad * 1e6,
+                 f"path={path0}(pad-to-template)"))
+
+    # steady state: background exact-bucket compiles have swapped in
+    from repro.core import wait_for_background
+    wait_for_background(eng_f._load_report)
+
+    for bucket in (1, 4, 16):
+        t_v, _ = _tpot(eng, bucket)
+        t_f, path = _tpot(eng_f, bucket)
+        rows.append((f"fig9.{arch}.b{bucket}.vanilla_tpot", t_v * 1e6, ""))
+        rows.append((f"fig9.{arch}.b{bucket}.foundry_tpot", t_f * 1e6,
+                     f"path={path},ratio={t_f / t_v:.3f}"))
+
+    # token identity (greedy decode through both engines)
+    prompts = [[3, 1, 4], [1, 5, 9, 2], [6, 5]]
+    eng2 = make_engine(arch, bucket_mode="pow2")
+    eng2.cold_start_vanilla()
+    for p in prompts:
+        eng2.submit(p, 5)
+    eng2.run_until_drained()
+    ref = [tuple(r.generated) for r in eng2.scheduler.done]
+
+    eng3 = make_engine(arch, bucket_mode="pow2")
+    eng3.cold_start_foundry(archive, background_exact=False)
+    for p in prompts:
+        eng3.submit(p, 5)
+    eng3.run_until_drained()
+    got = [tuple(r.generated) for r in eng3.scheduler.done]
+    identical = sorted(ref) == sorted(got)
+    rows.append((f"fig9.{arch}.token_identity", 1.0 if identical else 0.0,
+                 "identical" if identical else "MISMATCH"))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run())

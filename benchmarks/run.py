@@ -1,0 +1,51 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. Run:
+    PYTHONPATH=src python -m benchmarks.run [--only fig7,...]
+"""
+from __future__ import annotations
+
+import os
+os.environ.setdefault("TF_CPP_MIN_LOG_LEVEL", "3")  # silence XLA AOT-loader
+                                                    # machine-feature warnings
+import argparse
+import sys
+import time
+import traceback
+
+MODULES = [
+    "fig7_coldstart", "fig8_breakdown", "fig9_tpot", "fig10_pergraph",
+    "fig11_templates", "tab1_storage", "tab2_contention",
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of modules")
+    args = ap.parse_args()
+    wanted = args.only.split(",") if args.only else MODULES
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in MODULES:
+        if not any(name.startswith(w) or w in name for w in wanted):
+            continue
+        mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+        t0 = time.perf_counter()
+        try:
+            rows = mod.run()
+        except Exception:
+            traceback.print_exc()
+            print(f"{name}.FAILED,0,error")
+            failures += 1
+            continue
+        for r_name, us, derived in rows:
+            print(f"{r_name},{us:.1f},{derived}")
+        print(f"{name}.elapsed,{(time.perf_counter() - t0) * 1e6:.1f},")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

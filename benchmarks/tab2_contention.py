@@ -1,0 +1,67 @@
+"""[Appendix A] Parallel graph-construction contention.
+
+Paper: building CUDA graphs from multiple threads barely improves wall time;
+per-driver-call latency rises with thread count. JAX analogue: concurrent
+XLA compiles from Python threads contend (GIL + compiler locks). Same
+experiment: N threads x M compiles, report wall time and per-compile latency.
+"""
+from __future__ import annotations
+
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import fresh_jax_caches
+
+
+def _distinct_fns(n):
+    """n structurally distinct programs (defeat the jit cache)."""
+    fns = []
+    for i in range(n):
+        k = i + 2
+
+        def f(x, k=k):
+            for _ in range(3):
+                x = jnp.tanh(x @ x.T) * k
+            return x.sum()
+        fns.append(f)
+    return fns
+
+
+def run():
+    rows = []
+    n_programs = 16
+    x = jnp.ones((64, 64), jnp.float32)
+    for n_threads in (1, 2, 4, 8):
+        fresh_jax_caches()
+        fns = _distinct_fns(n_programs)
+        lat = []
+        lock = threading.Lock()
+
+        def worker(chunk):
+            for f in chunk:
+                t0 = time.perf_counter()
+                jax.jit(f).lower(x).compile()
+                dt = time.perf_counter() - t0
+                with lock:
+                    lat.append(dt)
+
+        chunks = [fns[i::n_threads] for i in range(n_threads)]
+        t0 = time.perf_counter()
+        ts = [threading.Thread(target=worker, args=(c,)) for c in chunks]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+        wall = time.perf_counter() - t0
+        per_call = sum(lat) / len(lat)
+        rows.append((f"tab2.threads{n_threads}.wall", wall * 1e6,
+                     f"per_compile={per_call * 1e3:.1f}ms"))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run())

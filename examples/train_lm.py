@@ -1,0 +1,84 @@
+"""Train a small LM end-to-end with the production training stack.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300]
+
+Uses the real substrate: Model zoo config (smollm family, width reduced for
+CPU), AdamW with fp32 masters, synthetic-but-learnable data pipeline,
+async checkpointing every 100 steps, straggler watchdog, and a kill+resume
+demonstration (restart is bitwise-identical thanks to counter-based data).
+"""
+import argparse
+import dataclasses
+import tempfile
+
+import jax
+
+from repro.configs.registry import get_arch
+from repro.launch.mesh import ShardCtx
+from repro.models.model import Model
+from repro.training.checkpoint import Checkpointer
+from repro.training.data import DataConfig, SyntheticLMData
+from repro.training.elastic import StragglerWatchdog
+from repro.training.optimizer import OptConfig
+from repro.training.train_loop import run_train_loop
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=64)
+    args = ap.parse_args()
+
+    # a ~15M-param member of the smollm family (CPU-trainable)
+    cfg = dataclasses.replace(
+        get_arch("smollm-360m"), name="smollm-cpu", num_layers=4,
+        d_model=256, num_heads=4, num_kv_heads=2, head_dim=64, d_ff=768,
+        vocab_size=2048, param_dtype="float32", remat=False)
+    model = Model(cfg, ShardCtx(mesh=None))
+    n_params = sum(l.size for l in jax.tree.leaves(model.param_shapes()))
+    print(f"model: {cfg.name}, {n_params / 1e6:.1f}M params")
+
+    opt = OptConfig(lr=3e-3, weight_decay=0.01)
+    data = SyntheticLMData(DataConfig(cfg.vocab_size, args.batch, args.seq,
+                                      seed=11))
+    ckdir = tempfile.mkdtemp(prefix="train_lm_ckpt_")
+    ck = Checkpointer(ckdir, keep=2)
+    wd = StragglerWatchdog(on_straggler=lambda i, dt, med: print(
+        f"  !! step {i} straggler: {dt * 1e3:.0f}ms vs median {med * 1e3:.0f}ms"))
+
+    class CkptShim:
+        def save(self, state, step):
+            ck.save(state, step, extra={"data": data.state_dict()},
+                    async_=True)
+            print(f"  -> async checkpoint @ step {step}")
+
+    state, hist = run_train_loop(
+        model, opt, iter(data), num_steps=args.steps,
+        rng=jax.random.PRNGKey(0), log_every=25,
+        checkpointer=CkptShim(), checkpoint_every=100, watchdog=wd)
+    ck.wait()
+
+    first, last = hist[0][1], hist[-1][1]
+    print(f"\nloss: {first:.3f} -> {last:.3f} "
+          f"({'DECREASED' if last < first else 'DID NOT DECREASE'})")
+
+    # kill + resume: restore the latest checkpoint and continue
+    step0 = ck.latest_step()
+    print(f"\nsimulating preemption; resuming from checkpoint @ {step0}")
+    from repro.training.train_loop import train_state_specs
+    restored, extra = ck.restore(like=train_state_specs(model, opt))
+    data2 = SyntheticLMData(DataConfig(cfg.vocab_size, args.batch, args.seq,
+                                       seed=11))
+    data2.load_state_dict(extra["data"])
+    state2, hist2 = run_train_loop(
+        model, opt, iter(data2), num_steps=args.steps, state=restored,
+        log_every=25, watchdog=None)
+    print(f"resumed loss @ {args.steps}: {hist2[-1][1]:.3f} "
+          f"(direct run: {last:.3f})")
+    assert abs(hist2[-1][1] - last) < 1e-3, "resume diverged"
+    print("restart consistency: OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,538 @@
+"""Roofline analysis from compiled SPMD artifacts.
+
+The assignment's three terms (TPU v5e):
+    compute    = HLO_FLOPs / (chips * 197e12 bf16 FLOP/s)
+    memory     = HLO_bytes / (chips * 819e9 B/s HBM)
+    collective = wire_bytes / (chips * 50e9 B/s link)
+
+``compiled.cost_analysis()`` undercounts programs with ``lax.scan``: XLA's
+cost analysis counts a while-loop body ONCE, not x trip-count (verified
+empirically; see EXPERIMENTS.md §Dry-run). Since every model here scans over
+layers, we implement a trip-count-aware analyzer over the *optimized HLO
+text*: it builds the computation call graph (fusion / call / while edges),
+extracts while trip counts from their condition computations, and multiplies
+per-op costs by the product of enclosing loop trips.
+
+  * FLOPs: every ``dot`` (wherever it lives, incl. inside fusions),
+    2 * prod(out_shape) * prod(contracting dims).
+  * HBM bytes: operand+result sizes of ops at fusion *boundaries* (fusion
+    internals stay in registers/VMEM), a standard materialization-traffic
+    model.
+  * Wire bytes: ring-model cost of every collective, per device:
+      all-reduce 2*S*(g-1)/g, all-gather/all-to-all S*(g-1)/g,
+      reduce-scatter S_in*(g-1)/g, collective-permute S.
+
+All shapes in the partitioned module are per-device, so every figure below is
+per-device; terms use the per-chip numerator over the per-chip denominator.
+"""
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+# TPU v5e hardware constants (assignment-specified)
+PEAK_FLOPS = 197e12   # bf16 FLOP/s per chip
+HBM_BW = 819e9        # B/s per chip
+LINK_BW = 50e9        # B/s per ICI link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*?)\s*([\w\-]+)\((.*)$")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s+\(.*\)\s*->.*\{\s*$")
+
+
+def _parse_shape(s: str) -> Tuple[str, Tuple[int, ...]]:
+    m = _SHAPE_RE.match(s.strip())
+    if not m:
+        return "f32", ()
+    dt, dims = m.group(1), m.group(2)
+    shape = tuple(int(d) for d in dims.split(",") if d) if dims else ()
+    return dt, shape
+
+
+def _shape_bytes(s: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(s):
+        dt = m.group(1)
+        if dt not in _DTYPE_BYTES:
+            continue
+        dims = [int(d) for d in m.group(2).split(",") if d]
+        total += _DTYPE_BYTES[dt] * (math.prod(dims) if dims else 1)
+    return total
+
+
+@dataclass
+class _Op:
+    name: str
+    result_type: str
+    opcode: str
+    rest: str  # operand list + attributes
+
+
+class HloCostModel:
+    def __init__(self, hlo_text: str):
+        self.comps: Dict[str, List[_Op]] = {}
+        self.entry: Optional[str] = None
+        self._parse(hlo_text)
+        self.defs: Dict[str, Dict[str, str]] = {
+            cname: {op.name: op.result_type for op in ops}
+            for cname, ops in self.comps.items()
+        }
+        self.trips: Dict[str, int] = {}  # body computation -> trip count
+        self._find_trips()
+        self.mult: Dict[str, float] = {}
+        self._propagate_multipliers()
+
+    # -- parsing ---------------------------------------------------------
+    def _parse(self, text: str):
+        cur: Optional[str] = None
+        for line in text.splitlines():
+            mc = _COMP_RE.match(line)
+            if mc:
+                cur = mc.group(1)
+                self.comps[cur] = []
+                if line.startswith("ENTRY"):
+                    self.entry = cur
+                continue
+            if cur is None:
+                continue
+            if line.strip() == "}":
+                cur = None
+                continue
+            mo = _OP_RE.match(line)
+            if mo:
+                name, rtype, opcode, rest = mo.groups()
+                self.comps[cur].append(_Op(name, rtype.strip(), opcode, rest))
+        if self.entry is None and self.comps:  # fall back: last computation
+            self.entry = list(self.comps)[-1]
+
+    def _attr(self, rest: str, key: str) -> Optional[str]:
+        m = re.search(key + r"=%?([\w\.\-]+)", rest)
+        return m.group(1) if m else None
+
+    def _find_trips(self):
+        for cname, ops in self.comps.items():
+            for op in ops:
+                if op.opcode != "while":
+                    continue
+                cond = self._attr(op.rest, "condition")
+                body = self._attr(op.rest, "body")
+                trip = self._trip_from_cond(cond) if cond else None
+                if body:
+                    self.trips[body] = trip if trip is not None else 1
+                if cond:
+                    self.trips[cond] = self.trips.get(body, 1)
+
+    def _trip_from_cond(self, cond_name: str) -> Optional[int]:
+        ops = self.comps.get(cond_name)
+        if not ops:
+            return None
+        consts = {}
+        for op in ops:
+            if op.opcode == "constant":
+                m = re.match(r"\s*([\-\d]+)", op.rest)
+                if m:
+                    consts[op.name] = int(m.group(1))
+        for op in ops:
+            if op.opcode == "compare" and "direction=LT" in op.rest:
+                for operand in re.findall(r"%([\w\.\-]+)", op.rest):
+                    if operand in consts:
+                        return consts[operand]
+        # nested tuple-compare conds (rare): max constant as upper bound
+        return max(consts.values()) if consts else None
+
+    def _callees(self, op: _Op) -> List[Tuple[str, float, str]]:
+        """(callee, multiplier, kind) edges of one op."""
+        out = []
+        if op.opcode == "while":
+            body = self._attr(op.rest, "body")
+            cond = self._attr(op.rest, "condition")
+            trip = self.trips.get(body, 1) or 1
+            if body:
+                out.append((body, float(trip), "while"))
+            if cond:
+                out.append((cond, float(trip), "while"))
+        elif op.opcode == "fusion":
+            c = self._attr(op.rest, "calls")
+            if c:
+                out.append((c, 1.0, "fusion"))
+        elif op.opcode in ("call", "custom-call", "async-start"):
+            c = self._attr(op.rest, "to_apply") or self._attr(op.rest, "called_computations")
+            if c:
+                out.append((c, 1.0, "call"))
+        elif op.opcode == "conditional":
+            for c in re.findall(r"%([\w\.\-]+)", op.rest.split("branch_computations=")[-1]) \
+                    if "branch_computations" in op.rest else []:
+                if c in self.comps:
+                    out.append((c, 1.0, "call"))
+            tc = self._attr(op.rest, "true_computation")
+            fc = self._attr(op.rest, "false_computation")
+            for c in (tc, fc):
+                if c:
+                    out.append((c, 1.0, "call"))
+        elif op.opcode in ("reduce", "reduce-window", "scatter", "sort",
+                           "all-reduce", "reduce-scatter", "map", "select-and-scatter"):
+            pass  # to_apply bodies are tiny elementwise lambdas
+        return out
+
+    def _propagate_multipliers(self):
+        from collections import deque
+        self.mult = {self.entry: 1.0}
+        # fusion-context flag: bytes only counted outside fusion computations
+        self.in_fusion: Dict[str, bool] = {self.entry: False}
+        q = deque([self.entry])
+        seen_edges = set()
+        while q:
+            cname = q.popleft()
+            for op in self.comps.get(cname, []):
+                for callee, m, kind in self._callees(op):
+                    if callee not in self.comps:
+                        continue
+                    new_mult = self.mult[cname] * m
+                    new_fus = self.in_fusion.get(cname, False) or kind == "fusion"
+                    key = (cname, callee)
+                    if key in seen_edges and self.mult.get(callee, 0) >= new_mult:
+                        continue
+                    seen_edges.add(key)
+                    self.mult[callee] = max(self.mult.get(callee, 0.0), new_mult)
+                    self.in_fusion[callee] = (self.in_fusion.get(callee, True)
+                                              and new_fus)
+                    q.append(callee)
+
+    # -- costs -----------------------------------------------------------
+    # f32 dots run ~4x slower than bf16 on the v5e MXU (documented estimate);
+    # counting them at 4x bf16-equivalent flops makes the compute term
+    # reflect the real cost of f32-materialized attention math.
+    F32_DOT_PENALTY = 4.0
+
+    def dot_flops(self) -> float:
+        total = 0.0
+        for cname, ops in self.comps.items():
+            mult = self.mult.get(cname, 0.0)
+            if mult == 0.0:
+                continue
+            for op in ops:
+                if op.opcode not in ("dot", "convolution"):
+                    continue
+                dt, out_shape = _parse_shape(op.result_type)
+                out_elems = math.prod(out_shape) if out_shape else 1
+                k = self._contraction_size(cname, op)
+                w = 1.0
+                if dt == "f32" and self._dot_operand_dtype(cname, op) == "f32":
+                    w = self.F32_DOT_PENALTY
+                total += 2.0 * out_elems * k * mult * w
+        return total
+
+    def _dot_operand_dtype(self, cname: str, op: _Op) -> str:
+        """Ultimate source dtype of the dot's lhs, seen through convert
+        chains (the CPU backend converts bf16 operands to f32 because it
+        lacks native bf16 dots; the TPU MXU would consume bf16 directly, so
+        a dot is only 'really' f32 when its source data is f32)."""
+        operands = self._operand_names(op)
+        if not operands:
+            return "f32"
+        name = self._see_through_converts(cname, operands[0])
+        t = self.defs.get(cname, {}).get(name)
+        return _parse_shape(t)[0] if t else "f32"
+
+    def _contraction_size(self, cname: str, op: _Op) -> int:
+        if op.opcode == "convolution":
+            # rough: kernel spatial * in-features
+            m = re.search(r"dim_labels=([\w\?]+)_([\w\?]+)->", op.rest)
+            return 1  # convs are negligible in these models
+        mdims = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.rest)
+        if not mdims:
+            return 1
+        dims = [int(d) for d in mdims.group(1).split(",") if d]
+        lhs_name = None
+        m = re.match(r"([^)]*)\)", op.rest)
+        operands = re.findall(r"%([\w\.\-]+)", m.group(1)) if m else []
+        if operands:
+            lhs_name = operands[0]
+        lhs_type = self.defs.get(cname, {}).get(lhs_name)
+        if lhs_type is None:
+            return 1
+        _, lhs_shape = _parse_shape(lhs_type)
+        try:
+            return math.prod(lhs_shape[d] for d in dims)
+        except Exception:
+            return 1
+
+    _BYTES_SKIP = {
+        "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+        "bitcast-convert", "after-all", "partition-id", "replica-id", "iota",
+        # while carries are buffer-aliased (resident), not re-streamed; the
+        # body's real traffic is counted inside the body computation
+        "while", "conditional", "call", "optimization-barrier",
+    }
+
+    def _operand_names(self, op: _Op) -> List[str]:
+        m = re.match(r"([^)]*)\)", op.rest)
+        return re.findall(r"%([\w\.\-]+)", m.group(1)) if m else []
+
+    _SLICE_OPS = ("dynamic-slice", "gather", "slice")
+
+    def _fusion_param_bytes(self, callee: str, idx: int, full_bytes: int) -> int:
+        """Bytes actually read from a fusion operand: if every use of the
+        corresponding parameter inside the fused computation is a (dynamic-)
+        slice/gather, count only the slice results (the fused loop reads the
+        slice, not the whole stacked array)."""
+        ops = self.comps.get(callee, [])
+        pname = None
+        for op in ops:
+            if op.opcode == "parameter" and re.match(rf"\s*{idx}\b", op.rest):
+                pname = op.name
+                break
+        if pname is None:
+            return full_bytes
+        uses = [op for op in ops if pname in self._operand_names(op)]
+        if not uses:
+            return 0
+        if all(u.opcode in self._SLICE_OPS for u in uses):
+            return sum(_shape_bytes(u.result_type) for u in uses)
+        return full_bytes
+
+    _TPU_FREE = {"convert", "bitcast", "copy", "parameter", "broadcast"}
+
+    def _fusion_convert_only(self, callee: Optional[str]) -> bool:
+        """A fusion whose body is only converts/copies would fuse into its
+        dot consumer/producer on the TPU backend (the CPU backend
+        materializes bf16<->f32 converts because it lacks native bf16 dots).
+        Counted as free under the TPU-target cost model."""
+        if not callee:
+            return False
+        ops = self.comps.get(callee, [])
+        return bool(ops) and all(o.opcode in self._TPU_FREE for o in ops)
+
+    def _see_through_converts(self, callee: str, name: str) -> str:
+        """Follow single-operand convert/copy/bitcast chains backwards."""
+        by_name = {o.name: o for o in self.comps.get(callee, [])}
+        while name in by_name and by_name[name].opcode in ("convert", "copy",
+                                                           "bitcast"):
+            ops = self._operand_names(by_name[name])
+            if len(ops) != 1:
+                break
+            name = ops[0]
+        return name
+
+    def _fusion_dus_param(self, callee: Optional[str]):
+        """If the fused computation's root is (possibly convert-wrapped)
+        dynamic-update-slice writing into one of the fusion's parameters,
+        return (param_index, update bytes at the parameter dtype); else
+        None. Models XLA's in-place aliased cache updates."""
+        if not callee:
+            return None
+        ops = self.comps.get(callee, [])
+        if not ops:
+            return None
+        by_name = {o.name: o for o in ops}
+        root = ops[-1]
+        rname = self._see_through_converts(callee, root.name)
+        root = by_name.get(rname, root)
+        if root.opcode != "dynamic-update-slice":
+            return None
+        opnds = self._operand_names(root)
+        if len(opnds) < 2:
+            return None
+        dest = self._see_through_converts(callee, opnds[0])
+        upd = opnds[1]
+        upd_src = self._see_through_converts(callee, upd)
+        pidx, pdtype, uidx = None, None, None
+        for o in ops:
+            if o.opcode != "parameter":
+                continue
+            m = re.match(r"\s*(\d+)", o.rest)
+            idx = int(m.group(1)) if m else None
+            if o.name == dest:
+                pidx = idx
+                pdtype = _parse_shape(o.result_type)[0]
+            if o.name == upd_src:
+                uidx = idx  # update fed straight from an operand: its read
+                # is already covered by the 2x update-slice accounting
+        if pidx is None:
+            return None
+        upd_t = self.defs.get(callee, {}).get(upd)
+        if not upd_t:
+            return (pidx, 0, uidx)
+        _, upd_shape = _parse_shape(upd_t)
+        # count the update at the destination param's dtype (the in-place
+        # buffer's real width; converts around it are dot-feed artifacts)
+        b = _DTYPE_BYTES.get(pdtype, 4) * math.prod(upd_shape or (1,))
+        return (pidx, b, uidx)
+
+    def hbm_bytes(self) -> float:
+        """Materialization traffic: operand+result bytes of ops at fusion
+        boundaries, x loop multipliers. Slice-aware: dynamic-slice / gather
+        (including when fused) count only the transferred slice; in-place
+        dynamic-update-slice / scatter count 2x the update size."""
+        total = 0.0
+        for cname, ops in self.comps.items():
+            mult = self.mult.get(cname, 0.0)
+            if mult == 0.0 or self.in_fusion.get(cname, False):
+                continue
+            for op in ops:
+                if op.opcode in self._BYTES_SKIP:
+                    continue
+                out_b = _shape_bytes(op.result_type)
+                operands = self._operand_names(op)
+                types = [self.defs.get(cname, {}).get(o) for o in operands]
+                sizes = [(_shape_bytes(t) if t else 0) for t in types]
+                if op.opcode in ("dynamic-slice", "gather", "slice"):
+                    total += 2 * out_b * mult  # read slice + write result
+                    continue
+                if op.opcode == "dynamic-update-slice":
+                    upd = sizes[1] if len(sizes) > 1 else out_b
+                    total += 2 * upd * mult  # in-place: read + write the slice
+                    continue
+                if op.opcode == "scatter":
+                    upd = sizes[-1] if sizes else out_b
+                    total += (3 * upd) * mult  # read idx+upd, rmw dest region
+                    continue
+                if op.opcode == "fusion":
+                    callee = self._attr(op.rest, "calls")
+                    if self._fusion_convert_only(callee):
+                        continue  # TPU: fuses into the adjacent dot
+                    # in-place pattern: fusion whose root is a dynamic-update-
+                    # slice into a pass-through parameter (scan cache updates).
+                    # XLA aliases the destination; only the slice moves.
+                    dus_dest = self._fusion_dus_param(callee)
+                    if dus_dest is not None:
+                        dest_idx, upd_bytes, upd_idx = dus_dest
+                        in_b = 0
+                        for i, s in enumerate(sizes):
+                            if i in (dest_idx, upd_idx):
+                                continue  # aliased dest / counted update
+                            in_b += self._fusion_param_bytes(callee, i, s)
+                        total += (2 * upd_bytes + in_b) * mult
+                        continue
+                    in_b = 0
+                    for i, s in enumerate(sizes):
+                        if callee:
+                            in_b += self._fusion_param_bytes(callee, i, s)
+                        else:
+                            in_b += s
+                    total += (out_b + in_b) * mult
+                    continue
+                total += (out_b + sum(sizes)) * mult
+        return total
+
+    _COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                    "collective-permute")
+
+    def _group_size(self, rest: str, default: int) -> int:
+        m = re.search(r"replica_groups=\[(\d+),(\d+)\]", rest)
+        if m:
+            return int(m.group(2))
+        m = re.search(r"replica_groups=\{\{([\d,]+)\}", rest)
+        if m:
+            return len(m.group(1).split(","))
+        return default
+
+    def collective_wire_bytes(self, n_devices: int) -> Tuple[float, Dict[str, float]]:
+        """Ring-model wire bytes per device, by collective kind."""
+        by_kind: Dict[str, float] = {}
+        for cname, ops in self.comps.items():
+            mult = self.mult.get(cname, 0.0)
+            if mult == 0.0:
+                continue
+            for op in ops:
+                kind = op.opcode.replace("-start", "")
+                if kind not in self._COLLECTIVES:
+                    continue
+                out_b = _shape_bytes(op.result_type)
+                g = self._group_size(op.rest, n_devices)
+                if g <= 1:
+                    continue
+                if kind == "all-reduce":
+                    wire = 2.0 * out_b * (g - 1) / g
+                elif kind == "all-gather":
+                    wire = out_b * (g - 1) / g
+                elif kind == "reduce-scatter":
+                    wire = out_b * (g - 1)  # input = out * g
+                elif kind == "all-to-all":
+                    wire = out_b * (g - 1) / g
+                else:  # collective-permute
+                    wire = out_b
+                by_kind[kind] = by_kind.get(kind, 0.0) + wire * mult
+        return sum(by_kind.values()), by_kind
+
+
+# ---------------------------------------------------------------------------
+# analytic MODEL_FLOPS (per assignment: 6*N*D train, fwd variants for serving)
+# ---------------------------------------------------------------------------
+
+def model_flops(cfg, cell) -> float:
+    """Useful model FLOPs per step, whole job (not per device)."""
+    N = cfg.param_count(active_only=True) - cfg.padded_vocab * cfg.d_model * (
+        1 if cfg.tie_embeddings else 2)  # matmul params (embeddings excluded)
+    B, S = cell.global_batch, cell.seq_len
+    H, Hkv, Dh, L = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim, cfg.num_layers
+    lm_head = 2 * cfg.d_model * cfg.padded_vocab  # logits matmul per token
+
+    if cell.kind == "train":
+        tokens = B * S
+        attn = 0.0
+        if cfg.num_heads:
+            n_attn = (cfg.num_layers // cfg.shared_attn_period
+                      if cfg.family == "hybrid" else L)
+            # qk+pv = 4*H*Dh flops per (token, context) pair; causal avg
+            # context S/2; x3 for fwd+bwd
+            attn = 3 * n_attn * 4 * H * Dh * (S / 2) * tokens
+        return 6.0 * N * tokens + 3 * lm_head * tokens + attn
+    if cell.kind == "prefill":
+        tokens = B * S
+        attn = 0.0
+        if cfg.num_heads:
+            n_attn = (cfg.num_layers // cfg.shared_attn_period
+                      if cfg.family == "hybrid" else L)
+            attn = n_attn * 4 * H * Dh * (S / 2) * tokens
+        return 2.0 * N * tokens + lm_head * tokens + attn
+    # decode: one token per sequence, attention over full cache
+    attn = 0.0
+    if cfg.num_heads:
+        n_attn = (cfg.num_layers // cfg.shared_attn_period
+                  if cfg.family == "hybrid" else L)
+        attn = n_attn * 4 * H * Dh * S * B
+    return 2.0 * N * B + lm_head * B + attn
+
+
+def roofline_from_compiled(compiled, cfg, cell, mesh) -> dict:
+    n_dev = math.prod(mesh.devices.shape)
+    text = compiled.as_text()
+    cm = HloCostModel(text)
+    flops_dev = cm.dot_flops()
+    bytes_dev = cm.hbm_bytes()
+    wire_dev, by_kind = cm.collective_wire_bytes(n_dev)
+
+    compute_s = flops_dev / PEAK_FLOPS
+    memory_s = bytes_dev / HBM_BW
+    collective_s = wire_dev / LINK_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, cell)
+    mf_dev = mf / n_dev
+    bound = max(terms.values())
+    return {
+        "hlo_flops_per_dev": flops_dev,
+        "hbm_bytes_per_dev": bytes_dev,
+        "wire_bytes_per_dev": wire_dev,
+        "wire_bytes_by_kind": by_kind,
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "dominant": dominant,
+        "model_flops_total": mf,
+        "model_flops_per_dev": mf_dev,
+        "useful_flops_ratio": (mf_dev / flops_dev) if flops_dev else 0.0,
+        # fraction of roofline: useful work per chip over the bound time
+        "roofline_fraction": (mf_dev / PEAK_FLOPS) / bound if bound else 0.0,
+        "step_time_lower_bound_s": bound,
+    }

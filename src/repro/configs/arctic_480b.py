@@ -1,0 +1,11 @@
+"""moe: 128 experts top-2 + dense residual [hf:Snowflake/snowflake-arctic-base; hf]"""
+from repro.configs.base import ArchConfig
+
+ARCTIC_480B = ArchConfig(
+    name="arctic-480b", family="moe",
+    num_layers=35, d_model=7168, num_heads=56, num_kv_heads=8,
+    d_ff=4864, vocab_size=32000,
+    num_experts=128, top_k=2, moe_dense_residual=True,
+    zero_shard_params=True, opt_state_dtype="bfloat16",
+    source="[hf:Snowflake/snowflake-arctic-base; hf]",
+)

@@ -1,0 +1,210 @@
+"""Architecture configuration system.
+
+Every assigned architecture is a frozen ``ArchConfig``. Configs are exact
+public-literature numbers (see per-file citations); ``reduced()`` derives a
+CPU-runnable smoke-test variant of the same family.
+
+Input shapes are the assignment's four cells:
+  train_4k     seq_len=4096   global_batch=256   (train_step)
+  prefill_32k  seq_len=32768  global_batch=32    (prefill forward)
+  decode_32k   seq_len=32768  global_batch=128   (serve_step, 1 new token)
+  long_500k    seq_len=524288 global_batch=1     (serve_step, 1 new token)
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+@dataclass(frozen=True)
+class ShapeCell:
+    """One (input shape) cell of the assignment grid."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPE_CELLS = {
+    "train_4k": ShapeCell("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524288, 1, "decode"),
+}
+
+
+@dataclass(frozen=True)
+class ArchConfig:
+    """A model architecture. One instance per assigned architecture.
+
+    ``family`` selects the block structure:
+      dense    — GQA decoder-only transformer (SwiGLU MLP)
+      moe      — GQA decoder with top-k routed experts (+ optional dense residual)
+      ssm      — Mamba-1 stack, attention-free
+      hybrid   — Mamba-2 backbone with a shared attention block every
+                 ``shared_attn_period`` layers (Zamba2 pattern)
+      encoder  — bidirectional encoder (GELU MLP), no decode step
+      vlm      — dense decoder with stubbed vision-embedding frontend
+    """
+
+    name: str
+    family: str
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0  # 0 -> d_model // num_heads
+    # MoE
+    num_experts: int = 0
+    top_k: int = 0
+    moe_dense_residual: bool = False  # arctic: dense MLP in parallel with experts
+    capacity_factor: float = 1.25
+    # SSM
+    ssm_state: int = 0
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    ssm_version: int = 0  # 1 = mamba1, 2 = mamba2 (SSD)
+    ssm_head_dim: int = 64  # mamba2 head dim
+    shared_attn_period: int = 0  # hybrid: apply shared attn block every N layers
+    # frontend stubs ([audio]/[vlm]: backbone only, embeddings precomputed)
+    frontend: str = "none"  # "none" | "vision_stub" | "audio_stub"
+    frontend_seq: int = 0  # number of stub embedding positions in prefill
+    # misc
+    causal: bool = True
+    tie_embeddings: bool = False
+    rope_theta: float = 500000.0
+    norm_eps: float = 1e-5
+    param_dtype: str = "bfloat16"
+    # training policy
+    remat: bool = True
+    zero_shard_params: bool = False  # FSDP-style param sharding over data axis
+    opt_state_dtype: str = "float32"
+    source: str = ""  # provenance [source; verified-tier]
+
+    def __post_init__(self):
+        if self.head_dim == 0:
+            object.__setattr__(self, "head_dim", self.d_model // max(self.num_heads, 1))
+
+    # ---- derived ----
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab padded to a multiple of 256 so it shards over the model axis
+        (Megatron-style vocab padding; logits over pad ids are masked)."""
+        return _round_up(self.vocab_size, 256)
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def dt_rank(self) -> int:
+        return _round_up(self.d_model // 16, 8)
+
+    @property
+    def ssm_nheads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def is_subquadratic(self) -> bool:
+        """Eligible for long_500k (SSM / hybrid; decode-time cost O(ctx) max)."""
+        return self.family in ("ssm", "hybrid")
+
+    @property
+    def has_decode(self) -> bool:
+        return self.family != "encoder"
+
+    def supports_shape(self, shape_name: str) -> bool:
+        cell = SHAPE_CELLS[shape_name]
+        if cell.kind == "decode" and not self.has_decode:
+            return False  # encoder-only: no decode step
+        if shape_name == "long_500k" and not self.is_subquadratic:
+            return False  # needs sub-quadratic attention
+        if cell.kind == "prefill" and self.family == "encoder":
+            return True  # encode forward plays the prefill role
+        return True
+
+    def skip_reason(self, shape_name: str) -> Optional[str]:
+        if self.supports_shape(shape_name):
+            return None
+        if not self.has_decode:
+            return "encoder-only arch has no decode step"
+        return "long_500k requires sub-quadratic attention (pure full-attention arch)"
+
+    # ---- approximate parameter count (for roofline MODEL_FLOPS = 6ND) ----
+    def param_count(self, active_only: bool = False) -> int:
+        D, L, V = self.d_model, self.num_layers, self.padded_vocab
+        H, Hkv, Dh = self.num_heads, self.num_kv_heads, self.head_dim
+        emb = V * D * (1 if self.tie_embeddings else 2)
+        per_layer = 0
+        if self.family in ("dense", "vlm", "moe"):
+            attn = D * (H * Dh) + 2 * D * (Hkv * Dh) + (H * Dh) * D
+            if self.family == "moe":
+                n_e = self.top_k if active_only else self.num_experts
+                mlp = n_e * 3 * D * self.d_ff
+                if self.moe_dense_residual:
+                    mlp += 3 * D * self.d_ff
+            else:
+                mlp = 3 * D * self.d_ff
+            per_layer = attn + mlp + 2 * D
+        elif self.family == "encoder":
+            attn = D * (H * Dh) + 2 * D * (Hkv * Dh) + (H * Dh) * D
+            per_layer = attn + 2 * D * self.d_ff + 2 * D
+        elif self.family == "ssm":
+            di, st, dr = self.d_inner, self.ssm_state, self.dt_rank
+            per_layer = (D * 2 * di + self.ssm_conv * di + di * (dr + 2 * st)
+                         + dr * di + di * st + 2 * di + di * D + D)
+        elif self.family == "hybrid":
+            di, st = self.d_inner, self.ssm_state
+            nh = self.ssm_nheads
+            m2 = (D * (2 * di + 2 * st + nh) + self.ssm_conv * (di + 2 * st)
+                  + 2 * nh + di + di * D + D)
+            per_layer = m2
+        total = emb + L * per_layer
+        if self.family == "hybrid" and self.shared_attn_period:
+            attn = D * (H * Dh) + 2 * D * (Hkv * Dh) + (H * Dh) * D
+            total += attn + 3 * D * self.d_ff + 2 * D  # one shared block (reused)
+        return total
+
+    # ---- reduced variant for smoke tests ----
+    def reduced(self) -> "ArchConfig":
+        """Small same-family variant: few layers, narrow width, tiny vocab."""
+        nh = max(2, min(4, self.num_heads))
+        nkv = max(1, min(self.num_kv_heads, nh))
+        # keep the GQA ratio flavor: kv <= q, q % kv == 0
+        while nh % nkv:
+            nkv -= 1
+        changes = dict(
+            num_layers=max(2, min(4, self.num_layers)),
+            d_model=64,
+            num_heads=nh,
+            num_kv_heads=nkv,
+            head_dim=16,
+            d_ff=0 if self.d_ff == 0 else 128,
+            vocab_size=256,
+            param_dtype="float32",
+            remat=False,
+            zero_shard_params=False,
+        )
+        if self.num_experts:
+            changes["num_experts"] = 4
+            changes["top_k"] = min(2, self.top_k)
+        if self.ssm_state:
+            changes["ssm_state"] = 8
+            changes["ssm_head_dim"] = 16
+        if self.shared_attn_period:
+            changes["shared_attn_period"] = 2
+        if self.frontend_seq:
+            changes["frontend_seq"] = 8
+        return dataclasses.replace(self, name=self.name + "-reduced", **changes)

@@ -1,0 +1,9 @@
+"""dense: qwen1.5-arch [hf:Qwen/CodeQwen1.5-7B; hf]"""
+from repro.configs.base import ArchConfig
+
+CODEQWEN15_7B = ArchConfig(
+    name="codeqwen1.5-7b", family="dense",
+    num_layers=32, d_model=4096, num_heads=32, num_kv_heads=32,
+    d_ff=13440, vocab_size=92416,
+    source="[hf:Qwen/CodeQwen1.5-7B; hf]",
+)

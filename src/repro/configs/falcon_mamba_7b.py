@@ -1,0 +1,9 @@
+"""ssm: mamba1 arch [arXiv:2410.05355; unverified]"""
+from repro.configs.base import ArchConfig
+
+FALCON_MAMBA_7B = ArchConfig(
+    name="falcon-mamba-7b", family="ssm",
+    num_layers=64, d_model=4096, num_heads=0, num_kv_heads=0, head_dim=1,
+    d_ff=0, vocab_size=65024, ssm_state=16, ssm_version=1,
+    source="[arXiv:2410.05355; unverified]",
+)

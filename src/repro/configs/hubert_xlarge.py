@@ -1,0 +1,10 @@
+"""audio: encoder-only, w2v2 arch [arXiv:2106.07447; unverified]"""
+from repro.configs.base import ArchConfig
+
+HUBERT_XLARGE = ArchConfig(
+    name="hubert-xlarge", family="encoder",
+    num_layers=48, d_model=1280, num_heads=16, num_kv_heads=16,
+    d_ff=5120, vocab_size=504, causal=False,
+    frontend="audio_stub", frontend_seq=0,  # all positions are frame embeddings
+    source="[arXiv:2106.07447; unverified]",
+)

@@ -1,0 +1,10 @@
+"""vlm: InternViT + InternLM2 backbone [arXiv:2404.16821; hf]"""
+from repro.configs.base import ArchConfig
+
+INTERNVL2_2B = ArchConfig(
+    name="internvl2-2b", family="vlm",
+    num_layers=24, d_model=2048, num_heads=16, num_kv_heads=8,
+    d_ff=8192, vocab_size=92553,
+    frontend="vision_stub", frontend_seq=256,  # 256 patch embeddings per image
+    source="[arXiv:2404.16821; hf]",
+)

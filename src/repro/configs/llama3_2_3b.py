@@ -1,0 +1,9 @@
+"""dense: small llama3 [hf:meta-llama/Llama-3.2-1B; unverified]"""
+from repro.configs.base import ArchConfig
+
+LLAMA32_3B = ArchConfig(
+    name="llama3.2-3b", family="dense",
+    num_layers=28, d_model=3072, num_heads=24, num_kv_heads=8,
+    d_ff=8192, vocab_size=128256, tie_embeddings=True,
+    source="[hf:meta-llama/Llama-3.2-1B; unverified]",
+)

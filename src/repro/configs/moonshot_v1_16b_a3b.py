@@ -1,0 +1,10 @@
+"""moe: kimi/moonlight 64e top-6 [hf:moonshotai/Moonlight-16B-A3B; hf]"""
+from repro.configs.base import ArchConfig
+
+MOONSHOT_16B_A3B = ArchConfig(
+    name="moonshot-v1-16b-a3b", family="moe",
+    num_layers=48, d_model=2048, num_heads=16, num_kv_heads=16,
+    d_ff=1408, vocab_size=163840,
+    num_experts=64, top_k=6,
+    source="[hf:moonshotai/Moonlight-16B-A3B; hf]",
+)

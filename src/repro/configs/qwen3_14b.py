@@ -1,0 +1,9 @@
+"""paper's own eval model [arXiv:2505.09388; hf]"""
+from repro.configs.base import ArchConfig
+
+QWEN3_14B = ArchConfig(
+    name="qwen3-14b", family="dense",
+    num_layers=40, d_model=5120, num_heads=40, num_kv_heads=8,
+    d_ff=17408, vocab_size=151936,
+    source="[arXiv:2505.09388; hf]",
+)

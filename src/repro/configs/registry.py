@@ -1,0 +1,40 @@
+"""Registry of the 10 assigned architectures (+ the paper's own eval model).
+
+One module per architecture (``src/repro/configs/<arch>.py``); exact configs
+from public literature with provenance recorded in ``ArchConfig.source``.
+"""
+from __future__ import annotations
+
+from repro.configs.base import ArchConfig, SHAPE_CELLS, ShapeCell  # noqa: F401
+from repro.configs.zamba2_2p7b import ZAMBA2_2P7B
+from repro.configs.internvl2_2b import INTERNVL2_2B
+from repro.configs.llama3_2_3b import LLAMA32_3B
+from repro.configs.codeqwen1_5_7b import CODEQWEN15_7B
+from repro.configs.yi_9b import YI_9B
+from repro.configs.smollm_360m import SMOLLM_360M
+from repro.configs.moonshot_v1_16b_a3b import MOONSHOT_16B_A3B
+from repro.configs.arctic_480b import ARCTIC_480B
+from repro.configs.falcon_mamba_7b import FALCON_MAMBA_7B
+from repro.configs.hubert_xlarge import HUBERT_XLARGE
+from repro.configs.qwen3_14b import QWEN3_14B
+
+ASSIGNED = [
+    ZAMBA2_2P7B, INTERNVL2_2B, LLAMA32_3B, CODEQWEN15_7B, YI_9B,
+    SMOLLM_360M, MOONSHOT_16B_A3B, ARCTIC_480B, FALCON_MAMBA_7B, HUBERT_XLARGE,
+]
+EXTRA = [QWEN3_14B]
+
+REGISTRY = {c.name: c for c in ASSIGNED + EXTRA}
+
+
+def get_arch(name: str) -> ArchConfig:
+    if name.endswith("-reduced"):
+        return REGISTRY[name[: -len("-reduced")]].reduced()
+    return REGISTRY[name]
+
+
+def all_cells():
+    """All 40 (assigned arch x shape) cells, with skip annotations."""
+    for cfg in ASSIGNED:
+        for shape_name in SHAPE_CELLS:
+            yield cfg, SHAPE_CELLS[shape_name], cfg.skip_reason(shape_name)

@@ -1,0 +1,10 @@
+"""hybrid: Mamba2 + shared attention blocks [arXiv:2411.15242; hf]"""
+from repro.configs.base import ArchConfig
+
+ZAMBA2_2P7B = ArchConfig(
+    name="zamba2-2.7b", family="hybrid",
+    num_layers=54, d_model=2560, num_heads=32, num_kv_heads=32, head_dim=80,
+    d_ff=10240, vocab_size=32000, ssm_state=64, ssm_version=2, ssm_head_dim=64,
+    shared_attn_period=6,
+    source="[arXiv:2411.15242; hf]",
+)

@@ -1,0 +1,29 @@
+"""Foundry core: template-based compiled-graph context materialization.
+
+Paper mechanism -> module map (see DESIGN.md §1 for the full table):
+    archive.py          portable SAVE output (manifest + content-hashed blobs)
+    topology.py         topology keys over jaxprs (templating)
+    templates.py        grouping + template dispatch (pad / exact swap)
+    memory_plan.py      deterministic monotonic arena (VMM interposition)
+    kernel_catalog.py   kernel binary extraction/reload ((hash, name) keyed)
+    collective_stub.py  single-host multi-device capture topology
+    materialize.py      SAVE
+    restore.py          LOAD
+"""
+from repro.core.archive import Archive, content_hash
+from repro.core.kernel_catalog import GLOBAL_CATALOG, KernelCatalog, mangle
+from repro.core.materialize import CaptureSpec, foundry_save
+from repro.core.memory_plan import MemoryPlan, PlanMismatch
+from repro.core.restore import LoadReport, foundry_load, wait_for_background
+from repro.core.templates import (ProgramSet, TopologyGroup,
+                                  default_bucket_ladder, group_buckets,
+                                  pad_batch_arg)
+from repro.core.topology import jaxpr_topology_key, topology_key
+
+__all__ = [
+    "Archive", "content_hash", "KernelCatalog", "GLOBAL_CATALOG", "mangle",
+    "CaptureSpec", "foundry_save", "MemoryPlan", "PlanMismatch",
+    "LoadReport", "foundry_load", "wait_for_background", "ProgramSet",
+    "TopologyGroup", "default_bucket_ladder", "group_buckets",
+    "pad_batch_arg", "jaxpr_topology_key", "topology_key",
+]

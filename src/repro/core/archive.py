@@ -1,0 +1,88 @@
+"""Portable Foundry archive (paper §3: the output of SAVE).
+
+One file, zstd-compressed msgpack container:
+    manifest : json-able dict (graph metadata, topology groups, memory plan,
+               kernel catalog index, mesh/arch identity)
+    blobs    : content-hash-keyed bytes (serialized executables, exported
+               StableHLO, kernel artifacts)
+
+Hashes are verified on load (a corrupted archive must fail loudly, not
+produce a silently-wrong engine). The binary format keeps parse time in the
+milliseconds even for hundreds of graphs (paper §5.3 moved from JSON to a
+binary format for exactly this reason; we benchmark both in
+benchmarks/tab1_storage.py).
+"""
+from __future__ import annotations
+
+import hashlib
+import io
+import json
+import os
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional
+
+import msgpack
+import zstandard
+
+MAGIC = b"FNDRYJX1"
+
+
+def content_hash(data: bytes) -> str:
+    return hashlib.blake2b(data, digest_size=16).hexdigest()
+
+
+@dataclass
+class Archive:
+    manifest: Dict[str, Any] = field(default_factory=dict)
+    blobs: Dict[str, bytes] = field(default_factory=dict)
+
+    def add_blob(self, data: bytes) -> str:
+        h = content_hash(data)
+        self.blobs[h] = data
+        return h
+
+    def get_blob(self, h: str) -> bytes:
+        data = self.blobs[h]
+        if content_hash(data) != h:
+            raise ValueError(f"archive blob {h} failed content verification")
+        return data
+
+    # ------------------------------------------------------------------
+    def to_bytes(self, level: int = 3) -> bytes:
+        payload = msgpack.packb(
+            {"manifest": self.manifest, "blobs": self.blobs},
+            use_bin_type=True)
+        comp = zstandard.ZstdCompressor(level=level).compress(payload)
+        return MAGIC + comp
+
+    @classmethod
+    def from_bytes(cls, raw: bytes) -> "Archive":
+        if not raw.startswith(MAGIC):
+            raise ValueError("not a Foundry archive (bad magic)")
+        payload = zstandard.ZstdDecompressor().decompress(raw[len(MAGIC):])
+        obj = msgpack.unpackb(payload, raw=False, strict_map_key=False)
+        ar = cls(manifest=obj["manifest"], blobs=obj["blobs"])
+        for h in ar.blobs:
+            if content_hash(ar.blobs[h]) != h:
+                raise ValueError(f"archive blob {h} corrupt")
+        return ar
+
+    def save(self, path: str, level: int = 3) -> int:
+        data = self.to_bytes(level)
+        tmp = path + ".tmp"
+        with open(tmp, "wb") as f:
+            f.write(data)
+        os.replace(tmp, path)  # atomic
+        return len(data)
+
+    @classmethod
+    def load(cls, path: str) -> "Archive":
+        with open(path, "rb") as f:
+            return cls.from_bytes(f.read())
+
+    # -- debugging / storage accounting --------------------------------
+    def blob_bytes(self) -> int:
+        return sum(len(b) for b in self.blobs.values())
+
+    def manifest_json(self) -> str:
+        return json.dumps(self.manifest, indent=1, default=str)

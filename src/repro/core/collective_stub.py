@@ -1,0 +1,57 @@
+"""Single-host offline capture topology (paper §4.2.2).
+
+The paper captures multi-GPU graphs on ONE GPU by stubbing NCCL/NVSHMEM with
+dummy communication, then patches rank state at LOAD. On TPU/JAX the stub is
+structural: SPMD programs are traced/lowered/compiled against a *device
+topology*, not live communicators, so a single CPU host with
+``--xla_force_host_platform_device_count=N`` placeholder devices produces the
+byte-identical SPMD program a real N-chip pod would compile — collectives are
+real HLO ops that are simply never executed offline. Rank identity
+(partition-id / channel assignment) is resolved by the runtime at execution,
+which is exactly the "patch only rank-dependent communication state" step.
+
+This module holds the helpers that make that explicit and testable.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+from typing import Optional, Sequence
+
+PLACEHOLDER_FLAG = "--xla_force_host_platform_device_count"
+
+
+def placeholder_env(n_devices: int, extra_env: Optional[dict] = None) -> dict:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"{PLACEHOLDER_FLAG}={n_devices}"
+    env.update(extra_env or {})
+    return env
+
+
+def capture_devices_available(n: int) -> bool:
+    """True if this process was started with >= n placeholder devices."""
+    import jax
+    return len(jax.devices()) >= n
+
+
+def run_in_capture_process(script: str, n_devices: int, *,
+                           timeout: float = 1200.0,
+                           pythonpath: str = "src") -> subprocess.CompletedProcess:
+    """Run a python snippet in a fresh process with the capture topology.
+    (jax pins the device count at first init, so capture topology must be
+    established before any jax import — the same reason dryrun.py sets
+    XLA_FLAGS on its first two lines.)"""
+    env = placeholder_env(n_devices)
+    env["PYTHONPATH"] = pythonpath + os.pathsep + env.get("PYTHONPATH", "")
+    return subprocess.run([sys.executable, "-c", script], env=env,
+                          capture_output=True, text=True, timeout=timeout)
+
+
+def mesh_identity(mesh) -> dict:
+    return {"axes": list(mesh.axis_names), "shape": list(mesh.devices.shape)}
+
+
+def same_topology(identity: dict, mesh) -> bool:
+    return (list(mesh.axis_names) == identity["axes"]
+            and list(mesh.devices.shape) == identity["shape"])

@@ -1,0 +1,108 @@
+"""Kernel binary extraction + reload (paper §4.1.2 / §5.2).
+
+CUDA side: kernel modules are lazily loaded on first launch; a process that
+skips warmup can't replay a graph whose nodes reference unloaded kernels.
+Foundry extracts module binaries at SAVE and restores them by
+(content_hash, mangled_name) at LOAD, skipping warmup, torch.compile and
+Triton autotuning.
+
+JAX/TPU side: the analogous lazily-created state is the per-kernel lowering +
+autotuning work of custom (Pallas) kernels — block-shape autotuning and
+StableHLO lowering happen on first use. The catalog stores, per kernel
+instance:
+    payload  : the lowered kernel artifact (StableHLO bytes), content-hashed
+    name     : entry name mangled with the shape/dtype signature
+    options  : tuning decisions (block sizes) — the "load options" the paper
+               replays so LOAD issues the same driver call
+    needs_device_init : kernels that require collective/mesh state before use
+               (paper: NVSHMEM's nvshmemx_cumodule_init; here: shard_map'd
+               kernels that must be bound to a live mesh)
+
+``repro.kernels.ops`` consults the catalog before autotuning: a primed
+catalog turns first-use tuning+lowering into a dict lookup.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Tuple
+
+from repro.core.archive import Archive, content_hash
+
+
+def mangle(kernel: str, shapes, dtypes, **static) -> str:
+    sig = ",".join(f"{tuple(s)}" for s in shapes)
+    dt = ",".join(str(d) for d in dtypes)
+    st = ",".join(f"{k}={v}" for k, v in sorted(static.items()))
+    return f"{kernel}({sig};{dt};{st})"
+
+
+@dataclass
+class CatalogEntry:
+    name: str
+    payload_hash: str
+    options: Dict[str, Any]
+    needs_device_init: bool = False
+
+
+class KernelCatalog:
+    def __init__(self):
+        self.entries: Dict[str, CatalogEntry] = {}   # name -> entry
+        self._payloads: Dict[str, bytes] = {}        # hash -> payload
+        self.stats = {"hits": 0, "misses": 0, "autotune_skipped": 0}
+
+    # -- SAVE side --------------------------------------------------------
+    def record(self, name: str, payload: bytes, options: Dict[str, Any],
+               needs_device_init: bool = False) -> CatalogEntry:
+        h = content_hash(payload)
+        self._payloads[h] = payload
+        e = CatalogEntry(name, h, dict(options), needs_device_init)
+        self.entries[name] = e
+        return e
+
+    def to_manifest(self) -> dict:
+        return {"entries": {n: {"payload_hash": e.payload_hash,
+                                "options": e.options,
+                                "needs_device_init": e.needs_device_init}
+                            for n, e in self.entries.items()}}
+
+    def add_blobs(self, archive: Archive):
+        for h, p in self._payloads.items():
+            archive.add_blob(p)
+
+    # -- LOAD side ---------------------------------------------------------
+    def prime(self, manifest: dict, archive: Archive):
+        """Restore all entries from an archive (paper: load binaries into the
+        driver up front so graph reconstruction resolves (hash, name) keys
+        without lazy loading)."""
+        for name, m in manifest.get("entries", {}).items():
+            e = CatalogEntry(name, m["payload_hash"], dict(m["options"]),
+                             m.get("needs_device_init", False))
+            self.entries[name] = e
+            if e.payload_hash in archive.blobs:
+                self._payloads[e.payload_hash] = archive.get_blob(e.payload_hash)
+
+    def resolve(self, name: str) -> Optional[CatalogEntry]:
+        e = self.entries.get(name)
+        if e is None:
+            self.stats["misses"] += 1
+            return None
+        self.stats["hits"] += 1
+        return e
+
+    def payload(self, e: CatalogEntry) -> Optional[bytes]:
+        data = self._payloads.get(e.payload_hash)
+        if data is not None and content_hash(data) != e.payload_hash:
+            raise ValueError(f"kernel payload {e.name} corrupt")
+        return data
+
+    def options_for(self, name: str) -> Optional[Dict[str, Any]]:
+        e = self.resolve(name)
+        if e is None:
+            return None
+        self.stats["autotune_skipped"] += 1
+        return e.options
+
+
+# process-global catalog used by repro.kernels.ops (engine wires archives in)
+GLOBAL_CATALOG = KernelCatalog()

@@ -1,0 +1,137 @@
+"""SAVE: offline context materialization (paper §3, Figure 4 left).
+
+Runs the engine's capture set once — on the *offline capture topology*
+(single host, placeholder devices; core/collective_stub.py) — and produces a
+portable archive containing:
+
+  * per-bucket topology keys and topology groups (templates),
+  * the template buckets' *instantiated executables*
+    (jax.experimental.serialize_executable — topology + execution context),
+  * every bucket's pre-lowered StableHLO (jax.export) for on-demand exact
+    reconstruction without Python re-tracing,
+  * the kernel catalog (content-hash-keyed lowered kernel artifacts),
+  * the memory plan (deterministic arena layout incl. capture-window events),
+  * a manifest binding all of it to (arch, step name, mesh shape, dtype).
+
+Phase timings are recorded for the paper's Figure 8 breakdown.
+"""
+from __future__ import annotations
+
+import pickle
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+import jax
+
+from repro.core.archive import Archive
+from repro.core.memory_plan import MemoryPlan
+from repro.core.templates import TopologyGroup, group_buckets
+from repro.core.topology import topology_key
+
+
+@dataclass
+class CaptureSpec:
+    """One family of graphs to capture (e.g. the decode step).
+
+    make_args(bucket) must return the positional arg specs
+    (ShapeDtypeStructs with shardings) for ``step_fn`` at that bucket.
+    """
+    name: str
+    step_fn: Callable
+    make_args: Callable[[int], tuple]
+    buckets: Sequence[int]
+    donate_argnums: tuple = ()
+
+
+def _mesh_identity(mesh) -> dict:
+    if mesh is None:
+        return {"axes": [], "shape": []}
+    return {"axes": list(mesh.axis_names), "shape": list(mesh.devices.shape)}
+
+
+def foundry_save(specs: Sequence[CaptureSpec], mesh, *,
+                 memory_plan: Optional[MemoryPlan] = None,
+                 kernel_catalog=None,
+                 meta: Optional[dict] = None,
+                 serialize_all_executables: bool = False,
+                 verbose: bool = False) -> tuple[Archive, dict]:
+    """Capture + materialize. Returns (archive, save_report).
+
+    serialize_all_executables=True is the "no templating" ablation (the
+    CUDA-checkpoint-like baseline): every bucket's executable goes into the
+    archive. Default stores executables only for templates.
+    """
+    ar = Archive()
+    report: Dict[str, Any] = {"phases": {}, "specs": {}}
+    t_all = time.perf_counter()
+    manifest_specs = {}
+
+    for spec in specs:
+        srep: Dict[str, Any] = {}
+        t0 = time.perf_counter()
+        # --- capture: trace every bucket, compute topology keys ----------
+        keys: Dict[int, str] = {}
+        lowered: Dict[int, Any] = {}
+        extra = _mesh_identity(mesh)
+        for b in spec.buckets:
+            args = spec.make_args(b)
+            keys[b] = topology_key(spec.step_fn, *args, extra=extra)
+        srep["trace_s"] = time.perf_counter() - t0
+
+        # --- group ------------------------------------------------------
+        t0 = time.perf_counter()
+        groups = group_buckets(keys)
+        srep["group_s"] = time.perf_counter() - t0
+        srep["n_buckets"] = len(spec.buckets)
+        srep["n_templates"] = len(groups)
+
+        # --- lower + export every bucket (graph metadata) ----------------
+        t0 = time.perf_counter()
+        jitted = jax.jit(spec.step_fn, donate_argnums=spec.donate_argnums)
+        for g in groups:
+            for b in g.buckets:
+                args = spec.make_args(b)
+                exp = jax.export.export(jitted)(*args)
+                g.bucket_export_blobs[b] = ar.add_blob(exp.serialize())
+        srep["export_s"] = time.perf_counter() - t0
+
+        # --- compile + serialize template executables ---------------------
+        t0 = time.perf_counter()
+        from jax.experimental import serialize_executable as se
+        for g in groups:
+            todo = g.buckets if serialize_all_executables else [g.template_bucket]
+            for b in todo:
+                args = spec.make_args(b)
+                compiled = jitted.lower(*args).compile()
+                payload = se.serialize(compiled)
+                blob = ar.add_blob(pickle.dumps(payload))
+                if b == g.template_bucket:
+                    g.executable_blob = blob
+                if serialize_all_executables:
+                    g.bucket_executable_blobs[b] = blob
+        srep["compile_serialize_s"] = time.perf_counter() - t0
+
+        manifest_specs[spec.name] = {
+            "buckets": list(spec.buckets),
+            "donate_argnums": list(spec.donate_argnums),
+            "groups": [g.to_manifest() for g in groups],
+        }
+        report["specs"][spec.name] = srep
+        if verbose:
+            print(f"[SAVE:{spec.name}] {len(spec.buckets)} buckets -> "
+                  f"{len(groups)} templates "
+                  f"(trace {srep['trace_s']:.2f}s export {srep['export_s']:.2f}s "
+                  f"compile+ser {srep['compile_serialize_s']:.2f}s)")
+
+    ar.manifest = {
+        "version": 1,
+        "mesh": _mesh_identity(mesh),
+        "meta": meta or {},
+        "specs": manifest_specs,
+        "memory_plan": memory_plan.to_manifest() if memory_plan else None,
+        "kernel_catalog": (kernel_catalog.to_manifest()
+                           if kernel_catalog is not None else None),
+    }
+    report["total_s"] = time.perf_counter() - t_all
+    return ar, report

@@ -1,0 +1,152 @@
+"""Deterministic memory layout (paper §4.1.1).
+
+The paper interposes the CUDA driver's VMM API and redirects every allocation
+into a reserved virtual range, placing allocations contiguously so that a
+SAVE run and a LOAD run produce bit-identical address layouts; LOAD then
+premaps the whole extent in one call and each allocation becomes a pointer
+bump. Capture-window allocations (made only during graph capture) are
+recorded and replayed because LOAD skips capture.
+
+On TPU/JAX the runtime owns device pointers, but the same contract exists one
+level up: a restored executable binds to buffers by (shape, dtype, layout,
+donation) slots, and the serving engine's long-lived objects (weights, KV
+pool, IO staging) must be *plan-identical* between SAVE and LOAD or restore
+fails / silently reallocates. ``MemoryPlan`` is that plan: a monotonic arena
+planner that (a) assigns deterministic offsets from the allocation sequence,
+(b) records capture-window allocations for replay, (c) lets LOAD preallocate
+the full extent and verify every replayed allocation lands at its recorded
+offset. The engine sizes its KV pool from the plan *before* LOAD (paper §5.4
+pins the vLLM KV-cache size for the same reason).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+DEFAULT_BASE = 0x7F00_0000_0000  # reserved VA base, conflict-free by fiat
+DEFAULT_ALIGN = 512
+
+
+@dataclass(frozen=True)
+class Allocation:
+    name: str
+    offset: int
+    size: int
+    phase: str  # "init" | "capture"
+
+    @property
+    def end(self) -> int:
+        return self.offset + self.size
+
+
+class PlanMismatch(RuntimeError):
+    pass
+
+
+class MemoryPlan:
+    """Monotonic arena planner. SAVE: record. LOAD: preallocate + replay."""
+
+    def __init__(self, base: int = DEFAULT_BASE, align: int = DEFAULT_ALIGN):
+        self.base = base
+        self.align = align
+        self.allocations: List[Allocation] = []
+        self._cursor = 0
+        self._phase = "init"
+        self._prealloc_extent: Optional[int] = None
+
+    # ---- SAVE-side recording -----------------------------------------
+    def set_phase(self, phase: str):
+        assert phase in ("init", "capture")
+        self._phase = phase
+
+    def alloc(self, name: str, size: int) -> int:
+        """Reserve the next aligned offset. Returns the absolute address."""
+        size = int(size)
+        if size < 0:
+            raise ValueError(f"negative allocation {name}: {size}")
+        off = self._cursor
+        a = Allocation(name, off, size, self._phase)
+        self.allocations.append(a)
+        pad = (-size) % self.align
+        self._cursor = off + size + pad
+        if self._prealloc_extent is not None and self._cursor > self._prealloc_extent:
+            raise PlanMismatch(
+                f"allocation {name} ({size}B at +{off}) exceeds preallocated "
+                f"extent {self._prealloc_extent}")
+        return self.base + off
+
+    @property
+    def extent(self) -> int:
+        return self._cursor
+
+    def capture_window(self) -> List[Allocation]:
+        return [a for a in self.allocations if a.phase == "capture"]
+
+    # ---- LOAD-side ----------------------------------------------------
+    def preallocate(self) -> Tuple[int, int]:
+        """One-shot mapping of the full recorded extent (paper: LOAD maps the
+        range up to the final SAVE offset in a single VMM call; every later
+        allocation is a pointer bump)."""
+        if self._prealloc_extent is None:  # SAVE side: extent so far
+            self._prealloc_extent = self._cursor
+        return self.base, self._prealloc_extent
+
+    @classmethod
+    def for_load(cls, recorded: "MemoryPlan | dict") -> "MemoryPlan":
+        """Fresh plan primed with the recorded extent; allocations made during
+        LOAD are verified against the recorded sequence."""
+        rec = recorded.to_manifest() if isinstance(recorded, MemoryPlan) else recorded
+        p = cls(base=rec["base"], align=rec["align"])
+        p._expected = [Allocation(**a) for a in rec["allocations"]]
+        p._prealloc_extent = rec["extent"]
+        return p
+
+    def verify_alloc(self, name: str, size: int) -> int:
+        """LOAD-side allocation: must match the recorded sequence exactly
+        (same name order, same sizes -> same offsets)."""
+        i = len(self.allocations)
+        exp = getattr(self, "_expected", None)
+        if exp is None or i >= len(exp):
+            raise PlanMismatch(f"unexpected allocation #{i} {name}")
+        e = exp[i]
+        if e.name != name or e.size != int(size):
+            raise PlanMismatch(
+                f"allocation #{i} mismatch: recorded ({e.name}, {e.size}) "
+                f"vs requested ({name}, {size}) — SAVE/LOAD sequences diverge")
+        a = Allocation(name, e.offset, e.size, e.phase)
+        self.allocations.append(a)
+        self._cursor = max(self._cursor, e.end)
+        return self.base + e.offset
+
+    def replay_capture_window(self) -> List[Allocation]:
+        """LOAD skips graph capture, so transient capture-window buffers never
+        get re-requested; replay them from the record so the executable's
+        expected address space is fully populated (paper §4.1.1)."""
+        exp = getattr(self, "_expected", [])
+        replayed = []
+        for e in exp[len(self.allocations):]:
+            if e.phase != "capture":
+                break
+            self.allocations.append(e)
+            self._cursor = max(self._cursor, e.end)
+            replayed.append(e)
+        return replayed
+
+    # ---- (de)serialization ---------------------------------------------
+    def to_manifest(self) -> dict:
+        return {
+            "base": self.base, "align": self.align, "extent": self._cursor,
+            "allocations": [vars(a) for a in self.allocations],
+        }
+
+    @classmethod
+    def from_manifest(cls, m: dict) -> "MemoryPlan":
+        p = cls(base=m["base"], align=m["align"])
+        p.allocations = [Allocation(**a) for a in m["allocations"]]
+        p._cursor = m["extent"]
+        return p
+
+    def layout_equal(self, other: "MemoryPlan") -> bool:
+        return (self.base == other.base
+                and [vars(a) for a in self.allocations]
+                == [vars(a) for a in other.allocations])

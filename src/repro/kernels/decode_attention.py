@@ -1,0 +1,103 @@
+"""Pallas TPU kernel: GQA flash-decode over a long KV cache.
+
+The decode hot spot: one query token per sequence attending to a cache of
+S_ctx positions. Memory-bound — the whole KV cache streams HBM->VMEM once;
+the kernel's job is to keep scores/softmax state resident in VMEM (the XLA
+path materializes every score block to HBM; see EXPERIMENTS.md §Roofline).
+
+TPU adaptation (vs. the CUDA flash-decode it mirrors):
+  * the query group (G = H/Hkv heads sharing one KV head) forms the MXU
+    row-block: scores[G, blk] = q[G, Dh] @ K[blk, Dh]^T — Dh=64..128 aligns
+    the contraction with the 128-wide systolic array;
+  * grid = (B, Hkv, S/blk) with the KV-block dim innermost: online-softmax
+    carry (m, l, acc) lives in VMEM scratch across grid steps — the
+    TPU-idiomatic replacement for CUDA's split-K + shared-memory reduction;
+  * per-sequence lengths sit in SMEM; out-of-range blocks are masked (the
+    compiler still streams them — a block-level early-exit via
+    pl.when(program_id) keeps the bandwidth roofline).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(lengths_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_ref, l_ref, acc_ref, *, blk: int, scale: float):
+    b = pl.program_id(0)
+    s = pl.program_id(2)
+    n_s = pl.num_programs(2)
+
+    @pl.when(s == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = lengths_ref[0]  # current token position for this sequence
+    q = q_ref[0, 0].astype(jnp.float32)         # [G, Dh]
+    k = k_ref[0, :, 0, :].astype(jnp.float32)   # [blk, Dh]
+    v = v_ref[0, :, 0, :].astype(jnp.float32)   # [blk, Dh]
+
+    scores = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale  # [G, blk]
+    pos = s * blk + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+    scores = jnp.where(pos <= length, scores, NEG_INF)
+
+    m_prev = m_ref[...]                  # [G, 1]
+    m_new = jnp.maximum(m_prev, scores.max(axis=1, keepdims=True))
+    p = jnp.exp(scores - m_new)          # [G, blk]
+    corr = jnp.exp(m_prev - m_new)       # [G, 1]
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(s == n_s - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def decode_attention_kernel(q, k_cache, v_cache, lengths, *, blk: int = 512,
+                            interpret: bool = True):
+    """q: [B, H, Dh]; caches: [B, S, Hkv, Dh]; lengths: [B] (new-token pos;
+    the new token's K/V must already be written at lengths[b]).
+    Returns [B, H, Dh]."""
+    B, H, Dh = q.shape
+    _, S, Hkv, _ = k_cache.shape
+    G = H // Hkv
+    blk = min(blk, S)
+    assert S % blk == 0, (S, blk)
+    scale = 1.0 / math.sqrt(Dh)
+    qg = q.reshape(B, Hkv, G, Dh)
+
+    grid = (B, Hkv, S // blk)
+    out = pl.pallas_call(
+        functools.partial(_decode_kernel, blk=blk, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, h, s: (b,),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, G, Dh), lambda b, h, s: (b, h, 0, 0)),
+            pl.BlockSpec((1, blk, 1, Dh), lambda b, h, s: (b, s, h, 0)),
+            pl.BlockSpec((1, blk, 1, Dh), lambda b, h, s: (b, s, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, Dh), lambda b, h, s: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, Dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),   # m
+            pltpu.VMEM((G, 1), jnp.float32),   # l
+            pltpu.VMEM((G, Dh), jnp.float32),  # acc
+        ],
+        interpret=interpret,
+    )(lengths, qg, k_cache, v_cache)
+    return out.reshape(B, H, Dh)

@@ -1,0 +1,98 @@
+"""Jit'd public wrappers for the Pallas kernels + Foundry kernel-catalog
+integration (paper §4.1.2: binary extraction/reload skips first-use work).
+
+First use of a kernel instance normally pays (a) block-shape autotuning and
+(b) lowering. ``_tuned_call`` consults the process catalog
+(repro.core.kernel_catalog.GLOBAL_CATALOG) first: a primed catalog supplies
+the recorded options and the call skips autotune entirely — the measurable
+analogue of Foundry skipping Triton autotune + cuModuleLoad at LOAD. On SAVE
+the chosen options and the lowered StableHLO payload are recorded.
+"""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.kernel_catalog import GLOBAL_CATALOG, mangle
+from repro.kernels import decode_attention as _da
+from repro.kernels import moe_gemm as _mg
+from repro.kernels import ssm_scan as _ss
+from repro.kernels import ref as _ref
+
+INTERPRET = True  # CPU container: interpret mode; flip on real TPU.
+
+
+def _autotune(kernel_name: str, fn_for, candidates, probe_args) -> Dict[str, Any]:
+    """Pick the fastest candidate options by timing small probes (the
+    first-use cost the catalog eliminates)."""
+    best, best_t = None, float("inf")
+    for opts in candidates:
+        try:
+            f = jax.jit(functools.partial(fn_for, **opts))
+            f(*probe_args)  # compile
+            t0 = time.perf_counter()
+            jax.block_until_ready(f(*probe_args))
+            dt = time.perf_counter() - t0
+        except Exception:
+            continue
+        if dt < best_t:
+            best, best_t = opts, dt
+    return best or candidates[0]
+
+
+def _tuned_call(kernel_name: str, fn_for: Callable, candidates, args,
+                catalog=None):
+    cat = catalog if catalog is not None else GLOBAL_CATALOG
+    name = mangle(kernel_name, [a.shape for a in args],
+                  [a.dtype for a in args])
+    opts = cat.options_for(name)
+    if opts is None:  # first use: autotune + record (SAVE-side path)
+        opts = _autotune(kernel_name, fn_for, candidates, args)
+        lowered = jax.jit(functools.partial(fn_for, **opts)).lower(*args)
+        payload = lowered.as_text().encode()
+        cat.record(name, payload, opts)
+    return jax.jit(functools.partial(fn_for, **opts))(*args)
+
+
+# ---------------------------------------------------------------------------
+# public ops
+# ---------------------------------------------------------------------------
+
+def decode_attention(q, k_cache, v_cache, lengths, catalog=None):
+    """Flash-decode. q: [B, H, Dh]; caches: [B, S, Hkv, Dh]; lengths: [B]."""
+    S = k_cache.shape[1]
+    cands = [{"blk": b, "interpret": INTERPRET}
+             for b in (256, 512, 1024) if S % b == 0 and b <= S]
+    cands = cands or [{"blk": S, "interpret": INTERPRET}]
+    return _tuned_call("decode_attention", _da.decode_attention_kernel,
+                       cands, (q, k_cache, v_cache, lengths), catalog)
+
+
+def mamba1_scan(dt, x, Bm, Cm, A, catalog=None):
+    """Selective scan. dt/x: [B, T, C]; Bm/Cm: [B, T, N]; A: [C, N]."""
+    T, C = x.shape[1], x.shape[2]
+    cands = [{"c_blk": cb, "t_chunk": tc, "interpret": INTERPRET}
+             for cb in (128, 256) for tc in (8, 16)
+             if C % cb == 0 and T % tc == 0]
+    cands = cands or [{"c_blk": C, "t_chunk": min(8, T),
+                       "interpret": INTERPRET}]
+    return _tuned_call("mamba1_scan", _ss.mamba1_scan_kernel, cands,
+                       (dt, x, Bm, Cm, A), catalog)
+
+
+def moe_grouped_gemm(xe, w, activation: str = "none", catalog=None):
+    """Grouped expert GEMM. xe: [E, C, D]; w: [E, D, F]."""
+    E, C, D = xe.shape
+    F = w.shape[-1]
+    cands = [{"bc": bc, "bf": 128, "bd": 128, "activation": activation,
+              "interpret": INTERPRET}
+             for bc in (64, 128)
+             if C % bc == 0 and F % 128 == 0 and D % 128 == 0]
+    cands = cands or [{"bc": C, "bf": F, "bd": D, "activation": activation,
+                       "interpret": INTERPRET}]
+    return _tuned_call("moe_gemm", _mg.moe_grouped_gemm_kernel, cands,
+                       (xe, w), catalog)

@@ -1,0 +1,53 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets in tests)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q, k_cache, v_cache, lengths):
+    """q: [B, H, Dh]; caches: [B, S, Hkv, Dh]; lengths: [B] -> [B, H, Dh]."""
+    B, H, Dh = q.shape
+    S, Hkv = k_cache.shape[1], k_cache.shape[2]
+    G = H // Hkv
+    scale = 1.0 / math.sqrt(Dh)
+    qg = q.reshape(B, Hkv, G, Dh).astype(jnp.float32)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg,
+                   k_cache.astype(jnp.float32)) * scale
+    mask = jnp.arange(S)[None, :] <= lengths[:, None]
+    s = jnp.where(mask[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, H, Dh).astype(q.dtype)
+
+
+def mamba1_scan_ref(dt, x, Bm, Cm, A):
+    """dt, x: [B, T, C]; Bm, Cm: [B, T, N]; A: [C, N] -> y [B, T, C]."""
+    B, T, C = x.shape
+    N = Bm.shape[-1]
+
+    def step(h, inp):
+        dt_t, x_t, B_t, C_t = inp
+        dt_f = dt_t.astype(jnp.float32)
+        decay = jnp.exp(dt_f[..., None] * A)
+        h = decay * h + (dt_f * x_t.astype(jnp.float32))[..., None] \
+            * B_t.astype(jnp.float32)[:, None, :]
+        y = jnp.einsum("bcn,bn->bc", h, C_t.astype(jnp.float32))
+        return h, y.astype(x.dtype)
+
+    h0 = jnp.zeros((B, C, N), jnp.float32)
+    xs = (jnp.moveaxis(dt, 1, 0), jnp.moveaxis(x, 1, 0),
+          jnp.moveaxis(Bm, 1, 0), jnp.moveaxis(Cm, 1, 0))
+    _, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1)
+
+
+def moe_grouped_gemm_ref(xe, w, activation: str = "none"):
+    """xe: [E, C, D]; w: [E, D, F] -> [E, C, F]."""
+    out = jnp.einsum("ecd,edf->ecf", xe.astype(jnp.float32),
+                     w.astype(jnp.float32))
+    if activation == "silu":
+        out = out * jax.nn.sigmoid(out)
+    return out.astype(xe.dtype)

@@ -1,0 +1,75 @@
+"""Serving launcher.
+
+    # offline SAVE (one capture host; archive is rank-independent)
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-14b-reduced \
+        --save /tmp/qwen.fndry
+
+    # online LOAD + serve a synthetic request stream
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-14b-reduced \
+        --load /tmp/qwen.fndry --requests 16
+"""
+from __future__ import annotations
+
+import argparse
+import random
+import time
+
+import jax
+
+from repro.configs.registry import get_arch
+from repro.core import Archive
+from repro.models.model import Model
+from repro.serving.engine import ServingEngine
+
+
+def build(arch: str, max_batch: int, max_seq: int) -> ServingEngine:
+    cfg = get_arch(arch)
+    eng = ServingEngine(Model(cfg), max_batch=max_batch, max_seq=max_seq,
+                        bucket_mode="pow2")
+    eng.load_weights(rng=jax.random.PRNGKey(0))
+    return eng
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--save", default=None, help="write archive and exit")
+    ap.add_argument("--load", default=None, help="archive to LOAD")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--max-seq", type=int, default=96)
+    args = ap.parse_args()
+
+    eng = build(args.arch, args.max_batch, args.max_seq)
+    if args.save:
+        ar, rep = eng.save_archive(args.save, verbose=True)
+        print(f"archive -> {args.save} "
+              f"({rep['specs']['decode']['n_templates']} templates)")
+        return
+
+    t0 = time.perf_counter()
+    if args.load:
+        eng.cold_start_foundry(Archive.load(args.load), verbose=True)
+        mode = "foundry"
+    else:
+        eng.cold_start_vanilla()
+        mode = "vanilla"
+    print(f"cold start ({mode}): {time.perf_counter() - t0:.3f}s")
+
+    rng = random.Random(0)
+    cfg = eng.cfg
+    for _ in range(args.requests):
+        prompt = [rng.randrange(1, cfg.vocab_size)
+                  for _ in range(rng.randrange(2, 10))]
+        eng.submit(prompt, rng.randrange(4, 12))
+    t0 = time.perf_counter()
+    steps = eng.run_until_drained()
+    done = eng.scheduler.done
+    toks = sum(len(r.generated) for r in done)
+    print(f"served {len(done)} requests / {toks} tokens in "
+          f"{time.perf_counter() - t0:.2f}s ({steps} steps); "
+          f"dispatch={eng.programs.stats if eng.programs else {}}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch smollm-360m-reduced \
+        --steps 100 [--batch 8] [--seq 64] [--ckpt-dir /tmp/ckpt] [--resume]
+
+Full-size configs target the production mesh (run under a pod launcher that
+sets jax.distributed + real devices); reduced configs run on this host.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs.registry import get_arch
+from repro.launch.mesh import ShardCtx, make_host_mesh
+from repro.models.model import Model
+from repro.training.checkpoint import Checkpointer
+from repro.training.data import DataConfig, SyntheticLMData
+from repro.training.elastic import ElasticController, StragglerWatchdog
+from repro.training.optimizer import OptConfig
+from repro.training.train_loop import run_train_loop
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch)
+    model = Model(cfg, ShardCtx(mesh=None))
+    opt = OptConfig(lr=args.lr, state_dtype=cfg.opt_state_dtype)
+    data = SyntheticLMData(DataConfig(cfg.vocab_size, args.batch, args.seq))
+
+    state = None
+    ck = Checkpointer(args.ckpt_dir) if args.ckpt_dir else None
+    if args.resume and ck and ck.latest_step() is not None:
+        ec = ElasticController(cfg, opt, ck)
+        model, state, extra = ec.resume(None)
+        data.load_state_dict(extra["data"])
+        print(f"resumed from step {ck.latest_step()}")
+
+    class Shim:
+        def save(self, s, step):
+            ck.save(s, step, extra={"data": data.state_dict()}, async_=True)
+
+    wd = StragglerWatchdog()
+    state, hist = run_train_loop(
+        model, opt, iter(data), num_steps=args.steps, state=state,
+        rng=jax.random.PRNGKey(0),
+        checkpointer=Shim() if ck else None,
+        checkpoint_every=args.ckpt_every if ck else 0, watchdog=wd)
+    if ck:
+        ck.wait()
+    if wd.flagged:
+        print(f"straggler steps flagged: {wd.flagged}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,279 @@
+"""State-space model blocks: Mamba-1 (falcon-mamba) and Mamba-2/SSD (zamba2).
+
+Prefill paths are written for compilability + roofline fidelity on the XLA
+backend: Mamba-2 uses the chunked SSD matmul formulation (MXU-friendly);
+Mamba-1 uses a time-step scan (its per-(channel,state) decay admits no shared
+chunk decay matrix). The Pallas twin lives in repro/kernels/ssm_scan.
+
+Projections are stored as separate leaves (in_proj_x / in_proj_z / ...) rather
+than one fused matrix so each output segment can carry its own sharding
+("ssm_inner" over the model axis; B/C/dt segments replicated).
+
+State layout (decode):
+  mamba1: h [B, d_inner, N],   conv buffer [B, K-1, d_inner]
+  mamba2: h [B, nheads, P, N], conv buffers x/[B,K-1,d_inner], B,C/[B,K-1,N]
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.mesh import ShardCtx
+from repro.models.tuning import FLAGS
+
+
+def causal_conv1d(x, w, b=None):
+    """Depthwise causal conv. x: [B, T, C]; w: [K, C]. y_t = sum_i w_i x_{t-K+1+i}."""
+    K = w.shape[0]
+    y = x * w[K - 1]
+    for i in range(1, K):
+        shifted = jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, :-i]
+        y = y + shifted * w[K - 1 - i]
+    if b is not None:
+        y = y + b
+    return y
+
+
+def causal_conv1d_step(x_t, conv_buf, w, b=None):
+    """One decode step. x_t: [B, C]; conv_buf: [B, K-1, C] (previous inputs).
+    Returns (y_t [B, C], new conv_buf)."""
+    window = jnp.concatenate([conv_buf, x_t[:, None]], axis=1)  # [B, K, C]
+    y = jnp.einsum("bkc,kc->bc", window, w)
+    if b is not None:
+        y = y + b
+    return y, window[:, 1:]
+
+
+def _tail_buf(x_raw, K):
+    """Last K-1 positions of the raw (pre-conv) stream, left-padded."""
+    return jnp.pad(x_raw, ((0, 0), (K - 1, 0), (0, 0)))[:, -(K - 1):]
+
+
+# ---------------------------------------------------------------------------
+# Mamba-1 (selective scan with per-(channel,state) decay)
+# ---------------------------------------------------------------------------
+
+MAMBA1_PARAM_AXES = {
+    "in_proj_x": (None, "ssm_inner"), "in_proj_z": (None, "ssm_inner"),
+    "conv_w": (None, "ssm_inner"), "conv_b": ("ssm_inner",),
+    "x_proj_dt": ("ssm_inner", None), "x_proj_B": ("ssm_inner", None),
+    "x_proj_C": ("ssm_inner", None),
+    "dt_proj": (None, "ssm_inner"), "dt_bias": ("ssm_inner",),
+    "A_log": ("ssm_inner", None), "D": ("ssm_inner",),
+    "out_proj": ("ssm_inner", None),
+}
+
+
+def mamba1_param_shapes(cfg):
+    di, N, dr, K, D = cfg.d_inner, cfg.ssm_state, cfg.dt_rank, cfg.ssm_conv, cfg.d_model
+    return {
+        "in_proj_x": (D, di), "in_proj_z": (D, di),
+        "conv_w": (K, di), "conv_b": (di,),
+        "x_proj_dt": (di, dr), "x_proj_B": (di, N), "x_proj_C": (di, N),
+        "dt_proj": (dr, di), "dt_bias": (di,),
+        "A_log": (di, N), "D": (di,),
+        "out_proj": (di, D),
+    }
+
+
+def mamba1_prefill(x, p, cfg, ctx: ShardCtx):
+    """x: [B, T, D] -> (y [B, T, D], state (h, conv_buf))."""
+    B, T, D = x.shape
+    di, N, K = cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+
+    x_in = x @ p["in_proj_x"]  # [B, T, di]
+    z = x @ p["in_proj_z"]
+    x_in = ctx.constrain(x_in, "batch", None, "ssm_inner")
+    x_c = jax.nn.silu(causal_conv1d(x_in, p["conv_w"], p["conv_b"]))
+
+    dt_raw = x_c @ p["x_proj_dt"]  # [B, T, dr]
+    Bm = x_c @ p["x_proj_B"]       # [B, T, N]
+    Cm = x_c @ p["x_proj_C"]
+    dt = jax.nn.softplus(dt_raw @ p["dt_proj"] + p["dt_bias"])  # [B, T, di]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))  # [di, N]
+
+    def step(h, inp):
+        dt_t, x_t, B_t, C_t = inp  # [B,di],[B,di],[B,N],[B,N]
+        dt_f = dt_t.astype(jnp.float32)
+        decay = jnp.exp(dt_f[..., None] * A)  # [B, di, N]
+        h = decay * h + (dt_f * x_t.astype(jnp.float32))[..., None] \
+            * B_t.astype(jnp.float32)[:, None, :]
+        y_t = jnp.einsum("bdn,bn->bd", h, C_t.astype(jnp.float32))
+        return h, y_t.astype(x_t.dtype)
+
+    h0 = jnp.zeros((B, di, N), jnp.float32)
+    if FLAGS.mamba1_chunked and T % FLAGS.mamba1_chunk == 0 \
+            and T > FLAGS.mamba1_chunk:
+        # time-chunked recurrence: the inner unrolled chunk fuses into one
+        # kernel so h stays in registers; HBM traffic drops from
+        # O(T * di * N) state round-trips to O(T) chunk I/O
+        # (EXPERIMENTS.md §Perf C1; the Pallas ssm_scan kernel is the TPU
+        # twin of exactly this blocking).
+        Tc = FLAGS.mamba1_chunk
+        nc = T // Tc
+
+        def chunk_step(h, inp):
+            dt_c, x_c_, B_c, C_c = inp  # [Tc, B, ...]
+            ys = []
+            for i in range(Tc):  # unrolled: fused chunk body
+                h, y_t = step(h, (dt_c[i], x_c_[i], B_c[i], C_c[i]))
+                ys.append(y_t)
+            return h, jnp.stack(ys)
+
+        resh = lambda a: jnp.moveaxis(a, 1, 0).reshape(
+            (nc, Tc) + (B,) + a.shape[2:])
+        xs = (resh(dt), resh(x_c), resh(Bm), resh(Cm))
+        h, ys = jax.lax.scan(chunk_step, h0, xs)
+        ys = ys.reshape((T, B) + ys.shape[3:])
+    else:
+        xs = (jnp.moveaxis(dt, 1, 0), jnp.moveaxis(x_c, 1, 0),
+              jnp.moveaxis(Bm, 1, 0), jnp.moveaxis(Cm, 1, 0))
+        h, ys = jax.lax.scan(step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1) + x_c * p["D"]  # [B, T, di]
+    y = y * jax.nn.silu(z)
+    out = y @ p["out_proj"]
+    return out, (h, _tail_buf(x_in, K))
+
+
+def mamba1_decode(x_t, state, p, cfg, ctx: ShardCtx):
+    """x_t: [B, D]; state (h [B,di,N], conv_buf [B,K-1,di])."""
+    h, conv_buf = state
+    x_in = x_t @ p["in_proj_x"]
+    z = x_t @ p["in_proj_z"]
+    xc, conv_buf = causal_conv1d_step(x_in, conv_buf, p["conv_w"], p["conv_b"])
+    xc = jax.nn.silu(xc)
+    dt = jax.nn.softplus((xc @ p["x_proj_dt"]) @ p["dt_proj"] + p["dt_bias"])
+    Bm = xc @ p["x_proj_B"]
+    Cm = xc @ p["x_proj_C"]
+    dt = dt.astype(jnp.float32)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    decay = jnp.exp(dt[..., None] * A)
+    h = decay * h + (dt * xc.astype(jnp.float32))[..., None] \
+        * Bm.astype(jnp.float32)[:, None, :]
+    y = jnp.einsum("bdn,bn->bd", h, Cm.astype(jnp.float32)).astype(x_t.dtype)
+    y = (y + xc * p["D"]) * jax.nn.silu(z)
+    return y @ p["out_proj"], (h, conv_buf)
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 / SSD (scalar per-head decay; chunked matmul formulation)
+# ---------------------------------------------------------------------------
+
+MAMBA2_PARAM_AXES = {
+    "in_proj_x": (None, "ssm_inner"), "in_proj_z": (None, "ssm_inner"),
+    "in_proj_B": (None, None), "in_proj_C": (None, None),
+    "in_proj_dt": (None, "ssm_heads"),
+    "conv_w_x": (None, "ssm_inner"), "conv_b_x": ("ssm_inner",),
+    "conv_w_B": (None, None), "conv_b_B": (None,),
+    "conv_w_C": (None, None), "conv_b_C": (None,),
+    "dt_bias": ("ssm_heads",), "A_log": ("ssm_heads",), "D": ("ssm_heads",),
+    "norm": ("ssm_inner",), "out_proj": ("ssm_inner", None),
+}
+
+
+def mamba2_param_shapes(cfg):
+    di, N, K, D = cfg.d_inner, cfg.ssm_state, cfg.ssm_conv, cfg.d_model
+    H = cfg.ssm_nheads
+    return {
+        "in_proj_x": (D, di), "in_proj_z": (D, di),
+        "in_proj_B": (D, N), "in_proj_C": (D, N), "in_proj_dt": (D, H),
+        "conv_w_x": (K, di), "conv_b_x": (di,),
+        "conv_w_B": (K, N), "conv_b_B": (N,),
+        "conv_w_C": (K, N), "conv_b_C": (N,),
+        "dt_bias": (H,), "A_log": (H,), "D": (H,),
+        "norm": (di,), "out_proj": (di, D),
+    }
+
+
+def mamba2_prefill(x, p, cfg, ctx: ShardCtx, chunk: int = 256):
+    """SSD chunked prefill. x: [B, T, D] -> (y, state (h, conv bufs))."""
+    from repro.models.layers import rms_norm
+    B, T, D = x.shape
+    di, N, P_, K = cfg.d_inner, cfg.ssm_state, cfg.ssm_head_dim, cfg.ssm_conv
+    H = cfg.ssm_nheads
+    Lc = min(chunk, T)
+    assert T % Lc == 0, (T, Lc)
+    nc = T // Lc
+
+    z = x @ p["in_proj_z"]
+    x_raw = x @ p["in_proj_x"]
+    B_raw = x @ p["in_proj_B"]
+    C_raw = x @ p["in_proj_C"]
+    dt_raw = x @ p["in_proj_dt"]  # [B, T, H]
+    x_raw = ctx.constrain(x_raw, "batch", None, "ssm_inner")
+
+    xs = jax.nn.silu(causal_conv1d(x_raw, p["conv_w_x"], p["conv_b_x"]))
+    Bm = jax.nn.silu(causal_conv1d(B_raw, p["conv_w_B"], p["conv_b_B"]))
+    Cm = jax.nn.silu(causal_conv1d(C_raw, p["conv_w_C"], p["conv_b_C"]))
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # [B, T, H]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))  # [H]
+
+    xh = xs.reshape(B, nc, Lc, H, P_)
+    dtc = dt.reshape(B, nc, Lc, H)
+    Bc = Bm.reshape(B, nc, Lc, N).astype(jnp.float32)
+    Cc = Cm.reshape(B, nc, Lc, N).astype(jnp.float32)
+    la = dtc * A  # log-decay per step [B, nc, Lc, H]
+
+    def chunk_step(S, inp):
+        xh_c, dt_c, B_c, C_c, la_c = inp  # [B,Lc,H,P],[B,Lc,H],[B,Lc,N],[B,Lc,N],[B,Lc,H]
+        cs = jnp.cumsum(la_c, axis=1)  # [B, Lc, H] inclusive
+        # intra-chunk: Lambda_ij = exp(cs_i - cs_j), i >= j
+        lam = jnp.exp(cs[:, :, None, :] - cs[:, None, :, :])  # [B, Li, Lj, H]
+        mask = jnp.tril(jnp.ones((Lc, Lc), bool))
+        lam = jnp.where(mask[None, :, :, None], lam, 0.0)
+        cb = jnp.einsum("bin,bjn->bij", C_c, B_c)  # [B, Li, Lj]
+        w = cb[..., None] * lam * dt_c[:, None, :, :]  # [B, Li, Lj, H]
+        y_intra = jnp.einsum("bijh,bjhp->bihp", w, xh_c.astype(jnp.float32))
+        # inter-chunk: contribution of the incoming state
+        y_inter = jnp.einsum("bhpn,bin->bihp", S, C_c) * jnp.exp(cs)[..., None]
+        # state update
+        tot = cs[:, -1]  # [B, H]
+        decay_from = jnp.exp(tot[:, None, :] - cs)  # [B, Lc, H]
+        S_new = (jnp.exp(tot)[:, :, None, None] * S
+                 + jnp.einsum("bjhp,bjn,bjh->bhpn", xh_c.astype(jnp.float32),
+                              B_c, dt_c * decay_from))
+        return S_new, (y_intra + y_inter).astype(x.dtype)
+
+    S0 = jnp.zeros((B, H, P_, N), jnp.float32)
+    xs_scan = (jnp.moveaxis(xh, 1, 0), jnp.moveaxis(dtc, 1, 0),
+               jnp.moveaxis(Bc, 1, 0), jnp.moveaxis(Cc, 1, 0),
+               jnp.moveaxis(la, 1, 0))
+    S, ys = jax.lax.scan(chunk_step, S0, xs_scan)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, T, H, P_)
+    y = y + xh.reshape(B, T, H, P_) * p["D"][None, None, :, None]
+    y = y.reshape(B, T, di)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = y @ p["out_proj"]
+    bufs = (_tail_buf(x_raw, K), _tail_buf(B_raw, K), _tail_buf(C_raw, K))
+    return out, (S, bufs)
+
+
+def mamba2_decode(x_t, state, p, cfg, ctx: ShardCtx):
+    """x_t: [B, D]; state (S [B,H,P,N], (buf_x, buf_B, buf_C))."""
+    from repro.models.layers import rms_norm
+    S, (buf_x, buf_B, buf_C) = state
+    di, N, P_ = cfg.d_inner, cfg.ssm_state, cfg.ssm_head_dim
+    H = cfg.ssm_nheads
+    z = x_t @ p["in_proj_z"]
+    x_raw = x_t @ p["in_proj_x"]
+    B_raw = x_t @ p["in_proj_B"]
+    C_raw = x_t @ p["in_proj_C"]
+    dt_raw = x_t @ p["in_proj_dt"]
+    xc, buf_x = causal_conv1d_step(x_raw, buf_x, p["conv_w_x"], p["conv_b_x"])
+    Bc, buf_B = causal_conv1d_step(B_raw, buf_B, p["conv_w_B"], p["conv_b_B"])
+    Cc, buf_C = causal_conv1d_step(C_raw, buf_C, p["conv_w_C"], p["conv_b_C"])
+    xc, Bc, Cc = jax.nn.silu(xc), jax.nn.silu(Bc), jax.nn.silu(Cc)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # [B, H]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xh = xc.reshape(-1, H, P_).astype(jnp.float32)
+    decay = jnp.exp(dt * A)  # [B, H]
+    S = (decay[:, :, None, None] * S
+         + jnp.einsum("bhp,bn,bh->bhpn", xh, Bc.astype(jnp.float32), dt))
+    y = jnp.einsum("bhpn,bn->bhp", S, Cc.astype(jnp.float32))
+    y = y + xh * p["D"][None, :, None]
+    y = y.reshape(-1, di).astype(x_t.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    return y @ p["out_proj"], (S, (buf_x, buf_B, buf_C))

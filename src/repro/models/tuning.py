@@ -1,0 +1,76 @@
+"""Performance tuning flags (§Perf hillclimb knobs).
+
+Every flag is a *beyond-paper* optimization layered on the paper-faithful
+baseline; EXPERIMENTS.md §Perf records each one as
+hypothesis -> change -> before/after roofline terms. Flags default to the
+optimized setting once validated; ``baseline()`` restores the faithful
+baseline for comparison runs.
+
+Env override: REPRO_TUNING="mixed_precision_attn=0,moe_batched_dispatch=1".
+"""
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass, field, fields
+
+
+@dataclass
+class PerfFlags:
+    # A: attention — keep bf16 operands on the MXU, accumulate f32 via
+    # preferred_element_type instead of materializing f32 copies of Q/K/V
+    # and the KV cache (kills the convert streams seen in the baseline HLO).
+    mixed_precision_attn: bool = False
+    # B: MoE — batched (non-vmapped) dispatch: gather/scatter with explicit
+    # batch dims + sharding constraints so GSPMD keeps dispatch buffers
+    # sharded (batch over data, experts over model) instead of
+    # all-gathering them across the model axis every layer.
+    moe_batched_dispatch: bool = False
+    # A2: decode — head-major KV-cache layout [L, B, Hkv, S, Dh]: both decode
+    # dots (QK^T and PV) consume the cache without a materialized transpose
+    # (baseline [L, B, S, Hkv, Dh] forces per-layer layout copies).
+    kv_cache_head_major: bool = False
+    # C: Mamba-1 — time-chunked selective scan: unroll the recurrence in
+    # chunks so the state stays in registers within a fused chunk body and
+    # HBM traffic drops from O(T * state) to O(T/chunk * inputs).
+    mamba1_chunked: bool = False
+    mamba1_chunk: int = 16
+
+
+FLAGS = PerfFlags()
+
+
+def set_flags(**kw):
+    for k, v in kw.items():
+        if not hasattr(FLAGS, k):
+            raise KeyError(k)
+        setattr(FLAGS, k, type(getattr(FLAGS, k))(v))
+    return FLAGS
+
+
+def baseline():
+    """Paper-faithful baseline (all optimizations off)."""
+    for f in fields(PerfFlags):
+        setattr(FLAGS, f.name, f.default)
+    return FLAGS
+
+
+def optimized():
+    """Validated wins only (EXPERIMENTS.md §Perf). Excluded after full-sweep
+    measurement: mamba1_chunked (chunk relayout costs more than it saves
+    under the TPU-target cost model) and moe_batched_dispatch (train-cell
+    memory/compute win, but 3.3x prefill and 16x arctic-decode collective
+    regressions — GSPMD replicates the batched combine scatter)."""
+    set_flags(mixed_precision_attn=True, kv_cache_head_major=True)
+    return FLAGS
+
+
+def _from_env():
+    spec = os.environ.get("REPRO_TUNING", "")
+    for item in spec.split(","):
+        if not item.strip():
+            continue
+        k, _, v = item.partition("=")
+        set_flags(**{k.strip(): int(v)})
+
+
+_from_env()

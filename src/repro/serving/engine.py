@@ -1,0 +1,276 @@
+"""Serving engine: bucketed decode + continuous batching + Foundry cold start.
+
+Three cold-start paths (the paper's Figure 7/8 comparison):
+  * "vanilla"  — trace+lower+compile every capture bucket up front (vLLM with
+                 CUDA graphs: full warmup + stream capture);
+  * "foundry"  — LOAD an archive: templates restored with zero compile, all
+                 buckets pad-served immediately, exact buckets hot-swap in the
+                 background;
+  * "eager"    — no capture; each bucket compiles lazily on first use (vLLM
+                 without CUDA graphs: fast start, degraded serving).
+
+The decode hot loop is identical in all three — only program provenance
+differs — so TPOT preservation (Figure 9) is measured on the same code path.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (Archive, CaptureSpec, MemoryPlan, ProgramSet,
+                        default_bucket_ladder, foundry_load, foundry_save,
+                        group_buckets, topology_key)
+from repro.core.templates import TopologyGroup
+from repro.launch.mesh import ShardCtx
+from repro.models.model import Model
+from repro.serving.kvcache import KVCachePool
+from repro.serving.scheduler import Request, Scheduler
+
+
+@dataclass
+class ColdStartReport:
+    mode: str
+    phases: Dict[str, float] = field(default_factory=dict)
+    n_buckets: int = 0
+    n_templates: int = 0
+
+    @property
+    def total_s(self) -> float:
+        return sum(self.phases.values())
+
+
+class ServingEngine:
+    def __init__(self, model: Model, *, max_batch: int = 16,
+                 max_seq: int = 128, bucket_mode: str = "all",
+                 eos_token: Optional[int] = None,
+                 memory_plan: Optional[MemoryPlan] = None):
+        self.model = model
+        self.cfg = model.cfg
+        self.ctx = model.ctx
+        self.max_batch = max_batch
+        self.max_seq = max_seq
+        self.buckets = default_bucket_ladder(max_batch, bucket_mode)
+        self.eos_token = eos_token
+        self.memory_plan = memory_plan or MemoryPlan()
+        self.params = None
+        self.programs: Optional[ProgramSet] = None
+        self.scheduler = Scheduler()
+        self.pool: Optional[KVCachePool] = None
+        self._prefill_cache: Dict[int, Any] = {}
+        self._eager_mode = False
+        self.decode_steps = 0
+
+    # ------------------------------------------------------------------
+    def _decode_fn(self):
+        m = self.model
+
+        def decode_step(params, cache, tokens):
+            return m.decode_step(params, cache, tokens)
+        return decode_step
+
+    def _decode_args(self, bucket: int):
+        m, ctx = self.model, self.ctx
+        tok_sh = (ctx.sharding(("batch",), (bucket,))
+                  if ctx.mesh is not None else None)
+        return (m.param_specs(), m.cache_specs(bucket, self.max_seq),
+                jax.ShapeDtypeStruct((bucket,), jnp.int32, sharding=tok_sh))
+
+    def capture_spec(self) -> CaptureSpec:
+        return CaptureSpec("decode", self._decode_fn(), self._decode_args,
+                           self.buckets, donate_argnums=(1,))
+
+    # ---- weights -------------------------------------------------------
+    def load_weights(self, params=None, rng=None):
+        """Weight loading is assumed solved (RDMA, 1-2 s; paper §2); here we
+        either take provided params or init. Registers with the memory plan."""
+        t0 = time.perf_counter()
+        self.params = params if params is not None else self.model.init(
+            rng if rng is not None else jax.random.PRNGKey(0))
+        for path, leaf in jax.tree.flatten_with_path(self.params)[0]:
+            self.memory_plan.alloc(
+                "params" + jax.tree_util.keystr(path),
+                leaf.size * leaf.dtype.itemsize)
+        return time.perf_counter() - t0
+
+    def _init_pool(self):
+        self.pool = KVCachePool(
+            self.model, self.max_batch, self.max_seq,
+            bucket_of=self._bucket_of, memory_plan=self.memory_plan)
+
+    def _bucket_of(self, n: int) -> int:
+        import bisect
+        i = bisect.bisect_left(self.buckets, n)
+        return self.buckets[min(i, len(self.buckets) - 1)]
+
+    # ---- cold start paths ------------------------------------------------
+    def cold_start_vanilla(self, verbose: bool = False) -> ColdStartReport:
+        """Full capture: per-bucket trace+lower+compile (stream capture)."""
+        rep = ColdStartReport("vanilla", n_buckets=len(self.buckets))
+        step = self._decode_fn()
+        keys = {}
+        t0 = time.perf_counter()
+        extra = {"mesh": str(None if self.ctx.mesh is None
+                             else self.ctx.mesh.shape)}
+        for b in self.buckets:
+            keys[b] = topology_key(step, *self._decode_args(b), extra=extra)
+        rep.phases["trace_key_s"] = time.perf_counter() - t0
+        groups = group_buckets(keys)
+        rep.n_templates = len(groups)
+        ps = ProgramSet(groups)
+        t0 = time.perf_counter()
+        jitted = jax.jit(step, donate_argnums=(1,))
+        for b in self.buckets:
+            exe = jitted.lower(*self._decode_args(b)).compile()
+            ps.set_exact(b, exe)
+            g = next(g for g in groups if b in g.buckets)
+            if b == g.template_bucket:
+                ps.set_template(g.key, exe)
+        rep.phases["capture_compile_s"] = time.perf_counter() - t0
+        self.programs = ps
+        self._init_pool()
+        if verbose:
+            print(f"[cold-start vanilla] {rep.total_s:.2f}s "
+                  f"({len(self.buckets)} buckets)")
+        return rep
+
+    def cold_start_foundry(self, archive: Archive,
+                           background_exact: bool = True,
+                           verbose: bool = False) -> ColdStartReport:
+        rep = ColdStartReport("foundry", n_buckets=len(self.buckets))
+        progs, load_rep, plan = foundry_load(
+            archive, self.ctx.mesh,
+            background_exact=background_exact, verbose=verbose)
+        self.programs = progs["decode"]
+        rep.phases.update(load_rep.phases)
+        rep.n_templates = load_rep.n_templates
+        self._load_report = load_rep
+        self._init_pool()
+        return rep
+
+    def cold_start_eager(self, verbose: bool = False) -> ColdStartReport:
+        """No capture: programs compile lazily on first use."""
+        rep = ColdStartReport("eager", n_buckets=len(self.buckets))
+        step = self._decode_fn()
+        keys = {b: f"eager-{b}" for b in self.buckets}  # no grouping
+        ps = ProgramSet(group_buckets(keys))
+        self.programs = ps
+        self._eager_mode = True
+        self._eager_jit = jax.jit(step, donate_argnums=(1,))
+        rep.phases["noop_s"] = 0.0
+        self._init_pool()
+        return rep
+
+    def save_archive(self, path: Optional[str] = None, **kw):
+        """Offline SAVE for this engine's capture set."""
+        ar, rep = foundry_save([self.capture_spec()], self.ctx.mesh,
+                               memory_plan=self.memory_plan,
+                               meta={"arch": self.cfg.name,
+                                     "max_seq": self.max_seq}, **kw)
+        if path:
+            ar.save(path)
+        return ar, rep
+
+    # ---- serving ---------------------------------------------------------
+    def submit(self, prompt: Sequence[int], max_new_tokens: int) -> Request:
+        return self.scheduler.submit(list(prompt), max_new_tokens)
+
+    def _prefill(self, req: Request):
+        """Prefill one request into its slot (pads prompt to pow2 bucket)."""
+        m = self.model
+        plen = len(req.prompt) + len(req.generated)
+        toks = list(req.prompt) + list(req.generated)
+        pb = 1 << (plen - 1).bit_length()
+        pb = min(max(pb, 8), self.max_seq)
+        padded = np.zeros((1, pb), np.int32)
+        padded[0, :plen] = toks
+        key = pb
+        if key not in self._prefill_cache:
+            self._prefill_cache[key] = jax.jit(
+                lambda p, b: m.prefill(p, b, cache_len=self.max_seq))
+        logits, cache1 = self._prefill_cache[key](
+            self.params, {"tokens": jnp.asarray(padded)})
+        # fix lengths: prefill padded to pb, true length is plen
+        cache1 = {**cache1, "lengths": jnp.asarray([plen], jnp.int32)}
+        slot = self.pool.acquire(req.req_id)
+        req.slot = slot
+        self.pool.write_prefill(slot, cache1)
+        # note: prefill over right-padded prompts is exact for causal attn
+        # (pad positions sit after plen and are never attended by pos<plen),
+        # and for SSM archs we re-run prefill at exact length buckets.
+        return slot
+
+    def step(self) -> int:
+        """One engine iteration: admit + decode one token for all running.
+        Returns number of active requests served."""
+        sched, pool = self.scheduler, self.pool
+        free = self.max_batch - pool.n_active
+        for req in sched.admissions(free):
+            self._prefill(req)
+        n = pool.n_active
+        if n == 0:
+            return 0
+        bucket = pool.cur_bucket
+        tokens = np.zeros((bucket,), np.int32)
+        by_slot = {r.slot: r for r in sched.running.values()}
+        for slot, req in by_slot.items():
+            seq = req.prompt + req.generated
+            tokens[slot] = seq[-1]
+        def put_tokens(t):
+            t = jnp.asarray(t)
+            if self.ctx.mesh is not None:
+                sh = self.ctx.sharding(("batch",), t.shape)
+                if sh is not None:
+                    t = jax.device_put(t, sh)
+            return t
+
+        if self._eager_mode:
+            exe = self._eager_jit
+            cache, logits = exe(self.params, pool.cache, put_tokens(tokens))
+        else:
+            exec_bucket, exe, path = self.programs.lookup(bucket)
+            if exec_bucket != bucket:
+                self.pool._resize(exec_bucket)
+                tokens = np.pad(tokens, (0, exec_bucket - bucket))
+            cache, logits = exe(self.params, self.pool.cache,
+                                put_tokens(tokens))
+        self.pool.cache = cache
+        self.decode_steps += 1
+        logits_np = np.asarray(logits[:, :self.cfg.vocab_size])
+        next_tokens = logits_np.argmax(axis=-1)
+        finished = []
+        for slot, req in by_slot.items():
+            tok = int(next_tokens[slot])
+            sched.record_token(req, tok)
+            hit_eos = self.eos_token is not None and tok == self.eos_token
+            if req.finished or hit_eos or \
+                    len(req.prompt) + len(req.generated) >= self.max_seq - 1:
+                finished.append(req)
+        for req in finished:
+            sched.complete(req)
+            self.pool.release(req.slot)
+            # compaction may have moved another request into this slot
+            moved_id = self.pool.slots[req.slot] if req.slot < len(self.pool.slots) else None
+            if moved_id is not None and moved_id in sched.running:
+                sched.running[moved_id].slot = req.slot
+            req.slot = None
+        return n
+
+    def run_until_drained(self, max_steps: int = 10000) -> int:
+        steps = 0
+        while self.scheduler.pending and steps < max_steps:
+            self.step()
+            steps += 1
+        return steps
+
+    # ---- fault tolerance ---------------------------------------------------
+    def simulate_worker_failure(self):
+        """Drop all running requests (worker died): re-queue with prefix kept,
+        reset the pool (fresh replacement worker)."""
+        for req in list(self.scheduler.running.values()):
+            self.scheduler.requeue_on_failure(req)
+        self._init_pool()

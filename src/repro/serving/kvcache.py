@@ -1,0 +1,154 @@
+"""Slot-based KV/state cache pool for the serving engine.
+
+The pool owns the decode-state pytree (attention KV, SSM states, lengths) at
+the current *bucket* batch size and maps request slots onto batch rows.
+Growing/shrinking across buckets pads/slices the batch dim (a one-time copy,
+amortized over the bucket's lifetime — the continuous-batching analogue of
+vLLM's batch expansion). Slot compaction keeps active rows contiguous at the
+front so any bucket >= n_active is a valid padded execution.
+
+Memory determinism: pool construction registers its buffers with the
+MemoryPlan (name, bytes) so SAVE and LOAD runs allocate identically (the
+engine pins the pool size before LOAD, paper §5.4).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.memory_plan import MemoryPlan
+
+
+def _leaf_bytes(sd) -> int:
+    return int(np.prod(sd.shape)) * jnp.dtype(sd.dtype).itemsize
+
+
+class KVCachePool:
+    def __init__(self, model, max_batch: int, max_seq: int,
+                 bucket_of, memory_plan: Optional[MemoryPlan] = None):
+        """bucket_of(n) -> smallest capture bucket >= n."""
+        self.model = model
+        self.max_batch = max_batch
+        self.max_seq = max_seq
+        self.bucket_of = bucket_of
+        self.cur_bucket = bucket_of(1)
+        self.cache = model.init_cache(self.cur_bucket, max_seq)
+        self.slots: List[Optional[int]] = [None] * self.cur_bucket  # req ids
+        # batch dim per leaf, derived structurally (comparing specs at two
+        # probe batch sizes — a size-match heuristic breaks when e.g.
+        # num_layers == bucket)
+        sa = jax.tree.leaves(model.cache_specs(3, max_seq))
+        sb = jax.tree.leaves(model.cache_specs(5, max_seq))
+        self._bdims = []
+        for a, b in zip(sa, sb):
+            dims = [i for i, (x, y) in enumerate(zip(a.shape, b.shape)) if x != y]
+            self._bdims.append(dims[0] if dims else None)
+        if memory_plan is not None:
+            for path, sd in jax.tree.flatten_with_path(
+                    model.cache_specs(max_batch, max_seq))[0]:
+                memory_plan.alloc("kv_pool" + jax.tree_util.keystr(path),
+                                  _leaf_bytes(sd))
+
+    # ------------------------------------------------------------------
+    @property
+    def n_active(self) -> int:
+        return sum(s is not None for s in self.slots)
+
+    def _map_leaves(self, fn):
+        """Apply fn(leaf, batch_dim) to every cache leaf."""
+        leaves, treedef = jax.tree.flatten(self.cache)
+        out = [fn(x, bd) for x, bd in zip(leaves, self._bdims)]
+        self.cache = jax.tree.unflatten(treedef, out)
+
+    def _apply_shardings(self):
+        """Re-pin every leaf to its spec sharding (pad/slice/np round-trips
+        drop shardings; captured executables require exact input shardings)."""
+        if self.model.ctx.mesh is None:
+            return
+        specs = jax.tree.leaves(
+            self.model.cache_specs(self.cur_bucket, self.max_seq))
+        leaves, treedef = jax.tree.flatten(self.cache)
+        out = [jax.device_put(x, sd.sharding) if sd.sharding is not None else x
+               for x, sd in zip(leaves, specs)]
+        self.cache = jax.tree.unflatten(treedef, out)
+
+    def _resize(self, new_bucket: int):
+        """Pad or slice every batch-dim leaf to the new bucket size."""
+        def fix(x, bdim):
+            if bdim is None or x.shape[bdim] == new_bucket:
+                return x
+            if new_bucket > x.shape[bdim]:
+                pad = [(0, 0)] * x.ndim
+                pad[bdim] = (0, new_bucket - x.shape[bdim])
+                return jnp.pad(x, pad)
+            idx = [slice(None)] * x.ndim
+            idx[bdim] = slice(0, new_bucket)
+            return x[tuple(idx)]
+
+        self._map_leaves(fix)
+        self.slots = (self.slots + [None] * new_bucket)[:new_bucket]
+        self.cur_bucket = new_bucket
+        self._apply_shardings()
+
+    # ------------------------------------------------------------------
+    def acquire(self, req_id: int) -> int:
+        """Assign a slot (growing the bucket if needed). Returns slot index."""
+        for i, s in enumerate(self.slots):
+            if s is None:
+                self.slots[i] = req_id
+                return i
+        n = self.n_active + 1
+        if n > self.max_batch:
+            raise RuntimeError("pool exhausted")
+        self._resize(self.bucket_of(n))
+        return self.acquire(req_id)
+
+    def release(self, slot: int):
+        """Free a slot and compact: move the last active row into the hole."""
+        last = max(i for i, s in enumerate(self.slots) if s is not None)
+        if last != slot:
+            self._move_row(last, slot)
+            self.slots[slot] = self.slots[last]
+        self.slots[last] = None
+        # shrink with hysteresis (stay one bucket above need)
+        want = self.bucket_of(max(1, self.n_active))
+        if want < self.cur_bucket and self.bucket_of(self.n_active + 1) < self.cur_bucket:
+            self._resize(want)
+
+    def moved_request(self, slot: int) -> Optional[int]:
+        return self.slots[slot]
+
+    def _move_row(self, src: int, dst: int):
+        # host-side row move (engine-scale batches are small on CPU; a TPU
+        # deployment would use block tables + the paged decode kernel)
+        def mv(x, bdim):
+            if bdim is None:
+                return x
+            arr = np.asarray(x).copy()
+            idx = [slice(None)] * arr.ndim
+            src_i, dst_i = list(idx), list(idx)
+            src_i[bdim], dst_i[bdim] = src, dst
+            arr[tuple(dst_i)] = arr[tuple(src_i)]
+            return jnp.asarray(arr)
+        self._map_leaves(mv)
+        self._apply_shardings()
+
+    def reset_slot(self, slot: int):
+        """Zero a slot's lengths so prefill can refill it."""
+        self.cache["lengths"] = self.cache["lengths"].at[slot].set(0)
+
+    def write_prefill(self, slot: int, prefill_cache):
+        """Copy a 1-row prefilled cache into the pool at ``slot``."""
+        ones = iter(jax.tree.leaves(prefill_cache))
+
+        def wr(pool, bdim):
+            one = next(ones)
+            if bdim is None:
+                return pool
+            return jax.lax.dynamic_update_slice_in_dim(
+                pool, one.astype(pool.dtype), slot, axis=bdim)
+        self._map_leaves(wr)

@@ -1,0 +1,96 @@
+"""Request scheduler: continuous batching with failure re-queue.
+
+Deliberately engine-agnostic: the engine asks for admissions each step and
+reports completions/failures. Fault tolerance: a request whose step failed
+(worker died, slot evicted) returns to the front of the queue with its
+already-generated prefix intact (decode restarts from the kept tokens).
+"""
+from __future__ import annotations
+
+import itertools
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from enum import Enum
+from typing import Deque, Dict, List, Optional
+
+
+class ReqState(Enum):
+    WAITING = "waiting"
+    RUNNING = "running"
+    DONE = "done"
+    FAILED = "failed"
+
+
+@dataclass
+class Request:
+    req_id: int
+    prompt: List[int]
+    max_new_tokens: int
+    arrival_t: float = field(default_factory=time.perf_counter)
+    generated: List[int] = field(default_factory=list)
+    state: ReqState = ReqState.WAITING
+    slot: Optional[int] = None
+    first_token_t: Optional[float] = None
+    done_t: Optional[float] = None
+    retries: int = 0
+
+    @property
+    def finished(self) -> bool:
+        return len(self.generated) >= self.max_new_tokens
+
+    @property
+    def ttft(self) -> Optional[float]:
+        return (self.first_token_t - self.arrival_t
+                if self.first_token_t else None)
+
+
+class Scheduler:
+    def __init__(self, max_retries: int = 2):
+        self._ids = itertools.count()
+        self.queue: Deque[Request] = deque()
+        self.running: Dict[int, Request] = {}
+        self.done: List[Request] = []
+        self.failed: List[Request] = []
+        self.max_retries = max_retries
+
+    def submit(self, prompt: List[int], max_new_tokens: int) -> Request:
+        r = Request(next(self._ids), list(prompt), max_new_tokens)
+        self.queue.append(r)
+        return r
+
+    def admissions(self, free_capacity: int) -> List[Request]:
+        out = []
+        while self.queue and len(out) < free_capacity:
+            r = self.queue.popleft()
+            r.state = ReqState.RUNNING
+            self.running[r.req_id] = r
+            out.append(r)
+        return out
+
+    def record_token(self, req: Request, token: int):
+        if req.first_token_t is None:
+            req.first_token_t = time.perf_counter()
+        req.generated.append(token)
+
+    def complete(self, req: Request):
+        req.state = ReqState.DONE
+        req.done_t = time.perf_counter()
+        self.running.pop(req.req_id, None)
+        self.done.append(req)
+
+    def requeue_on_failure(self, req: Request):
+        """Worker failure path: keep generated prefix, retry at queue front."""
+        self.running.pop(req.req_id, None)
+        req.retries += 1
+        req.slot = None
+        if req.retries > self.max_retries:
+            req.state = ReqState.FAILED
+            self.failed.append(req)
+            return
+        req.state = ReqState.WAITING
+        self.queue.appendleft(req)
+
+    @property
+    def pending(self) -> int:
+        return len(self.queue) + len(self.running)

@@ -1,0 +1,145 @@
+"""Distributed checkpointing: atomic, content-verified, reshardable, async.
+
+Fault-tolerance contract for 1000+-node runs:
+  * atomicity — a checkpoint directory appears only when complete (write to
+    step_NNN.tmp, fsync manifest, rename);
+  * integrity — every tensor file carries a content hash verified on load;
+  * resharding — tensors are stored as *global* arrays with their logical
+    identity (tree path); restore device_puts onto the target mesh/sharding,
+    so a checkpoint taken on (16,16) restores onto (2,16,16) or a degraded
+    (15x16) replacement mesh (elastic scaling / failed-node replacement);
+  * async — save() can run on a background thread (training continues; the
+    paper-world analogue is off-critical-path materialization);
+  * the data-pipeline cursor rides along, so restarts are exactly-once over
+    the token stream.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import re
+import shutil
+import threading
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import numpy as np
+
+
+def _hash(b: bytes) -> str:
+    return hashlib.blake2b(b, digest_size=16).hexdigest()
+
+
+class Checkpointer:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._async_thread: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------------
+    def save(self, state, step: int, extra: Optional[dict] = None,
+             async_: bool = False):
+        if async_:
+            # snapshot to host first (cheap on CPU; device->host on TPU),
+            # then write in the background
+            host_state = jax.tree.map(np.asarray, state)
+            self.wait()
+            self._async_thread = threading.Thread(
+                target=self._write, args=(host_state, step, extra), daemon=True)
+            self._async_thread.start()
+            return
+        self._write(jax.tree.map(np.asarray, state), step, extra)
+
+    def wait(self):
+        if self._async_thread is not None:
+            self._async_thread.join()
+            self._async_thread = None
+
+    def _write(self, host_state, step: int, extra: Optional[dict]):
+        final = os.path.join(self.dir, f"step_{step:08d}")
+        tmp = final + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        leaves, treedef = jax.tree.flatten(host_state)
+        index = {"step": step, "extra": extra or {},
+                 "treedef": str(treedef), "leaves": []}
+        for i, leaf in enumerate(leaves):
+            arr = np.asarray(leaf)
+            fname = f"leaf_{i:05d}.npy"
+            path = os.path.join(tmp, fname)
+            with open(path, "wb") as f:
+                np.lib.format.write_array(f, arr, allow_pickle=False)
+            with open(path, "rb") as f:
+                h = _hash(f.read())
+            index["leaves"].append({
+                "file": fname, "hash": h, "shape": list(arr.shape),
+                "dtype": str(arr.dtype)})
+        with open(os.path.join(tmp, "index.json"), "w") as f:
+            json.dump(index, f)
+            f.flush()
+            os.fsync(f.fileno())
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.replace(tmp, final)  # atomic publish
+        self._gc()
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    # ------------------------------------------------------------------
+    def all_steps(self):
+        out = []
+        for d in os.listdir(self.dir):
+            m = re.fullmatch(r"step_(\d+)", d)
+            if m:
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: Optional[int] = None, *, like=None,
+                shardings=None) -> tuple[Any, dict]:
+        """Restore (state, extra). ``like`` provides the target pytree
+        structure; ``shardings`` (same structure, optional) reshards each
+        global tensor onto the deployment mesh."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        d = os.path.join(self.dir, f"step_{step:08d}")
+        with open(os.path.join(d, "index.json")) as f:
+            index = json.load(f)
+        arrays = []
+        for meta in index["leaves"]:
+            path = os.path.join(d, meta["file"])
+            with open(path, "rb") as f:
+                raw = f.read()
+            if _hash(raw) != meta["hash"]:
+                raise ValueError(f"checkpoint tensor {meta['file']} corrupt")
+            import io
+            arr = np.lib.format.read_array(io.BytesIO(raw), allow_pickle=False)
+            arrays.append(arr)
+        if like is not None:
+            leaves, treedef = jax.tree.flatten(like)
+            assert len(leaves) == len(arrays), \
+                f"checkpoint has {len(arrays)} leaves, target has {len(leaves)}"
+            if shardings is not None:
+                # keep None leaves (replicated/scalar entries) aligned
+                shard_leaves = jax.tree.flatten(
+                    shardings, is_leaf=lambda x: x is None)[0]
+                arrays = [jax.device_put(a, s) if s is not None else jax.numpy.asarray(a)
+                          for a, s in zip(arrays, shard_leaves)]
+            else:
+                arrays = [jax.numpy.asarray(a) for a in arrays]
+            state = jax.tree.unflatten(treedef, arrays)
+        else:
+            state = arrays
+        return state, index["extra"]

@@ -1,0 +1,72 @@
+"""Deterministic, resumable synthetic data pipeline.
+
+Counter-based generation (step index seeds the RNG) gives:
+  * determinism across restarts — a restored step produces the same batch,
+  * O(1) skip-to-step on checkpoint resume (no replaying the stream),
+  * shard-independence — each data shard derives its slice from the global
+    batch deterministically, so reshaping the mesh (elastic scaling) keeps
+    the token stream consistent.
+
+Tokens follow a noisy affine Markov chain so small models can actually learn
+it (examples/train_lm.py shows loss decreasing).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass
+class DataConfig:
+    vocab_size: int
+    global_batch: int
+    seq_len: int
+    seed: int = 0
+    noise: float = 0.1  # fraction of uniform-random next-tokens
+
+
+class SyntheticLMData:
+    """Iterator of {"tokens": [B, S], "labels": [B, S]} int32 batches."""
+
+    def __init__(self, cfg: DataConfig, sharding=None, start_step: int = 0):
+        self.cfg = cfg
+        self.sharding = sharding
+        self.step = start_step
+
+    def state_dict(self) -> dict:
+        return {"step": self.step, "seed": self.cfg.seed}
+
+    def load_state_dict(self, s: dict):
+        assert s["seed"] == self.cfg.seed, "data seed mismatch on restore"
+        self.step = s["step"]
+
+    def batch_at(self, step: int) -> dict:
+        c = self.cfg
+        rng = np.random.default_rng((c.seed, step))
+        V = c.vocab_size
+        toks = np.empty((c.global_batch, c.seq_len + 1), np.int32)
+        toks[:, 0] = rng.integers(0, V, c.global_batch)
+        noise = rng.random((c.global_batch, c.seq_len)) < c.noise
+        rand = rng.integers(0, V, (c.global_batch, c.seq_len))
+        for t in range(c.seq_len):
+            nxt = (5 * toks[:, t] + 7) % V
+            toks[:, t + 1] = np.where(noise[:, t], rand[:, t], nxt)
+        batch = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+        if self.sharding is not None:
+            batch = {k: jax.device_put(v, self.sharding)
+                     for k, v in batch.items()}
+        else:
+            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        return batch
+
+    def __iter__(self) -> Iterator[dict]:
+        return self
+
+    def __next__(self) -> dict:
+        b = self.batch_at(self.step)
+        self.step += 1
+        return b

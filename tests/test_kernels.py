@@ -1,0 +1,145 @@
+"""Per-kernel validation: shape/dtype sweeps in interpret mode vs the pure-jnp
+oracles in repro.kernels.ref, plus kernel-catalog behaviour."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.kernel_catalog import KernelCatalog
+from repro.kernels import ops, ref
+from repro.kernels.decode_attention import decode_attention_kernel
+from repro.kernels.moe_gemm import moe_grouped_gemm_kernel
+from repro.kernels.ssm_scan import mamba1_scan_kernel
+
+RTOL = {jnp.float32: 1e-5, jnp.bfloat16: 2e-2}
+ATOL = {jnp.float32: 1e-5, jnp.bfloat16: 2e-2}
+
+
+def _tols(dtype):
+    return dict(rtol=RTOL[dtype], atol=ATOL[dtype])
+
+
+class TestDecodeAttention:
+    @pytest.mark.parametrize("B,S,H,Hkv,Dh,blk", [
+        (2, 256, 8, 2, 64, 128),
+        (1, 512, 4, 4, 128, 256),   # MHA
+        (3, 128, 8, 1, 64, 128),    # MQA
+        (2, 256, 16, 4, 128, 256),
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_matches_ref(self, B, S, H, Hkv, Dh, blk, dtype):
+        k = jax.random.PRNGKey(0)
+        ks = jax.random.split(k, 4)
+        q = jax.random.normal(ks[0], (B, H, Dh), dtype)
+        kc = jax.random.normal(ks[1], (B, S, Hkv, Dh), dtype)
+        vc = jax.random.normal(ks[2], (B, S, Hkv, Dh), dtype)
+        lengths = jax.random.randint(ks[3], (B,), 1, S - 1)
+        out = decode_attention_kernel(q, kc, vc, lengths, blk=blk,
+                                      interpret=True)
+        want = ref.decode_attention_ref(q, kc, vc, lengths)
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32), np.asarray(want, np.float32),
+            **_tols(dtype))
+
+    def test_mask_respects_length(self):
+        """Tokens beyond lengths[b] must not affect the output."""
+        B, S, H, Hkv, Dh = 1, 128, 4, 2, 64
+        ks = jax.random.split(jax.random.PRNGKey(1), 3)
+        q = jax.random.normal(ks[0], (B, H, Dh), jnp.float32)
+        kc = jax.random.normal(ks[1], (B, S, Hkv, Dh), jnp.float32)
+        vc = jax.random.normal(ks[2], (B, S, Hkv, Dh), jnp.float32)
+        lengths = jnp.asarray([40])
+        out1 = decode_attention_kernel(q, kc, vc, lengths, blk=64)
+        kc2 = kc.at[:, 41:].set(999.0)
+        vc2 = vc.at[:, 41:].set(-999.0)
+        out2 = decode_attention_kernel(q, kc2, vc2, lengths, blk=64)
+        np.testing.assert_allclose(np.asarray(out1), np.asarray(out2),
+                                   rtol=1e-6)
+
+
+class TestMamba1Scan:
+    @pytest.mark.parametrize("B,T,C,N,cb,tc", [
+        (2, 32, 128, 16, 128, 8),
+        (1, 64, 256, 16, 128, 16),
+        (2, 16, 128, 8, 128, 16),
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_matches_ref(self, B, T, C, N, cb, tc, dtype):
+        ks = jax.random.split(jax.random.PRNGKey(2), 4)
+        dt = jax.nn.softplus(jax.random.normal(ks[0], (B, T, C))).astype(dtype)
+        x = jax.random.normal(ks[1], (B, T, C), dtype)
+        Bm = jax.random.normal(ks[2], (B, T, N), dtype)
+        Cm = jax.random.normal(ks[3], (B, T, N), dtype)
+        A = -jnp.exp(jax.random.normal(jax.random.PRNGKey(5), (C, N))) \
+            .astype(jnp.float32)
+        out = mamba1_scan_kernel(dt, x, Bm, Cm, A, c_blk=cb, t_chunk=tc,
+                                 interpret=True)
+        want = ref.mamba1_scan_ref(dt, x, Bm, Cm, A)
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32), np.asarray(want, np.float32),
+            rtol=5e-2 if dtype == jnp.bfloat16 else 1e-4,
+            atol=5e-2 if dtype == jnp.bfloat16 else 1e-4)
+
+    def test_state_carries_across_chunks(self):
+        """Splitting time into chunks must equal one long chunk (carry)."""
+        B, T, C, N = 1, 32, 128, 16
+        ks = jax.random.split(jax.random.PRNGKey(3), 4)
+        dt = jax.nn.softplus(jax.random.normal(ks[0], (B, T, C)))
+        x = jax.random.normal(ks[1], (B, T, C))
+        Bm = jax.random.normal(ks[2], (B, T, N))
+        Cm = jax.random.normal(ks[3], (B, T, N))
+        A = -jnp.ones((C, N), jnp.float32)
+        a = mamba1_scan_kernel(dt, x, Bm, Cm, A, t_chunk=8)
+        b = mamba1_scan_kernel(dt, x, Bm, Cm, A, t_chunk=32)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5,
+                                   atol=1e-5)
+
+
+class TestMoeGemm:
+    @pytest.mark.parametrize("E,C,D,F", [
+        (4, 128, 128, 256),
+        (2, 256, 256, 128),
+        (8, 128, 256, 384),
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("act", ["none", "silu"])
+    def test_matches_ref(self, E, C, D, F, dtype, act):
+        ks = jax.random.split(jax.random.PRNGKey(4), 2)
+        xe = (jax.random.normal(ks[0], (E, C, D)) / np.sqrt(D)).astype(dtype)
+        w = (jax.random.normal(ks[1], (E, D, F)) / np.sqrt(D)).astype(dtype)
+        out = moe_grouped_gemm_kernel(xe, w, activation=act, interpret=True)
+        want = ref.moe_grouped_gemm_ref(xe, w, activation=act)
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32), np.asarray(want, np.float32),
+            **_tols(dtype))
+
+
+class TestKernelCatalog:
+    def test_autotune_skipped_on_catalog_hit(self):
+        cat = KernelCatalog()
+        B, S, H, Hkv, Dh = 1, 256, 4, 2, 64
+        ks = jax.random.split(jax.random.PRNGKey(6), 3)
+        q = jax.random.normal(ks[0], (B, H, Dh), jnp.float32)
+        kc = jax.random.normal(ks[1], (B, S, Hkv, Dh), jnp.float32)
+        vc = jax.random.normal(ks[2], (B, S, Hkv, Dh), jnp.float32)
+        lengths = jnp.asarray([100])
+        o1 = ops.decode_attention(q, kc, vc, lengths, catalog=cat)
+        assert cat.stats["misses"] == 1 and len(cat.entries) == 1
+        o2 = ops.decode_attention(q, kc, vc, lengths, catalog=cat)
+        assert cat.stats["autotune_skipped"] == 1
+        np.testing.assert_array_equal(np.asarray(o1), np.asarray(o2))
+
+    def test_catalog_roundtrip_through_archive(self):
+        from repro.core.archive import Archive
+        cat = KernelCatalog()
+        cat.record("k1(sig)", b"stablehlo-payload", {"blk": 256})
+        ar = Archive()
+        cat.add_blobs(ar)
+        ar.manifest = {"kernel_catalog": cat.to_manifest()}
+        ar2 = Archive.from_bytes(ar.to_bytes())
+        cat2 = KernelCatalog()
+        cat2.prime(ar2.manifest["kernel_catalog"], ar2)
+        e = cat2.resolve("k1(sig)")
+        assert e is not None and cat2.payload(e) == b"stablehlo-payload"

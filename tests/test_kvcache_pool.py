@@ -1,0 +1,77 @@
+"""Unit tests for the serving KV/state pool: slot lifecycle, bucket
+resize/compaction, structural batch-dim detection across model families."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_arch
+from repro.models.model import Model
+from repro.serving.kvcache import KVCachePool
+
+
+def make_pool(arch="smollm-360m", max_batch=8, max_seq=32):
+    cfg = get_arch(arch).reduced()
+    m = Model(cfg)
+    buckets = [1, 2, 4, 8]
+
+    def bucket_of(n):
+        import bisect
+        return buckets[min(bisect.bisect_left(buckets, n), len(buckets) - 1)]
+    return KVCachePool(m, max_batch, max_seq, bucket_of), m
+
+
+@pytest.mark.parametrize("arch", ["smollm-360m", "falcon-mamba-7b",
+                                  "zamba2-2.7b", "moonshot-v1-16b-a3b"])
+def test_batch_dims_detected_structurally(arch):
+    pool, m = make_pool(arch)
+    specs = jax.tree.leaves(m.cache_specs(3, 32))
+    for bd, sd in zip(pool._bdims, specs):
+        if bd is not None:
+            assert sd.shape[bd] == 3  # the probe batch size
+
+
+def test_acquire_grows_bucket_release_shrinks():
+    pool, _ = make_pool()
+    slots = [pool.acquire(i) for i in range(5)]
+    assert pool.cur_bucket == 8  # 5 active -> bucket 8
+    assert pool.n_active == 5
+    for s in sorted(slots[1:], reverse=True):
+        pool.release(s)
+    assert pool.n_active == 1
+    assert pool.cur_bucket <= 2  # hysteresis-shrunk
+
+
+def test_release_compacts_and_reports_moved():
+    pool, _ = make_pool()
+    a, b, c = pool.acquire(10), pool.acquire(11), pool.acquire(12)
+    pool.release(a)  # last active (req 12) moves into slot a
+    assert pool.slots[a] == 12
+    assert pool.n_active == 2
+
+
+def test_lengths_follow_slot_moves():
+    pool, m = make_pool()
+    a, b = pool.acquire(0), pool.acquire(1)
+    pool.cache["lengths"] = pool.cache["lengths"].at[b].set(7)
+    pool.release(a)  # b's row moves into slot a
+    assert int(pool.cache["lengths"][a]) == 7
+
+
+def test_resize_preserves_content():
+    pool, m = make_pool()
+    a = pool.acquire(0)
+    pool.cache["lengths"] = pool.cache["lengths"].at[a].set(5)
+    for i in range(1, 4):
+        pool.acquire(i)  # grows bucket
+    assert int(pool.cache["lengths"][a]) == 5
+
+
+def test_pool_exhaustion_raises():
+    pool, _ = make_pool(max_batch=2)
+    pool.bucket_of = lambda n: 2
+    pool._resize(2)
+    pool.acquire(0)
+    pool.acquire(1)
+    with pytest.raises(RuntimeError):
+        pool.acquire(2)

@@ -1,0 +1,206 @@
+"""Hypothesis property tests for the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import Archive, MemoryPlan, group_buckets, topology_key
+from repro.models.layers import _moe_row, flash_attention
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# memory plan
+# ---------------------------------------------------------------------------
+alloc_seq = st.lists(
+    st.tuples(st.sampled_from(["w", "kv", "io", "tmp"]),
+              st.integers(min_value=0, max_value=1 << 20)),
+    min_size=1, max_size=40)
+
+
+@given(seq=alloc_seq)
+@settings(**SETTINGS)
+def test_memory_plan_deterministic_and_disjoint(seq):
+    def build():
+        p = MemoryPlan()
+        for i, (name, size) in enumerate(seq):
+            if i == len(seq) // 2:
+                p.set_phase("capture")
+            p.alloc(f"{name}{i}", size)
+        return p
+
+    p1, p2 = build(), build()
+    assert p1.layout_equal(p2)
+    # allocations are disjoint and ordered
+    allocs = p1.allocations
+    for a, b in zip(allocs, allocs[1:]):
+        assert a.offset + a.size <= b.offset
+    # LOAD replay reproduces the exact layout
+    load = MemoryPlan.for_load(p1.to_manifest())
+    load.preallocate()
+    for a in allocs:
+        if a.phase == "capture":
+            break
+        assert load.verify_alloc(a.name, a.size) == p1.base + a.offset
+    load.replay_capture_window()
+    assert load.layout_equal(p1)
+
+
+# ---------------------------------------------------------------------------
+# archive
+# ---------------------------------------------------------------------------
+I64 = st.integers(min_value=-(2**63), max_value=2**63 - 1)  # container contract
+
+
+@given(blobs=st.lists(st.binary(min_size=0, max_size=2048), max_size=10),
+       manifest=st.dictionaries(
+           st.text(min_size=1, max_size=8),
+           st.one_of(I64, st.text(max_size=16), st.lists(I64, max_size=4)),
+           max_size=6))
+@settings(**SETTINGS)
+def test_archive_roundtrip(blobs, manifest):
+    ar = Archive(manifest=dict(manifest))
+    hashes = [ar.add_blob(b) for b in blobs]
+    ar2 = Archive.from_bytes(ar.to_bytes())
+    assert ar2.manifest == manifest
+    for h, b in zip(hashes, blobs):
+        assert ar2.get_blob(h) == b
+
+
+# ---------------------------------------------------------------------------
+# topology keys / grouping
+# ---------------------------------------------------------------------------
+@given(b1=st.integers(min_value=1, max_value=64),
+       b2=st.integers(min_value=1, max_value=64),
+       width=st.sampled_from([8, 16, 32]))
+@settings(max_examples=15, deadline=None)
+def test_topology_key_batch_invariant(b1, b2, width):
+    f = lambda x, w: jax.nn.relu(x @ w).sum()
+    k1 = topology_key(f, jax.ShapeDtypeStruct((b1, width), jnp.float32),
+                      jax.ShapeDtypeStruct((width, width), jnp.float32))
+    k2 = topology_key(f, jax.ShapeDtypeStruct((b2, width), jnp.float32),
+                      jax.ShapeDtypeStruct((width, width), jnp.float32))
+    assert k1 == k2
+
+
+@given(keys=st.dictionaries(st.integers(min_value=1, max_value=512),
+                            st.sampled_from(["a", "b", "c"]),
+                            min_size=1, max_size=64))
+@settings(**SETTINGS)
+def test_group_buckets_partition(keys):
+    groups = group_buckets(keys)
+    seen = []
+    for g in groups:
+        assert g.template_bucket == max(g.buckets)
+        assert all(keys[b] == g.key for b in g.buckets)
+        seen += g.buckets
+    assert sorted(seen) == sorted(keys)  # exact partition
+
+
+# ---------------------------------------------------------------------------
+# MoE routing
+# ---------------------------------------------------------------------------
+@given(t=st.integers(min_value=1, max_value=48),
+       e=st.sampled_from([4, 8]),
+       k=st.integers(min_value=1, max_value=3),
+       seed=st.integers(min_value=0, max_value=2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_moe_lossless_capacity_matches_dense(t, e, k, seed):
+    """capacity=T must reproduce the dense top-k mixture exactly."""
+    d, f = 16, 32
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    x = jax.random.normal(ks[0], (t, d), jnp.float32)
+    wr = jax.random.normal(ks[1], (d, e)) * 0.1
+    wg = jax.random.normal(ks[2], (e, d, f)) * 0.1
+    wu = jax.random.normal(ks[3], (e, d, f)) * 0.1
+    wd = jax.random.normal(ks[4], (e, f, d)) * 0.1
+
+    out, _ = _moe_row(x, wr, wg, wu, wd, top_k=k, capacity=t)
+
+    # dense reference: run every expert on every token, mix top-k
+    probs = jax.nn.softmax((x @ wr).astype(jnp.float32), -1)
+    top_p, top_i = jax.lax.top_k(probs, k)
+    top_p = top_p / top_p.sum(-1, keepdims=True)
+    hs = jax.vmap(lambda g, u, dn: (jax.nn.silu(x @ g) * (x @ u)) @ dn,
+                  in_axes=(0, 0, 0))(wg, wu, wd)  # [E, T, D]
+    picked = jnp.stack([hs[top_i[:, i], jnp.arange(t)]
+                        for i in range(k)], axis=1)  # [T, k, D]
+    mix = jnp.einsum("tk,tkd->td", top_p, picked)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(mix),
+                               rtol=2e-4, atol=2e-4)
+
+
+@given(t=st.integers(min_value=2, max_value=32),
+       cap=st.integers(min_value=1, max_value=4),
+       seed=st.integers(min_value=0, max_value=1000))
+@settings(max_examples=20, deadline=None)
+def test_moe_capacity_drop_is_bounded(t, cap, seed):
+    """With tight capacity, each expert processes <= capacity tokens and the
+    output stays finite (dropped tokens contribute zero, never NaN)."""
+    d, f, e, k = 8, 16, 4, 2
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    x = jax.random.normal(ks[0], (t, d), jnp.float32)
+    wr = jax.random.normal(ks[1], (d, e)) * 0.1
+    wg = jax.random.normal(ks[2], (e, d, f)) * 0.1
+    wu = jax.random.normal(ks[3], (e, d, f)) * 0.1
+    wd = jax.random.normal(ks[4], (e, f, d)) * 0.1
+    out, aux = _moe_row(x, wr, wg, wu, wd, top_k=k, capacity=cap)
+    assert np.isfinite(np.asarray(out)).all()
+    assert np.isfinite(float(aux))
+
+
+# ---------------------------------------------------------------------------
+# flash attention == naive attention
+# ---------------------------------------------------------------------------
+@given(b=st.integers(min_value=1, max_value=3),
+       sq=st.integers(min_value=1, max_value=40),
+       skv=st.integers(min_value=1, max_value=40),
+       h=st.sampled_from([2, 4]), g=st.sampled_from([1, 2]),
+       causal=st.booleans(),
+       seed=st.integers(min_value=0, max_value=1000))
+@settings(max_examples=25, deadline=None)
+def test_flash_matches_naive(b, sq, skv, h, g, causal, seed):
+    if causal and sq != skv:
+        skv = sq  # causal masks assume aligned positions
+    dh = 8
+    hkv = h // g
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (b, sq, h, dh), jnp.float32)
+    k = jax.random.normal(ks[1], (b, skv, hkv, dh), jnp.float32)
+    v = jax.random.normal(ks[2], (b, skv, hkv, dh), jnp.float32)
+    out = flash_attention(q, k, v, causal=causal, q_block=16, kv_block=16)
+
+    kf = jnp.repeat(k, g, axis=2)
+    vf = jnp.repeat(v, g, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, kf) / np.sqrt(dh)
+    if causal:
+        mask = jnp.arange(sq)[:, None] >= jnp.arange(skv)[None, :]
+        s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    want = jnp.einsum("bhqk,bkhd->bqhd", p, vf)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# scheduler
+# ---------------------------------------------------------------------------
+@given(n=st.integers(min_value=1, max_value=20),
+       cap=st.integers(min_value=1, max_value=8))
+@settings(**SETTINGS)
+def test_scheduler_admissions_capacity(n, cap):
+    from repro.serving.scheduler import Scheduler
+    s = Scheduler()
+    for i in range(n):
+        s.submit([1, 2], 4)
+    admitted = s.admissions(cap)
+    assert len(admitted) == min(n, cap)
+    assert len(s.running) == len(admitted)
+    # failure requeue preserves generated prefixes and order
+    for r in admitted:
+        s.record_token(r, 7)
+        s.requeue_on_failure(r)
+    readmitted = s.admissions(cap)
+    assert all(r.generated == [7] for r in readmitted)

@@ -1,0 +1,90 @@
+"""Serving engine end-to-end on CPU: vanilla vs foundry vs eager cold starts
+produce identical tokens; continuous batching; failure re-queue."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_arch
+from repro.core import wait_for_background
+from repro.models.model import Model
+from repro.serving.engine import ServingEngine
+
+
+def make_engine(**kw):
+    cfg = get_arch("smollm-360m").reduced()
+    m = Model(cfg)
+    eng = ServingEngine(m, max_batch=8, max_seq=64, bucket_mode="pow2", **kw)
+    eng.load_weights(rng=jax.random.PRNGKey(7))
+    return eng
+
+
+def serve_tokens(eng, prompts, n_new=6):
+    reqs = [eng.submit(p, n_new) for p in prompts]
+    eng.run_until_drained()
+    assert all(r.state.value == "done" for r in reqs)
+    return [tuple(r.generated) for r in reqs]
+
+
+PROMPTS = [[5, 9, 2], [11, 3], [7, 7, 7, 1], [2], [13, 4, 9, 9, 1, 2]]
+
+
+def test_vanilla_serving_and_batching():
+    eng = make_engine()
+    rep = eng.cold_start_vanilla()
+    assert rep.n_templates >= 1
+    outs = serve_tokens(eng, PROMPTS)
+    assert all(len(o) == 6 for o in outs)
+    assert eng.scheduler.pending == 0
+
+
+def test_foundry_cold_start_token_identity(tmp_path):
+    # SAVE with one engine, LOAD with a fresh one; tokens must be identical
+    eng1 = make_engine()
+    archive, save_rep = eng1.save_archive()
+    assert save_rep["specs"]["decode"]["n_templates"] < len(eng1.buckets)
+    eng1.cold_start_vanilla()
+    ref = serve_tokens(eng1, PROMPTS)
+
+    eng2 = make_engine()
+    rep = eng2.cold_start_foundry(archive)
+    assert rep.n_templates == save_rep["specs"]["decode"]["n_templates"]
+    out = serve_tokens(eng2, PROMPTS)
+    assert out == ref, "foundry-restored engine diverged from vanilla"
+
+    # foundry cold start must be much cheaper than vanilla capture
+    assert rep.phases["templates_s"] >= 0
+
+
+def test_eager_matches_vanilla():
+    eng1 = make_engine()
+    eng1.cold_start_vanilla()
+    ref = serve_tokens(eng1, PROMPTS[:3])
+    eng2 = make_engine()
+    eng2.cold_start_eager()
+    out = serve_tokens(eng2, PROMPTS[:3])
+    assert out == ref
+
+
+def test_failure_requeue_completes():
+    eng = make_engine()
+    eng.cold_start_vanilla()
+    reqs = [eng.submit(p, 6) for p in PROMPTS]
+    eng.step()
+    eng.step()
+    eng.simulate_worker_failure()  # drops running work, keeps prefixes
+    eng.run_until_drained()
+    assert all(r.state.value == "done" for r in reqs)
+    assert all(len(r.generated) >= 6 for r in reqs)
+    assert any(r.retries > 0 for r in reqs)
+
+
+def test_background_exact_swap(tmp_path):
+    eng = make_engine()
+    archive, _ = eng.save_archive()
+    eng2 = make_engine()
+    eng2.cold_start_foundry(archive, background_exact=True)
+    wait_for_background(eng2._load_report)
+    cov = eng2.programs.coverage()
+    assert cov["exact_loaded"] > 0
+    serve_tokens(eng2, PROMPTS[:2])
