@@ -1,0 +1,44 @@
+"""Docs link check (CI): every local markdown link resolves, every referenced
+`src/repro/...` / `examples/...` / `benchmarks/...` path exists, and every
+`benchmarks/fig*.py` is indexed in README.md."""
+from __future__ import annotations
+
+import glob
+import os
+import re
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DOCS = ["README.md", "docs/architecture.md", "ROADMAP.md", "CHANGES.md"]
+
+failures = []
+
+for doc in DOCS:
+    path = os.path.join(ROOT, doc)
+    if not os.path.exists(path):
+        failures.append(f"{doc}: missing")
+        continue
+    text = open(path, encoding="utf-8").read()
+    base = os.path.dirname(path)
+    # markdown links to local files (skip http/anchors)
+    for m in re.finditer(r"\[[^\]]*\]\(([^)#h][^)#]*)\)", text):
+        target = os.path.normpath(os.path.join(base, m.group(1)))
+        if not os.path.exists(target):
+            failures.append(f"{doc}: broken link -> {m.group(1)}")
+    # inline-code repo paths
+    for m in re.finditer(
+            r"`((?:src/repro|examples|benchmarks|tests|docs)/[\w./]+?\.(?:py|md))`",
+            text):
+        if not os.path.exists(os.path.join(ROOT, m.group(1))):
+            failures.append(f"{doc}: referenced path missing -> {m.group(1)}")
+
+readme = open(os.path.join(ROOT, "README.md"), encoding="utf-8").read()
+for fig in sorted(glob.glob(os.path.join(ROOT, "benchmarks", "fig*.py"))):
+    rel = os.path.relpath(fig, ROOT)
+    if rel not in readme:
+        failures.append(f"README.md: benchmark figure not indexed -> {rel}")
+
+if failures:
+    print("\n".join(failures))
+    sys.exit(1)
+print(f"docs-links: OK ({len(DOCS)} docs checked)")

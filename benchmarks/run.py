@@ -15,7 +15,7 @@ import traceback
 
 MODULES = [
     "fig7_coldstart", "fig8_breakdown", "fig9_tpot", "fig10_pergraph",
-    "fig11_templates", "tab1_storage", "tab2_contention",
+    "fig11_templates", "fig12_rank_stamp", "tab1_storage", "tab2_contention",
 ]
 
 

@@ -6,14 +6,21 @@ Paper mechanism -> module map (see DESIGN.md §1 for the full table):
     templates.py        grouping + template dispatch (pad / exact swap)
     memory_plan.py      deterministic monotonic arena (VMM interposition)
     kernel_catalog.py   kernel binary extraction/reload ((hash, name) keyed)
-    collective_stub.py  single-host multi-device capture topology
+    collective_stub.py  single-host multi-device capture topology + peer state
+    rank_stamp.py       single-capture -> multi-rank template stamping (§4.3)
     materialize.py      SAVE
-    restore.py          LOAD
+    restore.py          LOAD (exact / stamped / fallback rebind decision)
 """
 from repro.core.archive import Archive, content_hash
+from repro.core.collective_stub import (mesh_identity, peer_groups,
+                                        rank_coords, same_topology,
+                                        stamp_compatible)
 from repro.core.kernel_catalog import GLOBAL_CATALOG, KernelCatalog, mangle
 from repro.core.materialize import CaptureSpec, foundry_save
 from repro.core.memory_plan import MemoryPlan, PlanMismatch
+from repro.core.rank_stamp import (RankDelta, ReshardingExecutable,
+                                   StampedExecutable, build_rank_deltas,
+                                   deployment_deltas, stamp_template)
 from repro.core.restore import LoadReport, foundry_load, wait_for_background
 from repro.core.templates import (ProgramSet, TopologyGroup,
                                   default_bucket_ladder, group_buckets,
@@ -26,4 +33,8 @@ __all__ = [
     "LoadReport", "foundry_load", "wait_for_background", "ProgramSet",
     "TopologyGroup", "default_bucket_ladder", "group_buckets",
     "pad_batch_arg", "jaxpr_topology_key", "topology_key",
+    "RankDelta", "ReshardingExecutable", "StampedExecutable",
+    "build_rank_deltas", "deployment_deltas", "stamp_template",
+    "mesh_identity", "peer_groups", "rank_coords", "same_topology",
+    "stamp_compatible",
 ]

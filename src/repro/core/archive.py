@@ -11,20 +11,47 @@ produce a silently-wrong engine). The binary format keeps parse time in the
 milliseconds even for hundreds of graphs (paper §5.3 moved from JSON to a
 binary format for exactly this reason; we benchmark both in
 benchmarks/tab1_storage.py).
+
+Compression codec: zstd when the ``zstandard`` package is available, stdlib
+``zlib`` otherwise. The codec is sniffed from the compressed stream's own
+magic on read (zstd frames begin with 0x28B52FFD; zlib streams with 0x78),
+so archives written under either codec load under both, and the container
+MAGIC stays stable.
 """
 from __future__ import annotations
 
 import hashlib
-import io
 import json
 import os
+import zlib
 from dataclasses import dataclass, field
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 import msgpack
-import zstandard
+
+try:
+    import zstandard
+except ImportError:  # archives remain readable/writable via stdlib zlib
+    zstandard = None
 
 MAGIC = b"FNDRYJX1"
+_ZSTD_FRAME_MAGIC = b"\x28\xb5\x2f\xfd"
+
+
+def _compress(payload: bytes, level: int) -> bytes:
+    if zstandard is not None:
+        return zstandard.ZstdCompressor(level=level).compress(payload)
+    return zlib.compress(payload, min(level, 9))
+
+
+def _decompress(comp: bytes) -> bytes:
+    if comp.startswith(_ZSTD_FRAME_MAGIC):
+        if zstandard is None:
+            raise ValueError(
+                "archive is zstd-compressed but the zstandard package is "
+                "not installed; re-save it with zlib or install zstandard")
+        return zstandard.ZstdDecompressor().decompress(comp)
+    return zlib.decompress(comp)
 
 
 def content_hash(data: bytes) -> str:
@@ -52,14 +79,13 @@ class Archive:
         payload = msgpack.packb(
             {"manifest": self.manifest, "blobs": self.blobs},
             use_bin_type=True)
-        comp = zstandard.ZstdCompressor(level=level).compress(payload)
-        return MAGIC + comp
+        return MAGIC + _compress(payload, level)
 
     @classmethod
     def from_bytes(cls, raw: bytes) -> "Archive":
         if not raw.startswith(MAGIC):
             raise ValueError("not a Foundry archive (bad magic)")
-        payload = zstandard.ZstdDecompressor().decompress(raw[len(MAGIC):])
+        payload = _decompress(raw[len(MAGIC):])
         obj = msgpack.unpackb(payload, raw=False, strict_map_key=False)
         ar = cls(manifest=obj["manifest"], blobs=obj["blobs"])
         for h in ar.blobs:

@@ -10,14 +10,23 @@ real HLO ops that are simply never executed offline. Rank identity
 (partition-id / channel assignment) is resolved by the runtime at execution,
 which is exactly the "patch only rank-dependent communication state" step.
 
-This module holds the helpers that make that explicit and testable.
+This module holds the helpers that make that explicit and testable: the
+placeholder-device capture environment, mesh-identity predicates used by the
+LOAD decision (exact / stamped / fallback; core/restore.py), and the
+rank-parameterized peer state — per-axis collective peer groups and per-rank
+mesh coordinates — that core/rank_stamp.py records at SAVE and re-derives for
+the deployment mesh at LOAD (paper §4.3: "patch only rank-dependent
+communication state").
 """
 from __future__ import annotations
 
+import math
 import os
 import subprocess
 import sys
-from typing import Optional, Sequence
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
 
 PLACEHOLDER_FLAG = "--xla_force_host_platform_device_count"
 
@@ -55,3 +64,58 @@ def mesh_identity(mesh) -> dict:
 def same_topology(identity: dict, mesh) -> bool:
     return (list(mesh.axis_names) == identity["axes"]
             and list(mesh.devices.shape) == identity["shape"])
+
+
+# ---------------------------------------------------------------------------
+# rank-parameterized peer state (paper §4.3)
+# ---------------------------------------------------------------------------
+def identity_device_count(identity: dict) -> int:
+    """Total ranks of a recorded mesh identity ({} / no mesh counts as 1)."""
+    return math.prod(identity.get("shape") or [1])
+
+
+def stamp_compatible(capture_identity: dict, mesh) -> bool:
+    """True when a capture taken under ``capture_identity`` can serve ``mesh``
+    by rank stamping instead of recompilation (paper §4.3):
+
+      * single-capture -> many ranks: a 1-device offline capture serves any
+        deployment shape (the SPMD program is rank-independent; only peer
+        tables / coordinates / buffer offsets differ per rank), or
+      * axis re-arrangement at fixed rank count (TP<->EP style switches,
+        e.g. (2,4) <-> (4,2)): same device set, different collective peers.
+
+    A genuine scale change of a multi-rank capture (8-rank capture -> 2-rank
+    deployment) is NOT stampable — the per-rank program shape itself changes —
+    and must take the compile-from-StableHLO fallback.
+    """
+    if mesh is None:
+        return False
+    n_cap = identity_device_count(capture_identity)
+    n_dep = mesh.devices.size
+    return n_cap == 1 or n_cap == n_dep
+
+
+def rank_coords(shape: Sequence[int]) -> List[tuple]:
+    """rank -> mesh coordinates, ranks enumerated in row-major mesh order."""
+    if not shape:
+        return [()]
+    grid = np.arange(math.prod(shape)).reshape(tuple(shape))
+    coords = [None] * grid.size
+    for idx in np.ndindex(grid.shape):
+        coords[int(grid[idx])] = tuple(int(i) for i in idx)
+    return coords
+
+
+def peer_groups(shape: Sequence[int], axes: Sequence[str]) -> Dict[str, List[List[int]]]:
+    """Per-mesh-axis collective peer tables: for each axis, the groups of
+    flat ranks that participate in a collective over that axis (the NCCL
+    communicator membership the paper patches per rank). Row-major rank
+    order, matching ``jax.make_mesh``'s device assignment."""
+    if not shape:
+        return {}
+    grid = np.arange(math.prod(shape)).reshape(tuple(shape))
+    out: Dict[str, List[List[int]]] = {}
+    for i, axis in enumerate(axes):
+        moved = np.moveaxis(grid, i, -1).reshape(-1, grid.shape[i])
+        out[str(axis)] = [[int(r) for r in row] for row in moved]
+    return out

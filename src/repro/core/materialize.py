@@ -11,6 +11,12 @@ portable archive containing:
     reconstruction without Python re-tracing,
   * the kernel catalog (content-hash-keyed lowered kernel artifacts),
   * the memory plan (deterministic arena layout incl. capture-window events),
+  * the rank-delta section (manifest v2, paper §4.3): the capture topology's
+    per-rank communication state — peer tables, mesh coordinates,
+    rank-relative buffer offsets — plus an index of which manifest fields
+    are rank-dependent, so LOAD can stamp a shape-compatible deployment's
+    deltas into the shared templates instead of recompiling
+    (core/rank_stamp.py),
   * a manifest binding all of it to (arch, step name, mesh shape, dtype).
 
 Phase timings are recorded for the paper's Figure 8 breakdown.
@@ -23,9 +29,11 @@ from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Sequence
 
 import jax
+import jax.export  # not re-exported by bare `import jax` on jax<=0.4.x
 
 from repro.core.archive import Archive
 from repro.core.memory_plan import MemoryPlan
+from repro.core.rank_stamp import build_rank_deltas
 from repro.core.templates import TopologyGroup, group_buckets
 from repro.core.topology import topology_key
 
@@ -124,14 +132,29 @@ def foundry_save(specs: Sequence[CaptureSpec], mesh, *,
                   f"(trace {srep['trace_s']:.2f}s export {srep['export_s']:.2f}s "
                   f"compile+ser {srep['compile_serialize_s']:.2f}s)")
 
+    capture_identity = _mesh_identity(mesh)
     ar.manifest = {
-        "version": 1,
-        "mesh": _mesh_identity(mesh),
+        "version": 2,
+        "mesh": capture_identity,
         "meta": meta or {},
         "specs": manifest_specs,
         "memory_plan": memory_plan.to_manifest() if memory_plan else None,
         "kernel_catalog": (kernel_catalog.to_manifest()
                            if kernel_catalog is not None else None),
+        # §4.3: per-rank communication state of the capture topology, plus
+        # an index of the manifest fields LOAD must re-derive per deployment
+        # rank (everything else in the archive is rank-invariant and reused
+        # byte-identically by the stamped restore path).
+        "rank_delta": {
+            "capture_ranks": [d.to_manifest() for d in
+                              build_rank_deltas(capture_identity, memory_plan)],
+            "rank_dependent_fields": [
+                "mesh",
+                "rank_delta.capture_ranks[*].coords",
+                "rank_delta.capture_ranks[*].peer_groups",
+                "memory_plan.allocations[scope=per_rank]",
+            ],
+        },
     }
     report["total_s"] = time.perf_counter() - t_all
     return ar, report

@@ -29,10 +29,20 @@ DEFAULT_ALIGN = 512
 
 @dataclass(frozen=True)
 class Allocation:
+    """One arena reservation.
+
+    ``scope`` distinguishes rank-invariant state from rank-relative state
+    (paper §4.3): "global" allocations (weights replicas, IO staging) have the
+    same size on every rank; "per_rank" allocations (sharded KV pool,
+    collective staging buffers) are recorded at their full capture-topology
+    size and divided across deployment ranks by ``MemoryPlan.rank_extents`` —
+    the buffer-offset half of a RankDelta.
+    """
     name: str
     offset: int
     size: int
     phase: str  # "init" | "capture"
+    scope: str = "global"  # "global" | "per_rank"
 
     @property
     def end(self) -> int:
@@ -59,13 +69,17 @@ class MemoryPlan:
         assert phase in ("init", "capture")
         self._phase = phase
 
-    def alloc(self, name: str, size: int) -> int:
-        """Reserve the next aligned offset. Returns the absolute address."""
+    def alloc(self, name: str, size: int, scope: str = "global") -> int:
+        """Reserve the next aligned offset. Returns the absolute address.
+        ``scope="per_rank"`` marks the allocation rank-relative (sharded
+        across deployment ranks; see ``rank_extents``)."""
         size = int(size)
         if size < 0:
             raise ValueError(f"negative allocation {name}: {size}")
+        if scope not in ("global", "per_rank"):
+            raise ValueError(f"unknown allocation scope {scope!r}")
         off = self._cursor
-        a = Allocation(name, off, size, self._phase)
+        a = Allocation(name, off, size, self._phase, scope)
         self.allocations.append(a)
         pad = (-size) % self.align
         self._cursor = off + size + pad
@@ -81,6 +95,32 @@ class MemoryPlan:
 
     def capture_window(self) -> List[Allocation]:
         return [a for a in self.allocations if a.phase == "capture"]
+
+    # ---- rank-relative view (paper §4.3) ------------------------------
+    def rank_extents(self, n_ranks: int) -> List[dict]:
+        """Per-rank layout for an ``n_ranks`` deployment of this (capture)
+        plan: "per_rank" allocations contribute a 1/n_ranks shard (aligned
+        up), "global" allocations their full size. Offsets are re-packed in
+        recorded order, so every rank gets the same deterministic layout —
+        the comm-buffer-offset table a RankDelta stamps at LOAD."""
+        if n_ranks < 1:
+            raise ValueError(f"n_ranks must be >= 1, got {n_ranks}")
+        out, cursor = [], 0
+        for a in self.allocations:
+            size = a.size
+            if a.scope == "per_rank":
+                size = -(-size // n_ranks)  # ceil division: shard per rank
+            out.append({"name": a.name, "offset": cursor, "size": size,
+                        "scope": a.scope})
+            cursor += size + (-size) % self.align
+        return out
+
+    def rank_extent_total(self, n_ranks: int) -> int:
+        ext = self.rank_extents(n_ranks)
+        if not ext:
+            return 0
+        last = ext[-1]
+        return last["offset"] + last["size"]
 
     # ---- LOAD-side ----------------------------------------------------
     def preallocate(self) -> Tuple[int, int]:
@@ -113,7 +153,7 @@ class MemoryPlan:
             raise PlanMismatch(
                 f"allocation #{i} mismatch: recorded ({e.name}, {e.size}) "
                 f"vs requested ({name}, {size}) — SAVE/LOAD sequences diverge")
-        a = Allocation(name, e.offset, e.size, e.phase)
+        a = Allocation(name, e.offset, e.size, e.phase, e.scope)
         self.allocations.append(a)
         self._cursor = max(self._cursor, e.end)
         return self.base + e.offset

@@ -15,12 +15,20 @@ hot-swap them into the ProgramSet — template construction and on-demand
 specialization run concurrently exactly as in the paper (§4.2.1), except the
 "driver contention" (here: compiler) stays off the serving path entirely.
 
-Mesh rebinding (paper §4.2.2): the archive stores the mesh *shape*; LOAD
-binds programs to the deployment's concrete device mesh. If the runtime
-topology differs from the capture topology, template deserialization falls
-back to compile-from-StableHLO (documented; on a real fleet the per-topology
-compile happens once per rollout and is shared by all ranks of the SPMD
-program — the single-capture/many-ranks economics the paper targets).
+Mesh rebinding (paper §4.2.2 + §4.3): the archive stores the capture mesh
+identity; LOAD binds programs to the deployment's concrete device mesh by a
+three-way decision (docs/architecture.md has the full diagram):
+
+    exact     deployment mesh == capture mesh: deserialize templates,
+              zero trace, zero compile;
+    stamped   shape-compatible rebind (1-rank capture -> any deployment, or
+              same rank count with re-arranged axes, e.g. TP<->EP): reuse the
+              template program byte-identically and stamp only rank-dependent
+              state — peer tables, mesh coordinates, rank-relative buffer
+              offsets (core/rank_stamp.py). Still zero compile;
+    fallback  incompatible topology (true scale change of a multi-rank
+              capture): compile-from-StableHLO, counted in
+              ``LoadReport.fallback_compiles``.
 """
 from __future__ import annotations
 
@@ -31,17 +39,47 @@ from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Sequence
 
 import jax
+import jax.export  # not re-exported by bare `import jax` on jax<=0.4.x
 
 from repro.core.archive import Archive
+from repro.core.collective_stub import (mesh_identity, same_topology,
+                                        stamp_compatible)
 from repro.core.memory_plan import MemoryPlan
+from repro.core.rank_stamp import (ReshardingExecutable, deployment_deltas,
+                                   stamp_template)
 from repro.core.templates import ProgramSet, TopologyGroup
 
 
 @dataclass
 class LoadReport:
+    """What LOAD did and what it cost.
+
+    Fields:
+        phases            phase name -> seconds. Keys not prefixed
+                          "background" are on the cold-start critical path
+                          (parse_s, prealloc_s, kernel_load_s, rank_delta_s,
+                          templates_s); background_spawn_s only covers thread
+                          spawn, not the background compiles themselves.
+        restore_path      the mesh-rebind decision taken for this archive:
+                          "exact" | "stamped" | "fallback" (module docstring).
+        n_templates       topology-group templates processed.
+        n_buckets         total capture buckets covered by those templates.
+        rank_stamped      number of (template x deployment-rank) stampings
+                          performed on the stamped path — every rank's
+                          ProgramSet reconstructed without touching the
+                          compiler. 0 on the exact path.
+        fallback_compiles critical-path compile-from-StableHLO events; the
+                          template economics are lost for each one. Stays 0
+                          on exact and shape-compatible stamped loads.
+        background_exact  exact-bucket executables realized off the critical
+                          path by worker threads (join via
+                          ``wait_for_background``).
+    """
     phases: Dict[str, float] = field(default_factory=dict)
+    restore_path: str = "exact"
     n_templates: int = 0
     n_buckets: int = 0
+    rank_stamped: int = 0
     fallback_compiles: int = 0
     background_exact: int = 0
 
@@ -65,13 +103,33 @@ def foundry_load(archive: Archive, mesh, *,
                  background_exact: bool = True,
                  background_threads: int = 2,
                  kernel_catalog=None,
+                 allow_stamping: bool = True,
                  verbose: bool = False) -> tuple[Dict[str, ProgramSet], LoadReport, Optional[MemoryPlan]]:
     """Restore executables from an archive. Returns
-    ({spec_name: ProgramSet}, report, load_side_memory_plan)."""
+    ({spec_name: ProgramSet}, report, load_side_memory_plan).
+
+    ``allow_stamping=False`` disables the rank-stamping rebind path, forcing
+    mesh mismatches down the compile-from-StableHLO fallback (the paper's
+    no-stamping ablation; benchmarks/fig12_rank_stamp.py)."""
     rep = LoadReport()
     t0 = time.perf_counter()
     manifest = archive.manifest
     rep.phases["parse_s"] = time.perf_counter() - t0
+
+    # --- mesh-rebind decision (module docstring: exact/stamped/fallback) --
+    capture_identity = manifest.get("mesh") or {"axes": [], "shape": []}
+    if mesh is None or same_topology(capture_identity, mesh):
+        rep.restore_path = "exact"
+    elif allow_stamping and stamp_compatible(capture_identity, mesh):
+        rep.restore_path = "stamped"
+    else:
+        rep.restore_path = "fallback"
+
+    rank_deltas = None
+    if rep.restore_path == "stamped":
+        t0 = time.perf_counter()
+        rank_deltas = deployment_deltas(mesh, manifest)
+        rep.phases["rank_delta_s"] = time.perf_counter() - t0
 
     # --- memory plan: preallocate + capture-window replay -----------------
     t0 = time.perf_counter()
@@ -94,27 +152,40 @@ def foundry_load(archive: Archive, mesh, *,
     pending_exact: List[tuple] = []
     for name in names:
         spec_m = manifest["specs"][name]
+        donate = spec_m.get("donate_argnums")
         groups = [TopologyGroup.from_manifest(g) for g in spec_m["groups"]]
         ps = ProgramSet(groups)
         rep.n_buckets += len(ps.buckets)
         for g in groups:
             exe = None
             if g.executable_blob:
-                try:
-                    exe = _deserialize_template(
-                        archive.get_blob(g.executable_blob))
-                except Exception:
-                    # topology mismatch: rebind via compile-from-StableHLO
+                if rep.restore_path == "fallback":
                     rep.fallback_compiles += 1
-                    exe = _compile_from_export(
+                    exe = ReshardingExecutable(_compile_from_export(
                         archive, g.bucket_export_blobs[g.template_bucket],
-                        spec_m, mesh)
+                        mesh, capture_identity), donate)
+                else:
+                    try:
+                        exe = _deserialize_template(
+                            archive.get_blob(g.executable_blob))
+                        if rep.restore_path == "stamped":
+                            exe = stamp_template(exe, rank_deltas,
+                                                 capture_identity, mesh,
+                                                 donate)
+                            rep.rank_stamped += len(rank_deltas)
+                    except Exception:
+                        # capture devices unavailable here: last-resort
+                        # rebind via compile-from-StableHLO
+                        rep.fallback_compiles += 1
+                        exe = ReshardingExecutable(_compile_from_export(
+                            archive, g.bucket_export_blobs[g.template_bucket],
+                            mesh, capture_identity), donate)
             if exe is not None:
                 ps.set_template(g.key, exe)
             rep.n_templates += 1
             for b in g.buckets:
                 if b != g.template_bucket and b in g.bucket_export_blobs:
-                    pending_exact.append((ps, g, b))
+                    pending_exact.append((ps, g, b, donate))
         program_sets[name] = ps
     rep.phases["templates_s"] = time.perf_counter() - t0
 
@@ -123,11 +194,14 @@ def foundry_load(archive: Archive, mesh, *,
         t_bg = time.perf_counter()
 
         def worker(chunk):
-            for ps, g, b in chunk:
+            for ps, g, b, donate in chunk:
                 try:
                     exe = _compile_from_export(
                         archive, g.bucket_export_blobs[b],
-                        manifest["specs"], mesh)
+                        mesh, capture_identity)
+                    if rep.restore_path != "exact":
+                        # exact exes must accept deployment-sharded args too
+                        exe = ReshardingExecutable(exe, donate)
                     ps.set_exact(b, exe)
                     rep.background_exact += 1
                 except Exception:
@@ -143,22 +217,44 @@ def foundry_load(archive: Archive, mesh, *,
         rep.phases["background_spawn_s"] = time.perf_counter() - t_bg
 
     if verbose:
-        print(f"[LOAD] {rep.n_templates} templates over {rep.n_buckets} "
-              f"buckets in {rep.critical_path_s * 1e3:.1f} ms "
+        print(f"[LOAD:{rep.restore_path}] {rep.n_templates} templates over "
+              f"{rep.n_buckets} buckets in {rep.critical_path_s * 1e3:.1f} ms "
               f"(parse {rep.phases['parse_s']*1e3:.1f} ms, templates "
               f"{rep.phases['templates_s']*1e3:.1f} ms, "
+              f"rank_stamped={rep.rank_stamped}, "
               f"fallback_compiles={rep.fallback_compiles})")
     return program_sets, rep, plan
 
 
-def _compile_from_export(archive: Archive, blob_hash: str, spec_m, mesh):
+def _compile_from_export(archive: Archive, blob_hash: str, mesh,
+                         capture_identity: Optional[dict] = None):
     """Exact-bucket reconstruction: deserialize pre-lowered StableHLO and
     compile — no Python tracing of the model (the paper's 'graph construction
-    via driver APIs', 2-3x cheaper than stream capture; Figure 10)."""
+    via driver APIs', 2-3x cheaper than stream capture; Figure 10).
+
+    A jax.export program is pinned to its capture-time device count. When the
+    deployment mesh's count differs, the program is bound onto a
+    capture-shaped submesh of the deployment (serving from a subset of ranks;
+    a true re-shape needs a fresh SAVE for that topology). A deployment
+    smaller than the capture cannot host the program at all and raises."""
     exp = jax.export.deserialize(bytearray(archive.get_blob(blob_hash)))
+    call_mesh = mesh
+    n_exp = getattr(exp, "nr_devices", 1)
+    if mesh is not None and n_exp != mesh.devices.size and capture_identity:
+        devs = mesh.devices.reshape(-1)[:n_exp]
+        if len(devs) < n_exp:
+            raise RuntimeError(
+                f"archive was captured for {n_exp} ranks but the deployment "
+                f"mesh has only {mesh.devices.size}; a multi-rank capture "
+                f"cannot be scaled down — re-run SAVE for this topology")
+        import numpy as np
+        from jax.sharding import Mesh
+        shape = capture_identity.get("shape") or [n_exp]
+        call_mesh = Mesh(np.asarray(devs).reshape(tuple(shape)),
+                         tuple(capture_identity.get("axes") or ["devices"]))
     fn = jax.jit(exp.call)
     flat = [jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=s)
-            for a, s in zip(exp.in_avals, _exp_shardings(exp, mesh))]
+            for a, s in zip(exp.in_avals, _exp_shardings(exp, call_mesh))]
     args, kwargs = jax.tree.unflatten(exp.in_tree, flat)
     return fn.lower(*args, **kwargs).compile()
 
@@ -172,5 +268,19 @@ def _exp_shardings(exp, mesh):
 
 
 def wait_for_background(rep: LoadReport, timeout: float = 300.0):
+    """Join the background exact-bucket worker threads of a LOAD.
+
+    Join contract: ``foundry_load`` returns while daemon workers may still be
+    hot-swapping exact executables into the returned ProgramSets. Serving
+    does NOT need this join — every bucket is already pad-servable through
+    its (possibly stamped) template, and ``ProgramSet`` hot-swap is
+    lock-protected. Call it only when you need completion of exact
+    realization: deterministic tests, benchmarks measuring
+    ``background_exact``, or before process exit if archive file handles
+    must be released. ``timeout`` is per thread (seconds); on timeout the
+    thread keeps running as a daemon and any buckets it has not yet swapped
+    simply stay pad-served — there is no error and no partial state, so the
+    call is safe to repeat.
+    """
     for t in getattr(rep, "_bg_threads", []):
         t.join(timeout)

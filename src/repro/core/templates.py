@@ -15,7 +15,11 @@ paper kills with templates. Here:
   * exact-bucket executables are realized on demand (or in the background)
     from the archived pre-lowered StableHLO — no Python re-trace — and
     hot-swapped in, eliminating the padding waste exactly like the paper's
-    one-time on-demand template specialization at replay time.
+    one-time on-demand template specialization at replay time;
+  * a template may be a rank-STAMPED rebind of a capture taken on a
+    different (shape-compatible) mesh (core/rank_stamp.py, paper §4.3);
+    dispatch through such a template is counted separately in
+    ``stats["stamped_dispatches"]`` and reported as path "stamped".
 """
 from __future__ import annotations
 
@@ -98,7 +102,7 @@ class ProgramSet:
         self.exact: Dict[int, Any] = {}           # bucket -> executable
         self._lock = threading.Lock()
         self.stats = {"pad_dispatches": 0, "exact_dispatches": 0,
-                      "template_dispatches": 0}
+                      "template_dispatches": 0, "stamped_dispatches": 0}
 
     # -- population -----------------------------------------------------
     def set_template(self, key: str, executable):
@@ -119,7 +123,8 @@ class ProgramSet:
 
     def lookup(self, n_active: int) -> Tuple[int, Any, str]:
         """Returns (execution_bucket, executable, path) where path is one of
-        "exact" | "template" (padded to the group template)."""
+        "exact" | "template" (padded to the group template) | "stamped"
+        (template is a rank-stamped cross-mesh rebind)."""
         b = self.pick_bucket(n_active)
         with self._lock:
             if b in self.exact:
@@ -128,11 +133,15 @@ class ProgramSet:
             g = self.groups[self.bucket_to_key[b]]
             t = self.templates.get(g.key)
             if t is not None:
+                path = "template"
+                if getattr(t, "is_stamped", False):
+                    path = "stamped"
+                    self.stats["stamped_dispatches"] += 1
                 if g.template_bucket == b:
                     self.stats["template_dispatches"] += 1
-                    return b, t, "template"
+                    return b, t, path
                 self.stats["pad_dispatches"] += 1
-                return g.template_bucket, t, "template"
+                return g.template_bucket, t, path
         raise RuntimeError(f"no executable available for bucket {b}")
 
     def coverage(self) -> dict:

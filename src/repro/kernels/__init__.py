@@ -1,3 +1,8 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas kernel layer: decode attention, MoE grouped GEMM, SSM scan.
+
+OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY for compute
+hot-spots the paper itself optimizes with a custom kernel; every kernel has
+a pure-jnp oracle in ref.py and is validated in interpret mode on CPU
+(tests/test_kernels.py). ops.py routes through the kernel catalog so SAVE
+archives the lowered artifacts (core/kernel_catalog.py).
+"""

@@ -1,6 +1,3 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-
 """Multi-pod dry-run: lower + compile every (arch x input-shape x mesh) cell.
 
 Proves the distribution config is coherent without real hardware: the SPMD
@@ -16,6 +13,9 @@ Per cell it records memory_analysis, cost_analysis, and the HLO-derived
 roofline terms (repro.analysis.roofline) into a JSON report consumed by
 EXPERIMENTS.md §Dry-run / §Roofline.
 """
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 import argparse
 import json
 import time
@@ -81,6 +81,8 @@ def run_cell(arch: str, shape_name: str, mesh, *, verbose: bool = True,
 
     ma = compiled.memory_analysis()
     ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):  # jax<=0.4.x: one dict per program
+        ca = ca[0] if ca else {}
     rec.update({
         "status": "ok",
         "lower_s": round(t_lower, 2),

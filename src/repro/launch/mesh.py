@@ -39,6 +39,25 @@ def make_host_mesh() -> Mesh:
     return Mesh(np.asarray(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
 
 
+def make_capture_mesh() -> Mesh:
+    """The paper's single-device offline capture topology (§4.3): a (1, 1)
+    ("data", "model") mesh on this host's first device. Archives captured on
+    it are rank-stampable onto any shape-compatible deployment mesh
+    (core/rank_stamp.py)."""
+    return make_host_mesh()
+
+
+def make_tp_mesh(n_model: int, n_data: int = 1) -> Mesh:
+    """Tensor-parallel deployment mesh: (n_data, n_model) over
+    ("data", "model")."""
+    return jax.make_mesh((n_data, n_model), ("data", "model"))
+
+
+def mesh_device_count(mesh: Optional[Mesh]) -> int:
+    """Total ranks of a deployment mesh (None -> 1: single-process serving)."""
+    return 1 if mesh is None else int(mesh.devices.size)
+
+
 # Default logical-axis -> mesh-axis candidates. Each entry is a tuple of mesh
 # axes the logical axis WANTS to occupy; axes missing from the mesh or failing
 # divisibility are dropped (in order), falling back to replication.

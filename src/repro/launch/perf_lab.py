@@ -1,6 +1,3 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-
 """§Perf hillclimb driver: lower one (arch x shape) cell under a tuning-flag
 configuration and print the roofline terms.
 
@@ -9,6 +6,9 @@ configuration and print the roofline terms.
 
 Each EXPERIMENTS.md §Perf iteration is one baseline/flagged pair of runs.
 """
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 import argparse
 import json
 

@@ -220,7 +220,7 @@ class Model:
             if name == "D":
                 return jnp.ones_like(leaf)
             return leaf
-        params = jax.tree.map_with_path(fix, params)
+        params = jax.tree_util.tree_map_with_path(fix, params)
         if self.ctx.mesh is not None:
             params = jax.tree.map(jax.device_put, params, self.param_shardings())
         return params

@@ -1,15 +1,25 @@
 """Serving engine: bucketed decode + continuous batching + Foundry cold start.
 
-Three cold-start paths (the paper's Figure 7/8 comparison):
-  * "vanilla"  — trace+lower+compile every capture bucket up front (vLLM with
-                 CUDA graphs: full warmup + stream capture);
-  * "foundry"  — LOAD an archive: templates restored with zero compile, all
-                 buckets pad-served immediately, exact buckets hot-swap in the
-                 background;
-  * "eager"    — no capture; each bucket compiles lazily on first use (vLLM
-                 without CUDA graphs: fast start, degraded serving).
+Four cold-start paths (the paper's Figure 7/8 comparison, plus §4.3):
+  * "vanilla"          — trace+lower+compile every capture bucket up front
+                         (vLLM with CUDA graphs: full warmup + stream
+                         capture);
+  * "foundry"          — LOAD an archive captured on THIS topology: templates
+                         restored with zero compile, all buckets pad-served
+                         immediately, exact buckets hot-swap in the
+                         background;
+  * "foundry-stamped"  — LOAD an archive captured on a DIFFERENT but
+                         shape-compatible topology (1-rank offline capture,
+                         or a TP<->EP re-arrangement): the shared templates
+                         are reused byte-identically and only rank-dependent
+                         communication state is stamped per deployment rank
+                         (core/rank_stamp.py). Still zero compile; reported
+                         automatically when the LOAD takes the stamped path;
+  * "eager"            — no capture; each bucket compiles lazily on first use
+                         (vLLM without CUDA graphs: fast start, degraded
+                         serving).
 
-The decode hot loop is identical in all three — only program provenance
+The decode hot loop is identical in all of them — only program provenance
 differs — so TPOT preservation (Figure 9) is measured on the same code path.
 """
 from __future__ import annotations
@@ -34,10 +44,29 @@ from repro.serving.scheduler import Request, Scheduler
 
 @dataclass
 class ColdStartReport:
+    """How this engine became servable and what it cost.
+
+    Fields:
+        mode              cold-start path actually taken: "vanilla" |
+                          "foundry" | "foundry-stamped" | "eager" (module
+                          docstring). "foundry-stamped" means the archive was
+                          captured on a different, shape-compatible topology
+                          and was rank-stamped rather than recompiled.
+        phases            phase name -> seconds; for foundry modes these are
+                          the LoadReport phases (core/restore.py).
+        n_buckets         capture buckets this engine dispatches over.
+        n_templates       topology-group templates backing those buckets.
+        rank_stamped      (template x rank) stampings performed by the LOAD;
+                          0 for non-stamped modes.
+        fallback_compiles critical-path compiles the LOAD could not avoid;
+                          0 on exact and shape-compatible stamped loads.
+    """
     mode: str
     phases: Dict[str, float] = field(default_factory=dict)
     n_buckets: int = 0
     n_templates: int = 0
+    rank_stamped: int = 0
+    fallback_compiles: int = 0
 
     @property
     def total_s(self) -> float:
@@ -91,7 +120,7 @@ class ServingEngine:
         t0 = time.perf_counter()
         self.params = params if params is not None else self.model.init(
             rng if rng is not None else jax.random.PRNGKey(0))
-        for path, leaf in jax.tree.flatten_with_path(self.params)[0]:
+        for path, leaf in jax.tree_util.tree_flatten_with_path(self.params)[0]:
             self.memory_plan.alloc(
                 "params" + jax.tree_util.keystr(path),
                 leaf.size * leaf.dtype.itemsize)
@@ -140,11 +169,22 @@ class ServingEngine:
 
     def cold_start_foundry(self, archive: Archive,
                            background_exact: bool = True,
+                           allow_stamping: bool = True,
                            verbose: bool = False) -> ColdStartReport:
-        rep = ColdStartReport("foundry", n_buckets=len(self.buckets))
+        """LOAD ``archive`` and become servable. The report's mode is
+        "foundry" when the archive was captured on this engine's topology
+        and "foundry-stamped" when LOAD rank-stamped a shape-compatible
+        capture onto it (``allow_stamping=False`` forces mesh mismatches
+        down the compile-from-StableHLO fallback instead)."""
         progs, load_rep, plan = foundry_load(
             archive, self.ctx.mesh,
-            background_exact=background_exact, verbose=verbose)
+            background_exact=background_exact,
+            allow_stamping=allow_stamping, verbose=verbose)
+        mode = ("foundry-stamped" if load_rep.restore_path == "stamped"
+                else "foundry")
+        rep = ColdStartReport(mode, n_buckets=len(self.buckets),
+                              rank_stamped=load_rep.rank_stamped,
+                              fallback_compiles=load_rep.fallback_compiles)
         self.programs = progs["decode"]
         rep.phases.update(load_rep.phases)
         rep.n_templates = load_rep.n_templates
@@ -167,6 +207,10 @@ class ServingEngine:
 
     def save_archive(self, path: Optional[str] = None, **kw):
         """Offline SAVE for this engine's capture set."""
+        if self.pool is None:
+            # register the KV pool's (rank-relative) extents in the memory
+            # plan so the archive's RankDelta section records them (§4.3)
+            self._init_pool()
         ar, rep = foundry_save([self.capture_spec()], self.ctx.mesh,
                                memory_plan=self.memory_plan,
                                meta={"arch": self.cfg.name,

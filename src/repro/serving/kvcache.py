@@ -48,10 +48,13 @@ class KVCachePool:
             dims = [i for i, (x, y) in enumerate(zip(a.shape, b.shape)) if x != y]
             self._bdims.append(dims[0] if dims else None)
         if memory_plan is not None:
-            for path, sd in jax.tree.flatten_with_path(
+            # KV state is sharded across the model axis at deployment: record
+            # it rank-relative so a stamped LOAD can re-derive each rank's
+            # buffer extents from a single-rank capture (paper §4.3).
+            for path, sd in jax.tree_util.tree_flatten_with_path(
                     model.cache_specs(max_batch, max_seq))[0]:
                 memory_plan.alloc("kv_pool" + jax.tree_util.keystr(path),
-                                  _leaf_bytes(sd))
+                                  _leaf_bytes(sd), scope="per_rank")
 
     # ------------------------------------------------------------------
     @property

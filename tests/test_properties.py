@@ -3,7 +3,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests require the hypothesis package")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import Archive, MemoryPlan, group_buckets, topology_key
 from repro.models.layers import _moe_row, flash_attention
