@@ -1,19 +1,40 @@
 """LOAD: online graph reconstruction from a Foundry archive (paper Figure 4,
 right side).
 
-Critical-path work:
-  1. parse the archive (binary format -> ms, paper §5.3),
-  2. preallocate the memory-plan extent + replay capture-window allocations,
-  3. prime the kernel catalog (binaries resolvable by (hash, name) without
-     warmup),
-  4. deserialize each topology group's template executable
-     (zero trace, zero compile),
-and the engine is servable: every bucket dispatches through its group
-template by batch padding. Off the critical path, worker threads realize
-exact-bucket executables from the archived StableHLO (no Python re-trace) and
-hot-swap them into the ProgramSet — template construction and on-demand
-specialization run concurrently exactly as in the paper (§4.2.1), except the
-"driver contention" (here: compiler) stays off the serving path entirely.
+Critical-path work, run as a pipelined stage graph:
+
+    parse ─▶ rebind decision ─▶ rank deltas
+                 │
+                 ├─▶ [fetch worker]   blob read + decompress + verify
+                 │        │                    (stage 1, thread)
+                 ├─▶ prealloc          overlaps stage 1
+                 ├─▶ kernel prime      overlaps stage 1
+                 │        │
+                 │   [deserialize worker]  pickle + deserialize_and_load
+                 │        │                    (stage 2, thread)
+                 └─▶ install           stamp + hot-swap into ProgramSet
+                                           (stage 3, caller thread)
+
+The stages are connected by bounded queues (``pipeline_depth`` groups in
+flight), so group k's template is installed — and its buckets servable —
+while group k+1 deserializes and group k+2's blob is still being fetched.
+With a lazy v2 archive (core/archive.py) the fetch stage is also where the
+blob is decompressed for the first (and only) time; concurrent LOADs of one
+shared archive de-duplicate that work through the archive's blob cache.
+``LoadReport.phases`` keeps the same keys as the sequential implementation
+(parse_s, prealloc_s, kernel_load_s, rank_delta_s, templates_s): overlap
+shows up as a smaller ``templates_s``, and per-stage busy time is reported
+separately in ``LoadReport.pipeline``.
+
+Off the critical path, worker threads realize exact-bucket executables from
+the archived StableHLO (no Python re-trace) and hot-swap them into the
+ProgramSet — template construction and on-demand specialization run
+concurrently exactly as in the paper (§4.2.1), except the "driver
+contention" (here: compiler) stays off the serving path entirely. A
+background compile that fails is recorded in
+``LoadReport.background_errors`` (count) and ``background_first_error``
+(first message) — never swallowed silently; the affected bucket simply
+stays pad-served through its template.
 
 Mesh rebinding (paper §4.2.2 + §4.3): the archive stores the capture mesh
 identity; LOAD binds programs to the deployment's concrete device mesh by a
@@ -33,6 +54,7 @@ three-way decision (docs/architecture.md has the full diagram):
 from __future__ import annotations
 
 import pickle
+import queue
 import threading
 import time
 from dataclasses import dataclass, field
@@ -60,6 +82,11 @@ class LoadReport:
                           (parse_s, prealloc_s, kernel_load_s, rank_delta_s,
                           templates_s); background_spawn_s only covers thread
                           spawn, not the background compiles themselves.
+                          templates_s is the caller-thread wall time of the
+                          install stage — fetch/deserialize work hidden under
+                          prealloc/kernel-prime by the pipeline shrinks it.
+        pipeline          per-stage busy seconds of the template stage graph
+                          (fetch_s, deserialize_s, install_s) + "depth".
         restore_path      the mesh-rebind decision taken for this archive:
                           "exact" | "stamped" | "fallback" (module docstring).
         n_templates       topology-group templates processed.
@@ -74,14 +101,23 @@ class LoadReport:
         background_exact  exact-bucket executables realized off the critical
                           path by worker threads (join via
                           ``wait_for_background``).
+        background_errors background exact-bucket realizations that FAILED.
+                          The bucket stays pad-served through its template,
+                          but a systematically failing compile must be
+                          visible: happy-path tests assert this is 0.
+        background_first_error
+                          message of the first background failure (or None).
     """
     phases: Dict[str, float] = field(default_factory=dict)
+    pipeline: Dict[str, float] = field(default_factory=dict)
     restore_path: str = "exact"
     n_templates: int = 0
     n_buckets: int = 0
     rank_stamped: int = 0
     fallback_compiles: int = 0
     background_exact: int = 0
+    background_errors: int = 0
+    background_first_error: Optional[str] = None
 
     @property
     def critical_path_s(self) -> float:
@@ -97,6 +133,115 @@ def _deserialize_template(blob: bytes):
     return se.deserialize_and_load(payload)
 
 
+# ---------------------------------------------------------------------------
+# template stage graph
+# ---------------------------------------------------------------------------
+@dataclass
+class _TemplateJob:
+    """One topology group flowing through the LOAD pipeline."""
+    ps: ProgramSet
+    group: TopologyGroup
+    donate: Any
+    blob_hash: Optional[str]      # blob stage 1 must fetch (None: no exe)
+    deserialize: bool             # stage 2 work (False on the fallback path)
+    blob: Optional[bytes] = None  # stage 1 -> 2
+    exe: Any = None               # stage 2 -> 3
+    error: Optional[BaseException] = None
+
+
+_DONE = object()
+
+
+class _TemplatePipeline:
+    """fetch (thread) -> deserialize (thread) -> install (caller).
+
+    Bounded queues cap in-flight groups at ``depth``; jobs come out in
+    submission order per stage, so installation order (and therefore
+    LoadReport accounting) is deterministic. Stage exceptions ride on the
+    job — the caller decides (deserialize failure -> fallback compile),
+    nothing is swallowed.
+    """
+
+    def __init__(self, archive: Archive, jobs: Sequence[_TemplateJob],
+                 depth: int = 4):
+        self.archive = archive
+        self.jobs = list(jobs)
+        self.busy = {"fetch_s": 0.0, "deserialize_s": 0.0, "install_s": 0.0}
+        self._fetched: "queue.Queue" = queue.Queue(maxsize=max(1, depth))
+        self._ready: "queue.Queue" = queue.Queue(maxsize=max(1, depth))
+        self._aborted = False
+        self._threads = [
+            threading.Thread(target=self._fetch_stage, daemon=True),
+            threading.Thread(target=self._deserialize_stage, daemon=True),
+        ]
+
+    def start(self) -> "_TemplatePipeline":
+        for t in self._threads:
+            t.start()
+        return self
+
+    def abort(self):
+        """Unblock and wind down the stage threads after a consumer-side
+        failure (without this they would sit on the bounded queues forever,
+        pinning fetched blobs)."""
+        self._aborted = True
+
+    def _put(self, q: "queue.Queue", item) -> bool:
+        """Bounded put that gives up once the pipeline is aborted."""
+        while not self._aborted:
+            try:
+                q.put(item, timeout=0.05)
+                return True
+            except queue.Full:
+                continue
+        return False
+
+    def _fetch_stage(self):
+        for job in self.jobs:
+            if self._aborted:
+                return
+            t0 = time.perf_counter()
+            try:
+                if job.blob_hash is not None:
+                    job.blob = self.archive.get_blob(job.blob_hash)
+            except BaseException as e:
+                job.error = e
+            self.busy["fetch_s"] += time.perf_counter() - t0
+            if not self._put(self._fetched, job):
+                return
+        self._put(self._fetched, _DONE)
+
+    def _deserialize_stage(self):
+        while True:
+            try:
+                job = self._fetched.get(timeout=0.05)
+            except queue.Empty:
+                if self._aborted:
+                    return
+                continue
+            if job is _DONE:
+                self._put(self._ready, _DONE)
+                return
+            t0 = time.perf_counter()
+            if job.error is None and job.deserialize and job.blob is not None:
+                try:
+                    job.exe = _deserialize_template(job.blob)
+                except BaseException as e:
+                    job.error = e
+            job.blob = None  # stage 2 owns the last reference to the bytes
+            self.busy["deserialize_s"] += time.perf_counter() - t0
+            if not self._put(self._ready, job):
+                return
+
+    def __iter__(self):
+        """Yield jobs in submission order as stage 2 completes them."""
+        while True:
+            job = self._ready.get()
+            if job is _DONE:
+                return
+            yield job
+
+
 def foundry_load(archive: Archive, mesh, *,
                  make_args: Optional[Dict[str, Callable[[int], tuple]]] = None,
                  spec_names: Optional[Sequence[str]] = None,
@@ -104,13 +249,16 @@ def foundry_load(archive: Archive, mesh, *,
                  background_threads: int = 2,
                  kernel_catalog=None,
                  allow_stamping: bool = True,
+                 pipeline_depth: int = 4,
                  verbose: bool = False) -> tuple[Dict[str, ProgramSet], LoadReport, Optional[MemoryPlan]]:
     """Restore executables from an archive. Returns
     ({spec_name: ProgramSet}, report, load_side_memory_plan).
 
     ``allow_stamping=False`` disables the rank-stamping rebind path, forcing
     mesh mismatches down the compile-from-StableHLO fallback (the paper's
-    no-stamping ablation; benchmarks/fig12_rank_stamp.py)."""
+    no-stamping ablation; benchmarks/fig12_rank_stamp.py).
+    ``pipeline_depth`` bounds how many topology groups the LOAD stage graph
+    keeps in flight (module docstring); 0 degrades to depth 1."""
     rep = LoadReport()
     t0 = time.perf_counter()
     manifest = archive.manifest
@@ -131,24 +279,11 @@ def foundry_load(archive: Archive, mesh, *,
         rank_deltas = deployment_deltas(mesh, manifest)
         rep.phases["rank_delta_s"] = time.perf_counter() - t0
 
-    # --- memory plan: preallocate + capture-window replay -----------------
-    t0 = time.perf_counter()
-    plan = None
-    if manifest.get("memory_plan"):
-        plan = MemoryPlan.for_load(manifest["memory_plan"])
-        plan.preallocate()
-    rep.phases["prealloc_s"] = time.perf_counter() - t0
-
-    # --- kernel catalog prime ---------------------------------------------
-    t0 = time.perf_counter()
-    if kernel_catalog is not None and manifest.get("kernel_catalog"):
-        kernel_catalog.prime(manifest["kernel_catalog"], archive)
-    rep.phases["kernel_load_s"] = time.perf_counter() - t0
-
-    # --- templates ---------------------------------------------------------
+    # --- enumerate template jobs and start the stage graph ----------------
+    # (fetch + deserialize overlap the prealloc / kernel-prime phases below)
     program_sets: Dict[str, ProgramSet] = {}
     names = spec_names or list(manifest["specs"])
-    t0 = time.perf_counter()
+    jobs: List[_TemplateJob] = []
     pending_exact: List[tuple] = []
     for name in names:
         spec_m = manifest["specs"][name]
@@ -157,41 +292,77 @@ def foundry_load(archive: Archive, mesh, *,
         ps = ProgramSet(groups)
         rep.n_buckets += len(ps.buckets)
         for g in groups:
-            exe = None
+            blob_hash = None
+            deserialize = False
             if g.executable_blob:
                 if rep.restore_path == "fallback":
-                    rep.fallback_compiles += 1
-                    exe = ReshardingExecutable(_compile_from_export(
-                        archive, g.bucket_export_blobs[g.template_bucket],
-                        mesh, capture_identity), donate)
+                    # prefetch the StableHLO the fallback compile will read
+                    blob_hash = g.bucket_export_blobs[g.template_bucket]
                 else:
-                    try:
-                        exe = _deserialize_template(
-                            archive.get_blob(g.executable_blob))
-                        if rep.restore_path == "stamped":
-                            exe = stamp_template(exe, rank_deltas,
-                                                 capture_identity, mesh,
-                                                 donate)
-                            rep.rank_stamped += len(rank_deltas)
-                    except Exception:
-                        # capture devices unavailable here: last-resort
-                        # rebind via compile-from-StableHLO
-                        rep.fallback_compiles += 1
-                        exe = ReshardingExecutable(_compile_from_export(
-                            archive, g.bucket_export_blobs[g.template_bucket],
-                            mesh, capture_identity), donate)
-            if exe is not None:
-                ps.set_template(g.key, exe)
-            rep.n_templates += 1
+                    blob_hash = g.executable_blob
+                    deserialize = True
+            jobs.append(_TemplateJob(ps, g, donate, blob_hash, deserialize))
             for b in g.buckets:
                 if b != g.template_bucket and b in g.bucket_export_blobs:
                     pending_exact.append((ps, g, b, donate))
         program_sets[name] = ps
-    rep.phases["templates_s"] = time.perf_counter() - t0
+    pipe = _TemplatePipeline(archive, jobs,
+                             depth=max(1, pipeline_depth)).start()
+
+    try:
+        # --- memory plan: preallocate + capture-window replay -------------
+        t0 = time.perf_counter()
+        plan = None
+        if manifest.get("memory_plan"):
+            plan = MemoryPlan.for_load(manifest["memory_plan"])
+            plan.preallocate()
+        rep.phases["prealloc_s"] = time.perf_counter() - t0
+
+        # --- kernel catalog prime -----------------------------------------
+        t0 = time.perf_counter()
+        if kernel_catalog is not None and manifest.get("kernel_catalog"):
+            kernel_catalog.prime(manifest["kernel_catalog"], archive)
+        rep.phases["kernel_load_s"] = time.perf_counter() - t0
+
+        # --- install stage: stamp + hot-swap as groups leave the pipe -----
+        t0 = time.perf_counter()
+        for job in pipe:
+            g, exe = job.group, job.exe
+            if g.executable_blob:
+                if exe is not None and rep.restore_path == "stamped":
+                    try:
+                        exe = stamp_template(exe, rank_deltas,
+                                             capture_identity, mesh,
+                                             job.donate)
+                        rep.rank_stamped += len(rank_deltas)
+                    except Exception as e:
+                        job.error, exe = e, None  # degrade to fallback below
+                if exe is None:
+                    # fallback decision, fetch/deserialize/stamp failure, or
+                    # capture devices unavailable: last-resort rebind via
+                    # compile-from-StableHLO (the blob is already cache-hot
+                    # when the fetch stage prefetched it)
+                    if job.error is not None and verbose:
+                        print(f"[LOAD] template for group {g.key[:12]} "
+                              f"unusable ({type(job.error).__name__}: "
+                              f"{job.error}); falling back to compile")
+                    rep.fallback_compiles += 1
+                    exe = ReshardingExecutable(_compile_from_export(
+                        archive, g.bucket_export_blobs[g.template_bucket],
+                        mesh, capture_identity), job.donate)
+                job.ps.set_template(g.key, exe)
+            rep.n_templates += 1
+        rep.phases["templates_s"] = time.perf_counter() - t0
+    except BaseException:
+        pipe.abort()  # unblock stage threads; they exit, dropping blobs
+        raise
+    pipe.busy["install_s"] = rep.phases["templates_s"]
+    rep.pipeline = dict(pipe.busy, depth=float(max(1, pipeline_depth)))
 
     # --- background exact-bucket realization --------------------------------
     if background_exact and pending_exact:
         t_bg = time.perf_counter()
+        err_lock = threading.Lock()
 
         def worker(chunk):
             for ps, g, b, donate in chunk:
@@ -204,8 +375,17 @@ def foundry_load(archive: Archive, mesh, *,
                         exe = ReshardingExecutable(exe, donate)
                     ps.set_exact(b, exe)
                     rep.background_exact += 1
-                except Exception:
-                    pass  # bucket stays pad-served through its template
+                except Exception as e:
+                    # bucket stays pad-served through its template, but the
+                    # failure must be visible (LoadReport.background_errors)
+                    with err_lock:
+                        rep.background_errors += 1
+                        if rep.background_first_error is None:
+                            rep.background_first_error = (
+                                f"bucket {b}: {type(e).__name__}: {e}")
+                    if verbose:
+                        print(f"[LOAD] background exact realization FAILED "
+                              f"for bucket {b}: {type(e).__name__}: {e}")
 
         chunks = [pending_exact[i::background_threads]
                   for i in range(background_threads)]
@@ -219,8 +399,10 @@ def foundry_load(archive: Archive, mesh, *,
     if verbose:
         print(f"[LOAD:{rep.restore_path}] {rep.n_templates} templates over "
               f"{rep.n_buckets} buckets in {rep.critical_path_s * 1e3:.1f} ms "
-              f"(parse {rep.phases['parse_s']*1e3:.1f} ms, templates "
-              f"{rep.phases['templates_s']*1e3:.1f} ms, "
+              f"(parse {rep.phases['parse_s']*1e3:.1f} ms, install "
+              f"{rep.phases['templates_s']*1e3:.1f} ms, pipeline fetch "
+              f"{rep.pipeline['fetch_s']*1e3:.1f} ms / deserialize "
+              f"{rep.pipeline['deserialize_s']*1e3:.1f} ms, "
               f"rank_stamped={rep.rank_stamped}, "
               f"fallback_compiles={rep.fallback_compiles})")
     return program_sets, rep, plan
@@ -267,7 +449,8 @@ def _exp_shardings(exp, mesh):
         return [None] * len(exp.in_avals)
 
 
-def wait_for_background(rep: LoadReport, timeout: float = 300.0):
+def wait_for_background(rep: LoadReport, timeout: float = 300.0,
+                        verbose: bool = False):
     """Join the background exact-bucket worker threads of a LOAD.
 
     Join contract: ``foundry_load`` returns while daemon workers may still be
@@ -280,7 +463,11 @@ def wait_for_background(rep: LoadReport, timeout: float = 300.0):
     must be released. ``timeout`` is per thread (seconds); on timeout the
     thread keeps running as a daemon and any buckets it has not yet swapped
     simply stay pad-served — there is no error and no partial state, so the
-    call is safe to repeat.
+    call is safe to repeat. With ``verbose`` a summary of background
+    failures (``LoadReport.background_errors``) is printed after the join.
     """
     for t in getattr(rep, "_bg_threads", []):
         t.join(timeout)
+    if verbose and rep.background_errors:
+        print(f"[LOAD] {rep.background_errors} background exact "
+              f"realization(s) failed; first: {rep.background_first_error}")

@@ -7,10 +7,16 @@
     # online LOAD + serve a synthetic request stream
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-14b-reduced \
         --load /tmp/qwen.fndry --requests 16
+
+    # autoscaling fleet replaying a load spike against one shared archive
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-14b-reduced \
+        --load /tmp/qwen.fndry --fleet --max-replicas 4 \
+        --trace 10:25:30:1:6
 """
 from __future__ import annotations
 
 import argparse
+import json
 import random
 import time
 
@@ -20,6 +26,7 @@ from repro.configs.registry import get_arch
 from repro.core import Archive
 from repro.models.model import Model
 from repro.serving.engine import ServingEngine
+from repro.serving.fleet import AutoscalePolicy, Fleet, spike_trace
 
 
 def build(arch: str, max_batch: int, max_seq: int) -> ServingEngine:
@@ -30,6 +37,43 @@ def build(arch: str, max_batch: int, max_seq: int) -> ServingEngine:
     return eng
 
 
+def run_fleet(args):
+    """--fleet: replay a spike trace against an autoscaling replica fleet.
+
+    With --load, replicas cold-start from the shared (lazily-opened)
+    archive; without it, a SAVE runs first in-process so the fleet still
+    exercises the foundry path. --fleet-mode vanilla/eager selects the
+    baseline cold starts instead."""
+    if args.fleet_mode == "foundry":
+        if args.load:
+            archive = Archive.load(args.load)  # lazy: manifest-only parse
+        else:
+            print("[fleet] no --load given: running offline SAVE first")
+            archive, _ = build(args.arch, args.max_batch,
+                               args.max_seq).save_archive()
+    else:
+        archive = None
+
+    warm, spike, cool, base, rate = (int(x) for x in args.trace.split(":"))
+    trace = spike_trace(warm_ticks=warm, spike_ticks=spike, cool_ticks=cool,
+                        base_rate=base, spike_rate=rate)
+    fleet = Fleet(lambda: build(args.arch, args.max_batch, args.max_seq),
+                  mode=args.fleet_mode, archive=archive,
+                  policy=AutoscalePolicy(min_replicas=args.min_replicas,
+                                         max_replicas=args.max_replicas),
+                  verbose=True)
+    fleet.run_trace(trace, seed=0)
+    fleet.drain_background()  # then re-report to pick up background_errors
+    rep = fleet.report()
+    print(json.dumps(rep.summary(), indent=1, default=str))
+    for r in rep.replicas:
+        cs = r.cold_start_to_first_token_s
+        print(f"  replica {r.replica_id}: mode={r.mode} "
+              f"provision={r.provision_s and f'{r.provision_s:.2f}s'} "
+              f"cold-start->first-token="
+              f"{cs and f'{cs:.2f}s'} served={r.served_requests}")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -38,15 +82,28 @@ def main():
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-batch", type=int, default=8)
     ap.add_argument("--max-seq", type=int, default=96)
+    ap.add_argument("--fleet", action="store_true",
+                    help="autoscaling replica fleet replaying --trace")
+    ap.add_argument("--fleet-mode", default="foundry",
+                    choices=("foundry", "vanilla", "eager"))
+    ap.add_argument("--min-replicas", type=int, default=1)
+    ap.add_argument("--max-replicas", type=int, default=4)
+    ap.add_argument("--trace", default="10:25:30:1:6",
+                    help="warm:spike:cool:base_rate:spike_rate ticks")
     args = ap.parse_args()
 
-    eng = build(args.arch, args.max_batch, args.max_seq)
     if args.save:
+        eng = build(args.arch, args.max_batch, args.max_seq)
         ar, rep = eng.save_archive(args.save, verbose=True)
         print(f"archive -> {args.save} "
               f"({rep['specs']['decode']['n_templates']} templates)")
         return
 
+    if args.fleet:
+        run_fleet(args)
+        return
+
+    eng = build(args.arch, args.max_batch, args.max_seq)
     t0 = time.perf_counter()
     if args.load:
         eng.cold_start_foundry(Archive.load(args.load), verbose=True)

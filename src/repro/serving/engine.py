@@ -254,6 +254,16 @@ class ServingEngine:
         sched, pool = self.scheduler, self.pool
         free = self.max_batch - pool.n_active
         for req in sched.admissions(free):
+            # a request must fit prompt + retry prefix + at least one new
+            # token inside max_seq; prefilling an oversized one would raise
+            # mid-step (broadcast error) and wedge it in `running` forever
+            plen = len(req.prompt) + len(req.generated)
+            if plen >= self.max_seq:
+                sched.reject(
+                    req, f"prompt+prefix length {plen} exceeds engine "
+                         f"capacity (max_seq={self.max_seq} incl. one "
+                         f"generated token)")
+                continue
             self._prefill(req)
         n = pool.n_active
         if n == 0:

@@ -1,0 +1,439 @@
+"""Autoscaling replica fleet: N serving engines cold-starting against ONE
+shared Foundry archive while traffic is in flight (paper §1-2).
+
+This is the paper's motivating scenario made executable: a load spike
+arrives, the autoscaler spins up replicas, and every second a replica spends
+in cold start is a second of queue growth ("Breaking the Ice"; HydraServe's
+serverless scale-out framing). The fleet makes the cold-start path the
+measured quantity:
+
+  * one ``Archive`` object is shared by every replica LOAD — the lazy v2
+    blob store (core/archive.py) parses the manifest once and decompresses
+    each blob at most once fleet-wide, so concurrent LOADs de-duplicate
+    instead of multiplying work;
+  * each replica provisions on a background thread (build engine + cold
+    start) while the fleet keeps dispatching to already-READY replicas;
+  * serving steps run cooperatively on the fleet's own thread (one
+    ``tick()`` = one decode step per READY replica), so scale-up/scale-down
+    behavior is deterministic enough to unit-test;
+  * per-replica cold-start-to-first-token and fleet-wide TTFT/TPOT are
+    recorded (``FleetReport``), which is exactly the comparison
+    benchmarks/fig13_autoscale.py plots across vanilla / foundry /
+    foundry-stamped cold starts.
+
+Autoscaling policy (``AutoscalePolicy``): scale up toward
+``ceil(inflight / target_inflight_per_replica)`` (counting replicas already
+provisioning, so a burst does not spawn a storm), scale down — at most one
+replica per tick — when a replica has been idle for
+``scale_down_idle_ticks`` consecutive ticks and the fleet is above
+``min_replicas``.
+"""
+from __future__ import annotations
+
+import itertools
+import math
+import random
+import threading
+import time
+from collections import deque
+from contextlib import nullcontext
+from dataclasses import dataclass, field
+from enum import Enum
+from typing import Callable, Deque, Dict, List, Optional, Sequence
+
+from repro.core import Archive, wait_for_background
+from repro.serving.engine import ServingEngine
+from repro.serving.scheduler import Request, ReqState
+
+
+class ReplicaState(Enum):
+    PROVISIONING = "provisioning"   # cold-start thread running
+    READY = "ready"                 # serving
+    STOPPED = "stopped"             # scaled down
+    FAILED = "failed"               # cold start raised
+
+
+@dataclass
+class ReplicaStats:
+    """Lifecycle timeline of one replica (all times perf_counter seconds)."""
+    replica_id: int
+    spawned_t: float
+    ready_t: Optional[float] = None
+    first_token_t: Optional[float] = None
+    stopped_t: Optional[float] = None
+    mode: Optional[str] = None            # cold-start path actually taken
+    cold_start_s: Optional[float] = None  # engine cold-start phase total
+    fallback_compiles: int = 0
+    background_errors: int = 0
+    steps: int = 0
+    served_requests: int = 0
+    error: Optional[str] = None
+
+    @property
+    def provision_s(self) -> Optional[float]:
+        """Spawn -> servable (engine build + weights + cold start)."""
+        return None if self.ready_t is None else self.ready_t - self.spawned_t
+
+    @property
+    def cold_start_to_first_token_s(self) -> Optional[float]:
+        """Spawn -> first token out of this replica: the scale-out latency a
+        user stuck in the queue actually experiences."""
+        return (None if self.first_token_t is None
+                else self.first_token_t - self.spawned_t)
+
+
+class Replica:
+    """One ServingEngine behind the fleet queue.
+
+    Provisioning (engine build + cold start) runs on a daemon thread so
+    replicas come up while traffic is in flight; decode steps run on the
+    fleet's thread via ``step()``.
+    """
+
+    def __init__(self, rid: int, engine_factory: Callable[[], ServingEngine],
+                 cold_start: Callable[[ServingEngine], object], mesh=None):
+        self.stats = ReplicaStats(rid, spawned_t=time.perf_counter())
+        self.state = ReplicaState.PROVISIONING
+        self.engine: Optional[ServingEngine] = None
+        self.cold_report = None
+        self.idle_ticks = 0
+        self._engine_factory = engine_factory
+        self._cold_start = cold_start
+        self._mesh = mesh
+        self._error: Optional[str] = None
+        self._thread = threading.Thread(target=self._provision, daemon=True)
+        self._thread.start()
+
+    def _ctx(self):
+        return self._mesh if self._mesh is not None else nullcontext()
+
+    def _provision(self):
+        try:
+            with self._ctx():
+                eng = self._engine_factory()
+                t0 = time.perf_counter()
+                rep = self._cold_start(eng)
+            self.cold_report = rep
+            self.stats.mode = getattr(rep, "mode", None)
+            self.stats.cold_start_s = getattr(
+                rep, "total_s", time.perf_counter() - t0)
+            self.stats.fallback_compiles = getattr(rep, "fallback_compiles", 0)
+            self.engine = eng
+        except Exception as e:  # surfaced via ReplicaState.FAILED
+            self._error = f"{type(e).__name__}: {e}"
+
+    def poll(self) -> ReplicaState:
+        """Advance PROVISIONING -> READY/FAILED when the thread finishes."""
+        if self.state is ReplicaState.PROVISIONING and not self._thread.is_alive():
+            if self._error is not None or self.engine is None:
+                self.state = ReplicaState.FAILED
+                self.stats.error = self._error or "cold start produced no engine"
+            else:
+                self.state = ReplicaState.READY
+                self.stats.ready_t = time.perf_counter()
+        return self.state
+
+    @property
+    def load(self) -> int:
+        """Requests this replica still owns (queued + running)."""
+        return 0 if self.engine is None else self.engine.scheduler.pending
+
+    def assign(self, req: Request):
+        self.engine.scheduler.queue.append(req)
+
+    def step(self) -> int:
+        with self._ctx():
+            n = self.engine.step()
+        self.stats.steps += 1
+        self.stats.served_requests = len(self.engine.scheduler.done)
+        if self.stats.first_token_t is None:
+            firsts = [r.first_token_t
+                      for r in self.engine.scheduler.running.values()
+                      if r.first_token_t is not None]
+            firsts += [r.first_token_t for r in self.engine.scheduler.done
+                       if r.first_token_t is not None]
+            if firsts:
+                self.stats.first_token_t = min(firsts)
+        self.idle_ticks = self.idle_ticks + 1 if self.load == 0 else 0
+        return n
+
+    def stop(self):
+        self.state = ReplicaState.STOPPED
+        self.stats.stopped_t = time.perf_counter()
+
+    def drain_background(self, timeout: float = 300.0):
+        """Join the engine LOAD's background exact-bucket workers and copy
+        their error count into the stats (tests assert it is 0)."""
+        rep = getattr(self.engine, "_load_report", None)
+        if rep is not None:
+            wait_for_background(rep, timeout)
+            self.stats.background_errors = rep.background_errors
+
+
+@dataclass
+class AutoscalePolicy:
+    min_replicas: int = 1
+    max_replicas: int = 4
+    # inflight requests one replica is expected to absorb before the fleet
+    # scales; engines can batch max_batch of them per step
+    target_inflight_per_replica: int = 8
+    scale_down_idle_ticks: int = 25
+    # provisioning failures after which the fleet stops respawning (a
+    # systematically failing cold start — bad archive, broken factory —
+    # must fail fast, not spawn replicas forever)
+    max_spawn_failures: int = 3
+
+
+@dataclass
+class FleetReport:
+    """Fleet-wide outcome of a trace replay (see Fleet.report)."""
+    mode: str
+    ticks: int
+    wall_s: float
+    peak_alive: int
+    replicas: List[ReplicaStats] = field(default_factory=list)
+    ttfts: List[float] = field(default_factory=list)
+    tpots: List[float] = field(default_factory=list)
+    n_done: int = 0
+    n_failed: int = 0
+
+    @staticmethod
+    def _pct(xs: List[float], q: float) -> Optional[float]:
+        if not xs:
+            return None
+        xs = sorted(xs)
+        return xs[min(len(xs) - 1, int(q * (len(xs) - 1) + 0.5))]
+
+    def summary(self) -> Dict[str, object]:
+        cold = [r.cold_start_to_first_token_s for r in self.replicas
+                if r.cold_start_to_first_token_s is not None]
+        return {
+            "mode": self.mode,
+            "ticks": self.ticks,
+            "wall_s": self.wall_s,
+            "n_done": self.n_done,
+            "n_failed": self.n_failed,
+            "peak_alive": self.peak_alive,
+            "replicas_spawned": len(self.replicas),
+            "ttft_p50_s": self._pct(self.ttfts, 0.50),
+            "ttft_p95_s": self._pct(self.ttfts, 0.95),
+            "tpot_mean_s": (sum(self.tpots) / len(self.tpots)
+                            if self.tpots else None),
+            "cold_start_to_first_token_s": cold,
+            "cold_start_to_first_token_max_s": max(cold) if cold else None,
+            "fallback_compiles": sum(r.fallback_compiles
+                                     for r in self.replicas),
+            "background_errors": sum(r.background_errors
+                                     for r in self.replicas),
+        }
+
+
+def spike_trace(warm_ticks: int = 10, spike_ticks: int = 25,
+                cool_ticks: int = 30, base_rate: int = 1,
+                spike_rate: int = 6) -> List[int]:
+    """Synthetic arrivals-per-tick trace: steady base load, a hard spike
+    (the autoscaling trigger), then a cool-down tail for scale-down."""
+    return ([base_rate] * warm_ticks + [spike_rate] * spike_ticks
+            + [base_rate if t % 2 == 0 else 0 for t in range(cool_ticks)])
+
+
+class Fleet:
+    """N ServingEngine replicas behind one shared request queue.
+
+    ``mode`` picks the replica cold-start path: "vanilla" | "eager" |
+    "foundry" (LOAD ``archive``; reported as "foundry-stamped" automatically
+    when the archive was captured on a different, shape-compatible mesh).
+    ``mesh`` (optional) is entered around every engine build/step — pass the
+    deployment mesh for stamped fleets.
+    """
+
+    def __init__(self, engine_factory: Callable[[], ServingEngine], *,
+                 mode: str = "foundry", archive: Optional[Archive] = None,
+                 policy: Optional[AutoscalePolicy] = None,
+                 allow_stamping: bool = True, background_exact: bool = True,
+                 mesh=None, verbose: bool = False):
+        if mode == "foundry" and archive is None:
+            raise ValueError("foundry fleet needs the shared archive")
+        if mode not in ("foundry", "vanilla", "eager"):
+            raise ValueError(f"unknown fleet mode {mode!r}")
+        self.engine_factory = engine_factory
+        self.mode = mode
+        self.archive = archive
+        self.policy = policy or AutoscalePolicy()
+        self.allow_stamping = allow_stamping
+        self.background_exact = background_exact
+        self.mesh = mesh
+        self.verbose = verbose
+        self.replicas: List[Replica] = []
+        self.backlog: Deque[Request] = deque()
+        self.requests: List[Request] = []
+        self.peak_alive = 0
+        self.spawn_failures = 0
+        self._ids = itertools.count()
+        self._rids = itertools.count()
+        self._tick = 0
+        self._t0: Optional[float] = None
+
+    # -- lifecycle -------------------------------------------------------
+    def _cold_start(self, eng: ServingEngine):
+        if self.mode == "vanilla":
+            return eng.cold_start_vanilla()
+        if self.mode == "eager":
+            return eng.cold_start_eager()
+        return eng.cold_start_foundry(self.archive,
+                                      background_exact=self.background_exact,
+                                      allow_stamping=self.allow_stamping)
+
+    def _alive(self) -> List[Replica]:
+        return [r for r in self.replicas
+                if r.state in (ReplicaState.PROVISIONING, ReplicaState.READY)]
+
+    def _ready(self) -> List[Replica]:
+        return [r for r in self.replicas if r.state is ReplicaState.READY]
+
+    def scale_up(self, n: int = 1) -> List[Replica]:
+        out = []
+        for _ in range(n):
+            r = Replica(next(self._rids), self.engine_factory,
+                        self._cold_start, mesh=self.mesh)
+            self.replicas.append(r)
+            out.append(r)
+            if self.verbose:
+                print(f"[fleet] +replica {r.stats.replica_id} "
+                      f"({self.mode}, tick {self._tick})")
+        return out
+
+    def _can_spawn(self) -> bool:
+        return self.spawn_failures < self.policy.max_spawn_failures
+
+    def start(self) -> "Fleet":
+        """Spawn the floor of the policy (idempotent)."""
+        if self._t0 is None:
+            self._t0 = time.perf_counter()
+        missing = self.policy.min_replicas - len(self._alive())
+        if missing > 0 and self._can_spawn():
+            self.scale_up(missing)
+        return self
+
+    # -- traffic ---------------------------------------------------------
+    def submit(self, prompt: Sequence[int], max_new_tokens: int) -> Request:
+        """Enqueue on the fleet-wide queue; arrival time is fleet arrival,
+        so TTFT includes queueing AND any cold start it had to wait for."""
+        r = Request(next(self._ids), list(prompt), max_new_tokens)
+        self.backlog.append(r)
+        self.requests.append(r)
+        return r
+
+    def _dispatch(self):
+        """Drain the shared backlog onto READY replicas, least-loaded first,
+        never queueing more than one batch-worth ahead per replica."""
+        ready = self._ready()
+        while self.backlog and ready:
+            ready.sort(key=lambda r: r.load)
+            tgt = ready[0]
+            if tgt.load >= tgt.engine.max_batch:
+                break  # everyone is saturated; leave work visible on backlog
+            tgt.assign(self.backlog.popleft())
+
+    def _autoscale(self):
+        pol = self.policy
+        alive = self._alive()
+        inflight = len(self.backlog) + sum(r.load for r in self._ready())
+        desired = max(pol.min_replicas,
+                      math.ceil(inflight / max(1, pol.target_inflight_per_replica)))
+        desired = min(pol.max_replicas, desired)
+        if desired > len(alive) and self._can_spawn():
+            self.scale_up(desired - len(alive))
+        elif not self.backlog and len(alive) > pol.min_replicas:
+            # scale down at most one per tick: oldest idle replica first
+            for r in self._ready():
+                if r.load == 0 and r.idle_ticks >= pol.scale_down_idle_ticks:
+                    r.stop()
+                    if self.verbose:
+                        print(f"[fleet] -replica {r.stats.replica_id} "
+                              f"(idle {r.idle_ticks} ticks)")
+                    break
+
+    # -- serving loop ----------------------------------------------------
+    def tick(self) -> int:
+        """One fleet iteration: poll provisioning, dispatch, autoscale, one
+        decode step per READY replica. Returns requests actively served."""
+        if self._t0 is None:
+            self.start()
+        self._tick += 1
+        for r in self.replicas:
+            was = r.state
+            if (r.poll() is ReplicaState.FAILED
+                    and was is ReplicaState.PROVISIONING):
+                self.spawn_failures += 1
+                print(f"[fleet] replica {r.stats.replica_id} FAILED to "
+                      f"provision ({self.spawn_failures}/"
+                      f"{self.policy.max_spawn_failures} before giving up): "
+                      f"{r.stats.error}")
+        self._dispatch()
+        self._autoscale()
+        served = 0
+        for r in self._ready():
+            served += r.step()
+        self.peak_alive = max(self.peak_alive, len(self._alive()))
+        return served
+
+    def _unresolved(self) -> int:
+        return sum(r.state not in (ReqState.DONE, ReqState.FAILED)
+                   for r in self.requests)
+
+    def run_trace(self, trace: Sequence[int], *,
+                  prompt_fn: Optional[Callable[[random.Random], tuple]] = None,
+                  seed: int = 0, drain: bool = True,
+                  max_ticks: int = 20000) -> FleetReport:
+        """Replay an arrivals-per-tick trace (see ``spike_trace``), then
+        optionally tick until every request resolves. ``prompt_fn(rng)``
+        returns (prompt, max_new_tokens); the default generates short random
+        prompts."""
+        rng = random.Random(seed)
+        if prompt_fn is None:
+            def prompt_fn(rg):
+                return ([rg.randrange(1, 50)
+                         for _ in range(rg.randrange(2, 10))],
+                        rg.randrange(4, 12))
+        self.start()
+        for arrivals in trace:
+            for _ in range(arrivals):
+                self.submit(*prompt_fn(rng))
+            self.tick()
+        while drain and self._unresolved() and self._tick < max_ticks:
+            if not self._ready() and not self._alive():
+                break  # every replica failed; report what we have
+            if self.tick() == 0 and not self._ready():
+                time.sleep(0.001)  # all replicas still provisioning
+        return self.report()
+
+    # -- accounting ------------------------------------------------------
+    def drain_background(self, timeout: float = 300.0):
+        """Join every replica LOAD's background workers (deterministic tests
+        / benchmarks; serving itself never needs this)."""
+        for r in self.replicas:
+            if r.engine is not None:
+                r.drain_background(timeout)
+
+    def report(self) -> FleetReport:
+        rep = FleetReport(
+            mode=self.mode, ticks=self._tick,
+            wall_s=(time.perf_counter() - self._t0) if self._t0 else 0.0,
+            peak_alive=self.peak_alive)
+        for r in self.replicas:
+            lr = getattr(r.engine, "_load_report", None)
+            if lr is not None:
+                r.stats.background_errors = lr.background_errors
+            rep.replicas.append(r.stats)
+        for q in self.requests:
+            if q.state is ReqState.DONE:
+                rep.n_done += 1
+                if q.ttft is not None:
+                    rep.ttfts.append(q.ttft)
+                if q.done_t and q.first_token_t and len(q.generated) > 1:
+                    rep.tpots.append((q.done_t - q.first_token_t)
+                                     / (len(q.generated) - 1))
+            elif q.state is ReqState.FAILED:
+                rep.n_failed += 1
+        return rep

@@ -34,6 +34,7 @@ class Request:
     first_token_t: Optional[float] = None
     done_t: Optional[float] = None
     retries: int = 0
+    fail_reason: Optional[str] = None
 
     @property
     def finished(self) -> bool:
@@ -78,6 +79,17 @@ class Scheduler:
         req.done_t = time.perf_counter()
         self.running.pop(req.req_id, None)
         self.done.append(req)
+
+    def reject(self, req: Request, reason: str):
+        """Fail a request the engine cannot serve (e.g. prompt longer than
+        the engine's max_seq). Terminal: no retry, no slot, caller sees
+        state FAILED + fail_reason instead of a request wedged in running."""
+        self.running.pop(req.req_id, None)
+        req.state = ReqState.FAILED
+        req.fail_reason = reason
+        req.done_t = time.perf_counter()
+        req.slot = None
+        self.failed.append(req)
 
     def requeue_on_failure(self, req: Request):
         """Worker failure path: keep generated prefix, retry at queue front."""

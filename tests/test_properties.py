@@ -11,6 +11,9 @@ from hypothesis import given, settings, strategies as st  # noqa: E402
 from repro.core import Archive, MemoryPlan, group_buckets, topology_key
 from repro.models.layers import _moe_row, flash_attention
 
+# hypothesis sweeps are long; the CI push job runs -m "not slow"
+pytestmark = pytest.mark.slow
+
 SETTINGS = dict(max_examples=25, deadline=None)
 
 

@@ -87,4 +87,74 @@ def test_background_exact_swap(tmp_path):
     wait_for_background(eng2._load_report)
     cov = eng2.programs.coverage()
     assert cov["exact_loaded"] > 0
+    # a systematically failing background compile must be visible, not
+    # swallowed: the happy path reports zero errors
+    assert eng2._load_report.background_errors == 0
+    assert eng2._load_report.background_first_error is None
     serve_tokens(eng2, PROMPTS[:2])
+
+
+def test_oversized_prompt_rejected_cleanly():
+    """A prompt that cannot fit max_seq used to raise a broadcast ValueError
+    inside step() and wedge the request in `running` forever; it must fail
+    cleanly through the scheduler while other traffic proceeds."""
+    eng = make_engine()
+    eng.cold_start_vanilla()
+    ok = eng.submit([1, 2, 3], 4)
+    too_long = eng.submit(list(range(1, 80)), 4)       # 79 tokens > max_seq=64
+    exactly_max = eng.submit(list(range(1, 65)), 4)    # 64 == max_seq: no room
+    eng.run_until_drained()
+    assert too_long.state.value == "failed"
+    assert "max_seq" in too_long.fail_reason
+    assert exactly_max.state.value == "failed"
+    assert too_long.req_id not in eng.scheduler.running
+    assert too_long in eng.scheduler.failed
+    assert ok.state.value == "done" and len(ok.generated) == 4
+    assert eng.scheduler.pending == 0
+
+
+def test_boundary_prompt_still_served():
+    """max_seq - 1 prompt tokens leaves room for exactly one generated token
+    and must be admitted, not rejected."""
+    eng = make_engine()
+    eng.cold_start_vanilla()
+    edge = eng.submit(list(range(1, 64)), 4)  # 63 == max_seq - 1
+    eng.run_until_drained()
+    assert edge.state.value == "done"
+    assert len(edge.generated) >= 1
+
+
+def test_multi_completion_slot_compaction():
+    """Two+ requests finishing in the same step(): after release+compaction
+    every surviving request's slot must still point at its own KV row (the
+    moved_id repair in ServingEngine.step)."""
+    eng = make_engine()
+    eng.cold_start_vanilla()
+    short = [eng.submit(p, 3) for p in ([5, 9, 2], [11, 3], [7, 7, 7, 1])]
+    long = [eng.submit(p, 8) for p in ([2, 4], [13, 4, 9])]
+    for _ in range(3):  # all 5 admitted at once; short ones finish together
+        eng.step()
+    assert all(r.state.value == "done" for r in short)
+    for r in long:
+        assert r.state.value == "running"
+        assert eng.pool.slots[r.slot] == r.req_id, \
+            f"request {r.req_id} slot {r.slot} points at someone else's row"
+    eng.run_until_drained()
+    assert all(r.state.value == "done" and len(r.generated) == 8 for r in long)
+
+
+def test_pool_shrink_during_release_keeps_slots_valid():
+    """A mass completion shrinks the pool bucket (hysteresis) while a
+    survivor is still decoding; its slot must survive the shrink."""
+    eng = make_engine()
+    eng.cold_start_vanilla()
+    many = [eng.submit([3, 1, 4], 2) for _ in range(5)]
+    survivor = eng.submit([2, 7], 9)
+    for _ in range(2):
+        eng.step()
+    assert all(r.state.value == "done" for r in many)
+    assert eng.pool.cur_bucket < 8  # pool shrank under the survivor
+    assert survivor.state.value == "running"
+    assert eng.pool.slots[survivor.slot] == survivor.req_id
+    eng.run_until_drained()
+    assert survivor.state.value == "done" and len(survivor.generated) == 9

@@ -19,6 +19,9 @@ from repro.core.collective_stub import run_in_capture_process
 from repro.models.model import Model
 from repro.serving.engine import ServingEngine
 
+# whole-system claims take minutes; the CI push job runs -m "not slow"
+pytestmark = pytest.mark.slow
+
 
 def _engine():
     cfg = get_arch("qwen3-14b").reduced()
