@@ -3,11 +3,41 @@
 Wall-clock benchmarks run reduced-width configs on CPU (full-size configs are
 exercised shape-only by the dry-run); the quantities compared are the ones the
 paper claims — ratios and phase structure, not absolute GPU seconds.
+
+Machine-readable results — ``BENCH_results.json``
+-------------------------------------------------
+Every figure/table module persists its headline metrics with
+``write_results(figure, rows, headline=...)`` (``emit`` does it when given a
+``figure``), merged per-figure into one repo-root JSON file so successive PRs
+accumulate a perf trajectory. Schema (version 1):
+
+    {
+      "schema_version": 1,
+      "updated_utc": "<iso8601 of the last merge>",
+      "figures": {
+        "<figure>": {                      # e.g. "fig9_tpot"
+          "updated_utc": "<iso8601>",
+          "rows": {                        # every emitted CSV row
+            "<row name>": {"value": <float>, "derived": "<free-form str>"}
+          },
+          "headline": { ... }              # optional: the few numbers a
+        }                                  # regression gate should look at
+      }
+    }
+
+Row values keep the CSV meaning (microseconds for timing rows unless the row
+name says otherwise). The file is overwritten figure-by-figure, never
+whole-file, so partial benchmark runs refresh only what they measured. Path
+override: ``BENCH_RESULTS=/path/file.json``.
 """
 from __future__ import annotations
 
+import dataclasses
+import json
+import os
 import time
-from typing import Callable
+from datetime import datetime, timezone
+from typing import Callable, Optional
 
 import jax
 
@@ -18,13 +48,25 @@ from repro.serving.engine import ServingEngine
 # the paper's primary model (qwen3-14b) + a second family, reduced
 BENCH_ARCHS = ["qwen3-14b", "smollm-360m"]
 
+RESULTS_SCHEMA_VERSION = 1
+RESULTS_PATH = os.environ.get(
+    "BENCH_RESULTS",
+    os.path.join(os.path.dirname(os.path.abspath(__file__)), "..",
+                 "BENCH_results.json"))
+
 
 def make_engine(arch: str, *, max_batch: int = 16, max_seq: int = 64,
-                bucket_mode: str = "all") -> ServingEngine:
+                bucket_mode: str = "all", decode_loop: str = "device",
+                vocab_size: Optional[int] = None) -> ServingEngine:
+    """Reduced-config engine. ``vocab_size`` overrides the reduced config's
+    tiny vocab (256) when a benchmark needs the serving-scale logits matrix
+    that the paper's decode numbers assume."""
     cfg = get_arch(arch).reduced()
+    if vocab_size is not None:
+        cfg = dataclasses.replace(cfg, vocab_size=vocab_size)
     model = Model(cfg)
     eng = ServingEngine(model, max_batch=max_batch, max_seq=max_seq,
-                        bucket_mode=bucket_mode)
+                        bucket_mode=bucket_mode, decode_loop=decode_loop)
     eng.load_weights(rng=jax.random.PRNGKey(0))
     return eng
 
@@ -42,6 +84,45 @@ def fresh_jax_caches():
     jax.clear_caches()
 
 
-def emit(rows):
+def read_results(path: Optional[str] = None) -> dict:
+    """Parse BENCH_results.json ({} when absent/corrupt)."""
+    p = path or RESULTS_PATH
+    try:
+        with open(p) as f:
+            data = json.load(f)
+        return data if isinstance(data, dict) else {}
+    except (OSError, ValueError):
+        return {}
+
+
+def write_results(figure: str, rows, headline: Optional[dict] = None,
+                  path: Optional[str] = None) -> dict:
+    """Merge one figure's metrics into BENCH_results.json (module docstring
+    documents the schema). Returns the merged document."""
+    p = path or RESULTS_PATH
+    now = datetime.now(timezone.utc).isoformat(timespec="seconds")
+    doc = read_results(p)
+    doc.setdefault("schema_version", RESULTS_SCHEMA_VERSION)
+    doc["updated_utc"] = now
+    figures = doc.setdefault("figures", {})
+    entry = {"updated_utc": now,
+             "rows": {name: {"value": float(value), "derived": str(derived)}
+                      for name, value, derived in rows}}
+    if headline:
+        entry["headline"] = headline
+    figures[figure] = entry
+    tmp = p + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+    os.replace(tmp, p)
+    return doc
+
+
+def emit(rows, figure: Optional[str] = None, headline: Optional[dict] = None):
+    """Print the CSV rows; when ``figure`` is given, also merge them into
+    BENCH_results.json."""
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
+    if figure is not None:
+        write_results(figure, rows, headline=headline)

@@ -39,7 +39,8 @@ def run():
         blobs += list(g["bucket_export_blobs"].values())
     t0 = time.perf_counter()
     for blob in blobs:
-        _compile_from_export(archive, blob, spec_m, None)
+        _compile_from_export(archive, blob, None,
+                             donate_argnums=spec_m["donate_argnums"])
     t_construct = (time.perf_counter() - t0) / len(blobs)
 
     # 3) materialized-context restore: deserialize template executables
@@ -73,4 +74,4 @@ def run():
 
 if __name__ == "__main__":
     from benchmarks.common import emit
-    emit(run())
+    emit(run(), figure="fig10_pergraph")

@@ -82,4 +82,4 @@ def run():
 
 if __name__ == "__main__":
     from benchmarks.common import emit
-    emit(run())
+    emit(run(), figure="fig12_rank_stamp")

@@ -113,4 +113,4 @@ def run():
 
 if __name__ == "__main__":
     from benchmarks.common import emit
-    emit(run())
+    emit(run(), figure="fig13_autoscale")

@@ -34,15 +34,19 @@ def main() -> None:
         mod = __import__(f"benchmarks.{name}", fromlist=["run"])
         t0 = time.perf_counter()
         try:
-            rows = mod.run()
+            out = mod.run()
         except Exception:
             traceback.print_exc()
             print(f"{name}.FAILED,0,error")
             failures += 1
             continue
+        rows, headline = out if isinstance(out, tuple) else (out, None)
         for r_name, us, derived in rows:
             print(f"{r_name},{us:.1f},{derived}")
         print(f"{name}.elapsed,{(time.perf_counter() - t0) * 1e6:.1f},")
+        # perf trajectory: merge this figure's metrics into BENCH_results.json
+        from benchmarks.common import write_results
+        write_results(name, rows, headline=headline)
     if failures:
         sys.exit(1)
 

@@ -46,4 +46,4 @@ def run():
 
 if __name__ == "__main__":
     from benchmarks.common import emit
-    emit(run())
+    emit(run(), figure="tab1_storage")

@@ -44,12 +44,18 @@ class CaptureSpec:
 
     make_args(bucket) must return the positional arg specs
     (ShapeDtypeStructs with shardings) for ``step_fn`` at that bucket.
+    ``tags`` is an arbitrary json-able dict persisted into the manifest spec
+    entry — the engine records the step's calling convention there (e.g.
+    ``decode_loop``/``fused_sampling``: whether sampling is fused into the
+    captured graph and the step returns token ids instead of logits), so a
+    LOADing engine can bind the right serving loop without re-tracing.
     """
     name: str
     step_fn: Callable
     make_args: Callable[[int], tuple]
     buckets: Sequence[int]
     donate_argnums: tuple = ()
+    tags: dict = field(default_factory=dict)
 
 
 def _mesh_identity(mesh) -> dict:
@@ -123,6 +129,7 @@ def foundry_save(specs: Sequence[CaptureSpec], mesh, *,
         manifest_specs[spec.name] = {
             "buckets": list(spec.buckets),
             "donate_argnums": list(spec.donate_argnums),
+            "tags": dict(spec.tags),
             "groups": [g.to_manifest() for g in groups],
         }
         report["specs"][spec.name] = srep

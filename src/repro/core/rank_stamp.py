@@ -112,16 +112,27 @@ class ReshardingExecutable:
     mesh accept deployment-mesh-committed arrays under another.
 
     Donated args (``donate_argnums``, recorded in the archive manifest at
-    SAVE) are additionally materialized through ``jnp.copy`` so the wrapped
-    executable only ever donates buffers this wrapper owns. This mirrors the
-    paper's replay discipline (parameters are patched into graph-owned
-    buffers, cuGraphExecUpdate-style, never borrowed from the caller) and is
-    also load-bearing here: XLA-CPU (jax 0.4.x) crashes — heap corruption /
+    SAVE) are materialized through ``jnp.copy`` so the wrapped executable
+    only ever donates buffers this wrapper owns. This mirrors the paper's
+    replay discipline (parameters are patched into graph-owned buffers,
+    cuGraphExecUpdate-style, never borrowed from the caller) and is also
+    load-bearing here: XLA-CPU (jax 0.4.x) crashes — heap corruption /
     segfault, reproduced 200/200 trials without the copy — when a
     *deserialized* executable donates a buffer produced by ``device_put`` or
     aliased by the caller. Copies of XLA-computation outputs donate safely,
     and non-donated args need no copy (verified 300 trials). When the donate
     set is unknown (``donate_argnums=None``), every arg is copied.
+
+    Feedback fast path (device-resident decode): leaves of the wrapper's own
+    *previous* outputs are provably XLA-computation outputs with the exact
+    shardings this executable produces, so when the caller feeds them back
+    (cache' of step k donated into step k+1) they are passed through with no
+    copy and no device_put. Steady-state decode therefore donates the KV
+    cache truly in place; the copy only triggers for host-touched leaves
+    (fresh pools, ``device_put``-resharded rows, prefill-mutated leaves).
+    Ownership is tracked by identity of the last call's output leaves — the
+    engine holds those same objects until it passes them back, so the ids
+    cannot have been recycled.
     """
 
     is_stamped = False
@@ -131,23 +142,38 @@ class ReshardingExecutable:
         self._exe = executable
         self._donate = (None if donate_argnums is None
                         else frozenset(int(i) for i in donate_argnums))
+        self._owned: Dict[int, Any] = {}  # id -> leaf of the last output
         try:
             self._in_shardings = executable.input_shardings[0]
         except Exception:
             self._in_shardings = None
 
+    def _owns(self, leaf) -> bool:
+        return self._owned.get(id(leaf)) is leaf
+
     def _rebind(self, i, arg, sharding):
+        if not (self._donate is None or i in self._donate):
+            return jax.device_put(arg, sharding) if sharding is not None else arg
+        leaves, treedef = jax.tree.flatten(arg)
+        if all(map(self._owns, leaves)):
+            return arg  # pure feedback of our own output: donation-safe as-is
         put = jax.device_put(arg, sharding) if sharding is not None else arg
-        if self._donate is None or i in self._donate:
-            put = jax.tree.map(jnp.copy, put)
-        return put
+        out = [pl if (pl is ol and self._owns(ol)) else jnp.copy(pl)
+               for ol, pl in zip(leaves, jax.tree.leaves(put))]
+        return jax.tree.unflatten(treedef, out)
 
     def __call__(self, *args):
         shardings = (self._in_shardings if self._in_shardings is not None
                      else (None,) * len(args))
         args = tuple(self._rebind(i, a, s)
                      for i, (a, s) in enumerate(zip(args, shardings)))
-        return self._exe(*args)
+        out = self._exe(*args)
+        # Remember only the latest outputs: they are the only buffers the
+        # caller can legally feed back for donation (older ones were already
+        # donated away). Strong refs are free — the previous outputs are the
+        # current inputs, already consumed.
+        self._owned = {id(l): l for l in jax.tree.leaves(out)}
+        return out
 
 
 class StampedExecutable(ReshardingExecutable):

@@ -349,7 +349,16 @@ def foundry_load(archive: Archive, mesh, *,
                     rep.fallback_compiles += 1
                     exe = ReshardingExecutable(_compile_from_export(
                         archive, g.bucket_export_blobs[g.template_bucket],
-                        mesh, capture_identity), job.donate)
+                        mesh, capture_identity, donate_argnums=job.donate),
+                        job.donate)
+                elif not isinstance(exe, ReshardingExecutable):
+                    # exact path: a DESERIALIZED template must never donate a
+                    # caller buffer produced by device_put (XLA-CPU crash;
+                    # rank_stamp.ReshardingExecutable docstring). The wrapper
+                    # copies host-touched donated leaves once and passes its
+                    # own fed-back outputs through untouched, so the donated
+                    # KV cache of steady-state decode stays zero-copy.
+                    exe = ReshardingExecutable(exe, job.donate)
                 job.ps.set_template(g.key, exe)
             rep.n_templates += 1
         rep.phases["templates_s"] = time.perf_counter() - t0
@@ -369,7 +378,7 @@ def foundry_load(archive: Archive, mesh, *,
                 try:
                     exe = _compile_from_export(
                         archive, g.bucket_export_blobs[b],
-                        mesh, capture_identity)
+                        mesh, capture_identity, donate_argnums=donate)
                     if rep.restore_path != "exact":
                         # exact exes must accept deployment-sharded args too
                         exe = ReshardingExecutable(exe, donate)
@@ -409,10 +418,18 @@ def foundry_load(archive: Archive, mesh, *,
 
 
 def _compile_from_export(archive: Archive, blob_hash: str, mesh,
-                         capture_identity: Optional[dict] = None):
+                         capture_identity: Optional[dict] = None,
+                         donate_argnums: Optional[Sequence[int]] = None):
     """Exact-bucket reconstruction: deserialize pre-lowered StableHLO and
     compile — no Python tracing of the model (the paper's 'graph construction
     via driver APIs', 2-3x cheaper than stream capture; Figure 10).
+
+    ``donate_argnums`` (the capture spec's, from the manifest) is re-applied
+    so reconstructed executables keep the in-place buffer discipline of the
+    capture — without it, the decode cache would be copied every step on any
+    bucket served by an exact realization. Fresh compiles donate
+    ``device_put``-produced buffers safely (the XLA-CPU crash is specific to
+    *deserialized* executables; rank_stamp.ReshardingExecutable docstring).
 
     A jax.export program is pinned to its capture-time device count. When the
     deployment mesh's count differs, the program is bound onto a
@@ -434,7 +451,7 @@ def _compile_from_export(archive: Archive, blob_hash: str, mesh,
         shape = capture_identity.get("shape") or [n_exp]
         call_mesh = Mesh(np.asarray(devs).reshape(tuple(shape)),
                          tuple(capture_identity.get("axes") or ["devices"]))
-    fn = jax.jit(exp.call)
+    fn = jax.jit(exp.call, donate_argnums=tuple(donate_argnums or ()))
     flat = [jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=s)
             for a, s in zip(exp.in_avals, _exp_shardings(exp, call_mesh))]
     args, kwargs = jax.tree.unflatten(exp.in_tree, flat)

@@ -103,15 +103,22 @@ class ProgramSet:
         self._lock = threading.Lock()
         self.stats = {"pad_dispatches": 0, "exact_dispatches": 0,
                       "template_dispatches": 0, "stamped_dispatches": 0}
+        # n_active -> (bucket, executable, path, stat_keys): steady-state
+        # decode resolves its program with one dict hit instead of walking
+        # the bucket ladder + group tables every token. Invalidated on any
+        # hot-swap (set_template / set_exact).
+        self._lookup_cache: Dict[int, tuple] = {}
 
     # -- population -----------------------------------------------------
     def set_template(self, key: str, executable):
         with self._lock:
             self.templates[key] = executable
+            self._lookup_cache.clear()
 
     def set_exact(self, bucket: int, executable):
         with self._lock:
             self.exact[bucket] = executable
+            self._lookup_cache.clear()
 
     # -- dispatch ---------------------------------------------------------
     def pick_bucket(self, n_active: int) -> int:
@@ -125,22 +132,37 @@ class ProgramSet:
         """Returns (execution_bucket, executable, path) where path is one of
         "exact" | "template" (padded to the group template) | "stamped"
         (template is a rank-stamped cross-mesh rebind)."""
+        hit = self._lookup_cache.get(n_active)
+        if hit is not None:
+            eb, exe, path, stat_keys = hit
+            with self._lock:
+                for k in stat_keys:
+                    self.stats[k] += 1
+            return eb, exe, path
         b = self.pick_bucket(n_active)
         with self._lock:
             if b in self.exact:
                 self.stats["exact_dispatches"] += 1
+                self._lookup_cache[n_active] = (b, self.exact[b], "exact",
+                                                ("exact_dispatches",))
                 return b, self.exact[b], "exact"
             g = self.groups[self.bucket_to_key[b]]
             t = self.templates.get(g.key)
             if t is not None:
                 path = "template"
+                stat_keys: tuple = ()
                 if getattr(t, "is_stamped", False):
                     path = "stamped"
+                    stat_keys = ("stamped_dispatches",)
                     self.stats["stamped_dispatches"] += 1
                 if g.template_bucket == b:
                     self.stats["template_dispatches"] += 1
+                    self._lookup_cache[n_active] = (
+                        b, t, path, stat_keys + ("template_dispatches",))
                     return b, t, path
                 self.stats["pad_dispatches"] += 1
+                self._lookup_cache[n_active] = (
+                    g.template_bucket, t, path, stat_keys + ("pad_dispatches",))
                 return g.template_bucket, t, path
         raise RuntimeError(f"no executable available for bucket {b}")
 

@@ -21,9 +21,23 @@ Four cold-start paths (the paper's Figure 7/8 comparison, plus §4.3):
 
 The decode hot loop is identical in all of them — only program provenance
 differs — so TPOT preservation (Figure 9) is measured on the same code path.
+
+Decode hot loop (docs/architecture.md "decode hot path"): the captured step
+is the fused ``decode_step(params, cache, tokens) -> (cache', token_ids)``
+with the KV cache donated (in-place update, the cache never leaves the
+device) and greedy sampling folded into the graph, so steady-state decode
+moves only O(B) int32 token ids across the host boundary per token — never
+the O(B x padded_vocab) logits matrix. Sampled ids feed straight back as the
+next step's input from the device side; the host rebuilds the token vector
+(O(B) ints, one transfer) only when scheduling events invalidate it
+(prefill, completion/compaction, pool resize). ``decode_loop="host"``
+preserves the pre-fusion loop — captured programs return full logits and the
+host argmaxes in numpy — as the measurable baseline for benchmarks/fig9 and
+the token-identity regression tests.
 """
 from __future__ import annotations
 
+import bisect
 import time
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Sequence
@@ -34,7 +48,7 @@ import numpy as np
 
 from repro.core import (Archive, CaptureSpec, MemoryPlan, ProgramSet,
                         default_bucket_ladder, foundry_load, foundry_save,
-                        group_buckets, topology_key)
+                        group_buckets, pad_batch_arg, topology_key)
 from repro.core.templates import TopologyGroup
 from repro.launch.mesh import ShardCtx
 from repro.models.model import Model
@@ -77,7 +91,11 @@ class ServingEngine:
     def __init__(self, model: Model, *, max_batch: int = 16,
                  max_seq: int = 128, bucket_mode: str = "all",
                  eos_token: Optional[int] = None,
-                 memory_plan: Optional[MemoryPlan] = None):
+                 memory_plan: Optional[MemoryPlan] = None,
+                 decode_loop: str = "device"):
+        if decode_loop not in ("device", "host"):
+            raise ValueError(f"decode_loop must be 'device' or 'host', "
+                             f"got {decode_loop!r}")
         self.model = model
         self.cfg = model.cfg
         self.ctx = model.ctx
@@ -93,13 +111,47 @@ class ServingEngine:
         self._prefill_cache: Dict[int, Any] = {}
         self._eager_mode = False
         self.decode_steps = 0
+        self.decode_loop = decode_loop
+        # device-resident token state (decode_loop="device"): the sampled ids
+        # of step k ARE step k+1's input, device-to-device; dirty marks the
+        # scheduling events that force an O(B) host rebuild.
+        self._tokens_dev: Optional[Any] = None
+        self._tokens_bucket: int = 0
+        self._tokens_dirty: bool = True
+        # host<->device traffic of the decode loop, in bytes (the fig9
+        # transfer accounting; tests cross-check it with patched transports)
+        self.transfer_stats = {"h2d_bytes": 0, "d2h_bytes": 0,
+                               "token_rebuilds": 0}
 
     # ------------------------------------------------------------------
-    def _decode_fn(self):
-        m = self.model
+    def _decode_fn(self, loop: Optional[str] = None):
+        """The captured step for this engine's decode loop.
 
-        def decode_step(params, cache, tokens):
-            return m.decode_step(params, cache, tokens)
+        device: fused ``(params, cache, tokens) -> (cache', token_ids)`` —
+                greedy sampling over the real (unpadded) vocab happens inside
+                the graph; only B int32 ids ever cross to the host.
+        host:   pre-fusion ``(params, cache, tokens) -> (cache', logits)``.
+        """
+        m = self.model
+        vocab = self.cfg.vocab_size
+        if (loop or self.decode_loop) == "device":
+            def decode_step(params, cache, tokens):
+                new_cache, logits = m.decode_step(params, cache, tokens)
+                live = logits[:, :vocab]
+                # first-max argmax as two vectorizable reduces (max, then min
+                # over the tied-index iota). XLA:CPU lowers jnp.argmax to a
+                # scalar-looped variadic reduce ~3.5x slower than the logits
+                # readback it is meant to replace; tie-breaking (lowest
+                # index) matches np.argmax, which the host loop uses — the
+                # token-identity tests pin that equivalence.
+                mx = jnp.max(live, axis=-1, keepdims=True)
+                iota = jax.lax.broadcasted_iota(jnp.int32, live.shape, 1)
+                ids = jnp.min(jnp.where(live == mx, iota, jnp.int32(vocab)),
+                              axis=-1)
+                return new_cache, ids
+        else:
+            def decode_step(params, cache, tokens):
+                return m.decode_step(params, cache, tokens)
         return decode_step
 
     def _decode_args(self, bucket: int):
@@ -111,7 +163,10 @@ class ServingEngine:
 
     def capture_spec(self) -> CaptureSpec:
         return CaptureSpec("decode", self._decode_fn(), self._decode_args,
-                           self.buckets, donate_argnums=(1,))
+                           self.buckets, donate_argnums=(1,),
+                           tags={"decode_loop": self.decode_loop,
+                                 "fused_sampling":
+                                     self.decode_loop == "device"})
 
     # ---- weights -------------------------------------------------------
     def load_weights(self, params=None, rng=None):
@@ -130,9 +185,10 @@ class ServingEngine:
         self.pool = KVCachePool(
             self.model, self.max_batch, self.max_seq,
             bucket_of=self._bucket_of, memory_plan=self.memory_plan)
+        self._tokens_dev = None
+        self._tokens_dirty = True
 
     def _bucket_of(self, n: int) -> int:
-        import bisect
         i = bisect.bisect_left(self.buckets, n)
         return self.buckets[min(i, len(self.buckets) - 1)]
 
@@ -175,7 +231,18 @@ class ServingEngine:
         "foundry" when the archive was captured on this engine's topology
         and "foundry-stamped" when LOAD rank-stamped a shape-compatible
         capture onto it (``allow_stamping=False`` forces mesh mismatches
-        down the compile-from-StableHLO fallback instead)."""
+        down the compile-from-StableHLO fallback instead).
+
+        The engine adopts the archive's decode loop: the archived programs
+        either fuse sampling (device loop) or return logits (host loop), and
+        the serving loop must match what SAVE captured. Archives without the
+        tag (pre-fusion) are served with the host loop."""
+        spec_m = archive.manifest.get("specs", {}).get("decode", {})
+        archived_loop = (spec_m.get("tags") or {}).get("decode_loop", "host")
+        if archived_loop != self.decode_loop and verbose:
+            print(f"[LOAD] archive captured for decode_loop="
+                  f"'{archived_loop}'; adopting it")
+        self.decode_loop = archived_loop
         progs, load_rep, plan = foundry_load(
             archive, self.ctx.mesh,
             background_exact=background_exact,
@@ -214,7 +281,8 @@ class ServingEngine:
         ar, rep = foundry_save([self.capture_spec()], self.ctx.mesh,
                                memory_plan=self.memory_plan,
                                meta={"arch": self.cfg.name,
-                                     "max_seq": self.max_seq}, **kw)
+                                     "max_seq": self.max_seq,
+                                     "decode_loop": self.decode_loop}, **kw)
         if path:
             ar.save(path)
         return ar, rep
@@ -243,10 +311,82 @@ class ServingEngine:
         slot = self.pool.acquire(req.req_id)
         req.slot = slot
         self.pool.write_prefill(slot, cache1)
+        # the prefill handoff writes device-to-device into the persistent
+        # pool rows; only the token vector needs a host rebuild next step
+        self._tokens_dirty = True
         # note: prefill over right-padded prompts is exact for causal attn
         # (pad positions sit after plen and are never attended by pos<plen),
         # and for SSM archs we re-run prefill at exact length buckets.
         return slot
+
+    def _put_tokens(self, t):
+        t = jnp.asarray(t)
+        if self.ctx.mesh is not None:
+            sh = self.ctx.sharding(("batch",), t.shape)
+            if sh is not None:
+                t = jax.device_put(t, sh)
+        return t
+
+    def _rebuild_tokens(self, exec_bucket: int, by_slot):
+        """O(B) host rebuild of the token vector (the only host->device
+        transfer the decode loop ever makes, and only on dirty steps)."""
+        arr = np.zeros((exec_bucket,), np.int32)
+        for slot, req in by_slot.items():
+            arr[slot] = (req.generated or req.prompt)[-1]
+        self.transfer_stats["h2d_bytes"] += arr.nbytes
+        self.transfer_stats["token_rebuilds"] += 1
+        return self._put_tokens(arr)
+
+    def _device_tokens(self, exec_bucket: int, by_slot):
+        """Token input for the fused step: previous step's on-device sampled
+        ids when clean; bucket growth pads the device view in place (no host
+        round-trip); anything dirty rebuilds from host state."""
+        t = self._tokens_dev
+        if not self._tokens_dirty and t is not None:
+            if self._tokens_bucket == exec_bucket:
+                return t
+            if self._tokens_bucket < exec_bucket:
+                # pre-padded device view for the bucket transition
+                t = pad_batch_arg(t, self._tokens_bucket, exec_bucket)
+            else:
+                t = t[:exec_bucket]
+            return self._put_tokens(t)
+        return self._rebuild_tokens(exec_bucket, by_slot)
+
+    def _step_device(self, bucket: int, by_slot) -> np.ndarray:
+        """Fused dispatch: donated cache, on-device sampling, O(B) readback."""
+        if self._eager_mode:
+            exec_bucket, exe = bucket, self._eager_jit
+        else:
+            exec_bucket, exe, _path = self.programs.lookup(bucket)
+            if exec_bucket != bucket:
+                self.pool._resize(exec_bucket)
+        toks = self._device_tokens(exec_bucket, by_slot)
+        cache, sampled = exe(self.params, self.pool.cache, toks)
+        self.pool.cache = cache
+        self._tokens_dev = sampled
+        self._tokens_bucket = exec_bucket
+        self._tokens_dirty = False
+        ids = np.asarray(sampled)  # the loop's only device->host readback
+        self.transfer_stats["d2h_bytes"] += ids.nbytes
+        return ids
+
+    def _step_host(self, bucket: int, by_slot) -> np.ndarray:
+        """Pre-fusion loop (decode_loop="host"): host re-packs tokens every
+        step and pulls the full padded-vocab logits back to argmax in numpy.
+        Kept as the measurable baseline for fig9 and the identity tests."""
+        if self._eager_mode:
+            exec_bucket, exe = bucket, self._eager_jit
+        else:
+            exec_bucket, exe, _path = self.programs.lookup(bucket)
+            if exec_bucket != bucket:
+                self.pool._resize(exec_bucket)
+        cache, logits = exe(self.params, self.pool.cache,
+                            self._rebuild_tokens(exec_bucket, by_slot))
+        self.pool.cache = cache
+        logits_np = np.asarray(logits[:, :self.cfg.vocab_size])
+        self.transfer_stats["d2h_bytes"] += logits_np.nbytes
+        return logits_np.argmax(axis=-1)
 
     def step(self) -> int:
         """One engine iteration: admit + decode one token for all running.
@@ -269,41 +409,23 @@ class ServingEngine:
         if n == 0:
             return 0
         bucket = pool.cur_bucket
-        tokens = np.zeros((bucket,), np.int32)
         by_slot = {r.slot: r for r in sched.running.values()}
-        for slot, req in by_slot.items():
-            seq = req.prompt + req.generated
-            tokens[slot] = seq[-1]
-        def put_tokens(t):
-            t = jnp.asarray(t)
-            if self.ctx.mesh is not None:
-                sh = self.ctx.sharding(("batch",), t.shape)
-                if sh is not None:
-                    t = jax.device_put(t, sh)
-            return t
-
-        if self._eager_mode:
-            exe = self._eager_jit
-            cache, logits = exe(self.params, pool.cache, put_tokens(tokens))
+        if self.decode_loop == "device":
+            next_tokens = self._step_device(bucket, by_slot)
         else:
-            exec_bucket, exe, path = self.programs.lookup(bucket)
-            if exec_bucket != bucket:
-                self.pool._resize(exec_bucket)
-                tokens = np.pad(tokens, (0, exec_bucket - bucket))
-            cache, logits = exe(self.params, self.pool.cache,
-                                put_tokens(tokens))
-        self.pool.cache = cache
+            next_tokens = self._step_host(bucket, by_slot)
         self.decode_steps += 1
-        logits_np = np.asarray(logits[:, :self.cfg.vocab_size])
-        next_tokens = logits_np.argmax(axis=-1)
-        finished = []
-        for slot, req in by_slot.items():
-            tok = int(next_tokens[slot])
-            sched.record_token(req, tok)
-            hit_eos = self.eos_token is not None and tok == self.eos_token
-            if req.finished or hit_eos or \
-                    len(req.prompt) + len(req.generated) >= self.max_seq - 1:
-                finished.append(req)
+        self._finish_step(by_slot, next_tokens)
+        return n
+
+    def _finish_step(self, by_slot, next_tokens: np.ndarray):
+        """Batched host readback bookkeeping: record all B sampled ids,
+        complete/compact finished requests, invalidate device token state
+        when slots moved."""
+        sched = self.scheduler
+        finished = sched.record_step(
+            ((req, int(next_tokens[slot])) for slot, req in by_slot.items()),
+            eos_token=self.eos_token, max_total_len=self.max_seq - 1)
         for req in finished:
             sched.complete(req)
             self.pool.release(req.slot)
@@ -312,7 +434,9 @@ class ServingEngine:
             if moved_id is not None and moved_id in sched.running:
                 sched.running[moved_id].slot = req.slot
             req.slot = None
-        return n
+        if finished:
+            # release/compaction/shrink reshuffled rows under the sampled ids
+            self._tokens_dirty = True
 
     def run_until_drained(self, max_steps: int = 10000) -> int:
         steps = 0

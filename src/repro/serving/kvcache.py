@@ -126,17 +126,16 @@ class KVCachePool:
         return self.slots[slot]
 
     def _move_row(self, src: int, dst: int):
-        # host-side row move (engine-scale batches are small on CPU; a TPU
-        # deployment would use block tables + the paged decode kernel)
+        # device-side row move: slice + in-place-style update on the
+        # persistent pool buffers. The old implementation round-tripped every
+        # leaf through numpy (an O(cache) device->host->device copy per
+        # compaction); decode state must stay device-resident (a TPU
+        # deployment would use block tables + the paged decode kernel).
         def mv(x, bdim):
             if bdim is None:
                 return x
-            arr = np.asarray(x).copy()
-            idx = [slice(None)] * arr.ndim
-            src_i, dst_i = list(idx), list(idx)
-            src_i[bdim], dst_i[bdim] = src, dst
-            arr[tuple(dst_i)] = arr[tuple(src_i)]
-            return jnp.asarray(arr)
+            row = jax.lax.slice_in_dim(x, src, src + 1, axis=bdim)
+            return jax.lax.dynamic_update_slice_in_dim(x, row, dst, axis=bdim)
         self._map_leaves(mv)
         self._apply_shardings()
 

@@ -74,6 +74,23 @@ class Scheduler:
             req.first_token_t = time.perf_counter()
         req.generated.append(token)
 
+    def record_step(self, req_tokens, *, eos_token: Optional[int] = None,
+                    max_total_len: Optional[int] = None) -> List[Request]:
+        """Batched per-step readback: record one sampled token for every
+        running request of a decode step and return the ones that finished
+        (max_new_tokens reached, EOS hit, or prompt+generated at
+        ``max_total_len``). The engine calls this once per step with the
+        O(B) id vector it read back from the device."""
+        finished = []
+        for req, token in req_tokens:
+            self.record_token(req, token)
+            hit_eos = eos_token is not None and token == eos_token
+            full = (max_total_len is not None
+                    and len(req.prompt) + len(req.generated) >= max_total_len)
+            if req.finished or hit_eos or full:
+                finished.append(req)
+        return finished
+
     def complete(self, req: Request):
         req.state = ReqState.DONE
         req.done_t = time.perf_counter()

@@ -1,0 +1,295 @@
+"""Device-resident decode loop: token identity vs the pre-fusion host loop,
+O(B) transfer regression, donation feedback fast path, and lookup memoization.
+
+The device loop (serving/engine.py docstring) keeps decode state on the
+device end to end: the captured step fuses greedy sampling and donates the
+KV cache, sampled ids feed back device-to-device, and the host reads only B
+int32 ids per token. These tests pin the two load-bearing claims: the token
+streams are byte-identical to the host loop on every restore path, and the
+per-step host traffic is O(B), not O(B x padded_vocab).
+"""
+import os
+import pickle
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_arch
+from repro.core import Archive, ProgramSet, ReshardingExecutable, group_buckets
+from repro.models.model import Model
+from repro.serving.engine import ServingEngine
+
+PROMPTS = [[5, 9, 2], [11, 3], [7, 7, 7, 1], [2], [13, 4, 9, 9, 1, 2]]
+
+
+def make_engine(loop="device", **kw):
+    cfg = get_arch("smollm-360m").reduced()
+    m = Model(cfg)
+    eng = ServingEngine(m, max_batch=8, max_seq=64, bucket_mode="pow2",
+                        decode_loop=loop, **kw)
+    eng.load_weights(rng=jax.random.PRNGKey(7))
+    return eng
+
+
+def serve_tokens(eng, prompts=PROMPTS, n_new=6, stagger=False):
+    # staggered lengths force completions/compaction mid-stream, which is
+    # exactly what invalidates the device-resident token vector
+    reqs = [eng.submit(p, n_new + (i % 3 if stagger else 0))
+            for i, p in enumerate(prompts)]
+    eng.run_until_drained()
+    assert all(r.state.value == "done" for r in reqs)
+    return [tuple(r.generated) for r in reqs]
+
+
+# ---------------------------------------------------------------------------
+# token identity: device loop vs pre-refactor host loop
+# ---------------------------------------------------------------------------
+def test_device_loop_matches_host_loop_vanilla():
+    eng_h = make_engine("host")
+    eng_h.cold_start_vanilla()
+    ref = serve_tokens(eng_h, stagger=True)
+    eng_d = make_engine("device")
+    eng_d.cold_start_vanilla()
+    out = serve_tokens(eng_d, stagger=True)
+    assert out == ref, "fused-sampling loop diverged from host argmax loop"
+    # the device loop must not have re-packed tokens every step: rebuilds
+    # happen only on scheduling events (admission batches + completions)
+    assert eng_d.transfer_stats["token_rebuilds"] < eng_d.decode_steps
+    assert eng_h.transfer_stats["token_rebuilds"] == eng_h.decode_steps
+
+
+def test_device_loop_exact_restore_identity():
+    """exact restore path: archive save -> byte round trip -> LOAD."""
+    eng = make_engine("device")
+    archive, _ = eng.save_archive()
+    assert archive.manifest["specs"]["decode"]["tags"]["fused_sampling"]
+    eng.cold_start_vanilla()
+    ref = serve_tokens(eng)
+
+    eng2 = make_engine("device")
+    rep = eng2.cold_start_foundry(Archive.from_bytes(archive.to_bytes()),
+                                  background_exact=False)
+    assert rep.mode == "foundry" and rep.fallback_compiles == 0
+    assert serve_tokens(eng2) == ref
+
+    # and with background exact swaps hot-swapping mid-serve
+    eng3 = make_engine("device")
+    rep3 = eng3.cold_start_foundry(Archive.from_bytes(archive.to_bytes()),
+                                   background_exact=True)
+    from repro.core import wait_for_background
+    wait_for_background(eng3._load_report)
+    assert eng3._load_report.background_errors == 0
+    assert serve_tokens(eng3) == ref
+
+
+def test_device_loop_fallback_compile_identity():
+    """A template whose executable blob cannot be deserialized must degrade
+    to the compile-from-StableHLO fallback and still emit identical tokens."""
+    eng = make_engine("device")
+    archive, _ = eng.save_archive()
+    eng.cold_start_vanilla()
+    ref = serve_tokens(eng)
+
+    broken = Archive.from_bytes(archive.to_bytes())
+    junk = broken.add_blob(pickle.dumps("not an executable payload"))
+    spec_m = broken.manifest["specs"]["decode"]
+    for g in spec_m["groups"]:
+        if g["executable_blob"]:
+            g["executable_blob"] = junk
+    eng2 = make_engine("device")
+    rep = eng2.cold_start_foundry(broken, background_exact=False)
+    assert rep.fallback_compiles > 0, "junk template must force the fallback"
+    assert serve_tokens(eng2) == ref
+
+
+def test_archive_without_tags_served_with_host_loop():
+    """Pre-fusion archives (no spec tags) carry logits-returning programs;
+    a LOADing engine must bind the host loop, whatever its default."""
+    eng = make_engine("host")
+    archive, _ = eng.save_archive()
+    del archive.manifest["specs"]["decode"]["tags"]
+    eng2 = make_engine("device")
+    eng2.cold_start_foundry(archive, background_exact=False)
+    assert eng2.decode_loop == "host"
+    serve_tokens(eng2, PROMPTS[:2])
+
+
+# ---------------------------------------------------------------------------
+# transfer regression: steady-state decode moves O(B), not O(B x vocab)
+# ---------------------------------------------------------------------------
+def _steady_d2h_bytes_per_step(eng, monkeypatch, steps=6):
+    """Externally measured device->host bytes per steady decode step (counts
+    numpy.asarray materializations of jax arrays, the readback transport)."""
+    for _ in range(4):
+        eng.submit([3, 1, 4], steps + 8)
+    eng.step()  # admissions + prefill; steady window starts after
+    moved = {"d2h": 0}
+    real_asarray = np.asarray
+
+    def counting(a, *args, **kw):
+        out = real_asarray(a, *args, **kw)
+        if isinstance(a, jax.Array):
+            moved["d2h"] += out.nbytes
+        return out
+
+    h2d0 = eng.transfer_stats["h2d_bytes"]
+    rebuilds0 = eng.transfer_stats["token_rebuilds"]
+    monkeypatch.setattr(np, "asarray", counting)
+    try:
+        for _ in range(steps):
+            eng.step()
+    finally:
+        monkeypatch.undo()
+    h2d = eng.transfer_stats["h2d_bytes"] - h2d0
+    rebuilds = eng.transfer_stats["token_rebuilds"] - rebuilds0
+    return moved["d2h"] / steps, h2d, rebuilds
+
+
+def test_steady_state_transfer_is_O_batch(monkeypatch):
+    eng = make_engine("device")
+    eng.cold_start_vanilla()
+    per_step, h2d, rebuilds = _steady_d2h_bytes_per_step(eng, monkeypatch)
+    bucket = eng.pool.cur_bucket
+    vocab_p = eng.cfg.padded_vocab
+    assert per_step <= bucket * 4, \
+        f"device loop read back {per_step} B/step, expected <= {bucket * 4}"
+    assert per_step < bucket * vocab_p * 4 / 8, "readback is not O(B)"
+    # nothing crossed host->device and no token re-pack happened mid-window
+    assert h2d == 0 and rebuilds == 0
+
+
+def test_host_loop_transfer_is_O_batch_times_vocab(monkeypatch):
+    """The control: the pre-fusion loop really does move the logits matrix,
+    so the O(B) assertion above is measuring what it claims to measure."""
+    eng = make_engine("host")
+    eng.cold_start_vanilla()
+    per_step, h2d, rebuilds = _steady_d2h_bytes_per_step(eng, monkeypatch)
+    bucket = eng.pool.cur_bucket
+    assert per_step >= bucket * eng.cfg.vocab_size * 4
+    assert rebuilds > 0  # host loop re-packs tokens every step
+
+
+# ---------------------------------------------------------------------------
+# donation feedback fast path (ReshardingExecutable extension)
+# ---------------------------------------------------------------------------
+def test_resharding_executable_feedback_donation():
+    """Caller buffers are copied before donation (the XLA-CPU deserialized-
+    donation crash workaround), but the wrapper's own fed-back outputs are
+    donated in place — the steady-state decode contract."""
+    def f(cache, x):
+        return {"v": cache["v"] + x}, cache["v"].sum()
+
+    compiled = jax.jit(f, donate_argnums=(0,)).lower(
+        {"v": jax.ShapeDtypeStruct((8,), jnp.float32)},
+        jax.ShapeDtypeStruct((), jnp.float32)).compile()
+    wrap = ReshardingExecutable(compiled, donate_argnums=(0,))
+
+    c0 = {"v": jax.device_put(np.ones(8, np.float32))}  # host-origin buffer
+    out1, _ = wrap(c0, jnp.float32(1.0))
+    assert not c0["v"].is_deleted(), \
+        "host-origin donated arg must be copied, not donated"
+    out2, _ = wrap(out1, jnp.float32(1.0))
+    assert out1["v"].is_deleted(), \
+        "fed-back wrapper output should be donated in place (no copy)"
+    assert not out2["v"].is_deleted()
+    np.testing.assert_allclose(np.asarray(out2["v"]), 3.0)
+
+    # a host-mutated leaf inside an otherwise-owned tree is re-materialized
+    out3, _ = wrap({"v": jax.device_put(np.asarray(out2["v"]))},
+                   jnp.float32(1.0))
+    np.testing.assert_allclose(np.asarray(out3["v"]), 4.0)
+
+
+# ---------------------------------------------------------------------------
+# ProgramSet.lookup memoization
+# ---------------------------------------------------------------------------
+def test_lookup_memoized_and_invalidated():
+    groups = group_buckets({1: "k", 2: "k", 4: "k", 8: "k8"})
+    ps = ProgramSet(groups)
+    tmpl = object()
+    ps.set_template("k", tmpl)
+    assert ps.lookup(1) == (4, tmpl, "template")  # pad to template bucket
+    assert 1 in ps._lookup_cache
+    assert ps.lookup(1) == (4, tmpl, "template")  # dict-hit path
+    assert ps.stats["pad_dispatches"] == 2
+
+    exact = object()
+    ps.set_exact(1, exact)  # hot-swap must invalidate the memo
+    assert ps._lookup_cache == {}
+    assert ps.lookup(1) == (1, exact, "exact")
+    assert ps.lookup(1) == (1, exact, "exact")
+    assert ps.stats["exact_dispatches"] == 2
+
+
+# ---------------------------------------------------------------------------
+# stamped + fallback restore paths (multi-device, subprocess)
+# ---------------------------------------------------------------------------
+DEVICE_STAMP_SCRIPT = r"""
+import numpy as np
+import jax
+from repro.configs.registry import get_arch
+from repro.launch.mesh import ShardCtx, make_capture_mesh, make_tp_mesh
+from repro.models.model import Model
+from repro.serving.engine import ServingEngine
+
+def build(mesh, loop):
+    cfg = get_arch("smollm-360m").reduced()
+    eng = ServingEngine(Model(cfg, ShardCtx(mesh=mesh)), max_batch=4,
+                        max_seq=32, bucket_mode="pow2", decode_loop=loop)
+    eng.load_weights(rng=jax.random.PRNGKey(0))
+    return eng
+
+archives = {}
+mesh_cap = make_capture_mesh()
+with mesh_cap:
+    for loop in ("device", "host"):
+        archives[loop] = build(mesh_cap, loop).save_archive()[0]
+assert archives["device"].manifest["specs"]["decode"]["tags"]["fused_sampling"]
+
+def serve(loop, allow_stamping):
+    jax.clear_caches()
+    mesh = make_tp_mesh(2)
+    with mesh:
+        e = build(mesh, loop)
+        rep = e.cold_start_foundry(archives[loop], background_exact=False,
+                                   allow_stamping=allow_stamping)
+        assert e.decode_loop == loop
+        for p in ([1, 2, 3], [9, 8]):
+            e.submit(p, 6)
+        e.run_until_drained()
+        toks = sorted((r.req_id, tuple(r.generated))
+                      for r in e.scheduler.done)
+        return rep, toks, dict(e.transfer_stats)
+
+rep_s, toks_s, xfer = serve("device", True)
+assert rep_s.mode == "foundry-stamped", rep_s.mode
+assert rep_s.fallback_compiles == 0, "stamped rebind must not compile"
+# the stamped device loop reads back only O(B) ids per step
+assert xfer["d2h_bytes"] <= 6 * 2 * 4 * 4, xfer
+print("STAMPED_DEVICE_OK")
+
+rep_f, toks_f, _ = serve("device", False)
+assert rep_f.mode == "foundry" and rep_f.fallback_compiles > 0
+assert toks_s == toks_f, f"stamped {toks_s} != fallback {toks_f}"
+print("FALLBACK_MATCHES")
+
+rep_h, toks_h, _ = serve("host", True)
+assert rep_h.mode == "foundry-stamped"
+assert toks_s == toks_h, f"device {toks_s} != host {toks_h}"
+print("HOST_LOOP_MATCHES")
+print("DONE")
+"""
+
+
+@pytest.mark.slow
+def test_device_loop_stamped_and_fallback_identity():
+    from repro.core.collective_stub import run_in_capture_process
+    r = run_in_capture_process(
+        DEVICE_STAMP_SCRIPT, 2, timeout=900,
+        pythonpath=os.path.join(os.path.dirname(__file__), "..", "src"))
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    for marker in ("STAMPED_DEVICE_OK", "FALLBACK_MATCHES",
+                   "HOST_LOOP_MATCHES", "DONE"):
+        assert marker in r.stdout
