@@ -23,6 +23,12 @@ and must never touch the compiler on the critical path
 The stamped leg needs 2 placeholder ranks, so the whole comparison runs in
 a subprocess with ``--xla_force_host_platform_device_count`` (the harness
 process has its device count pinned at jax init; core/collective_stub.py).
+
+CLI: ``python -m benchmarks.fig13_autoscale [--quick]``. ``--quick`` is the
+CI smoke mode (wired into the test-fast job next to the fig9 gate): a
+shorter spike and fewer replicas, with the same hard assertions — foundry
+faster than vanilla, ``fallback_compiles == 0``,
+``background_errors == 0`` — so a regression exits nonzero.
 """
 from __future__ import annotations
 
@@ -35,10 +41,13 @@ from repro.models.model import Model
 from repro.serving.engine import ServingEngine
 from repro.serving.fleet import AutoscalePolicy, Fleet, spike_trace
 
+QUICK = __QUICK__
 CFG = get_arch("smollm-360m").reduced()
-TRACE = spike_trace(warm_ticks=2, spike_ticks=8, cool_ticks=6,
-                    base_rate=1, spike_rate=5)
-POLICY = dict(min_replicas=1, max_replicas=3,
+TRACE = (spike_trace(warm_ticks=1, spike_ticks=5, cool_ticks=4,
+                     base_rate=1, spike_rate=4) if QUICK else
+         spike_trace(warm_ticks=2, spike_ticks=8, cool_ticks=6,
+                     base_rate=1, spike_rate=5))
+POLICY = dict(min_replicas=1, max_replicas=2 if QUICK else 3,
               target_inflight_per_replica=4, scale_down_idle_ticks=8)
 
 def build(mesh):
@@ -98,9 +107,10 @@ print("ROW,fig13.foundry_faster_than_vanilla,1.0,asserted")
 """
 
 
-def run():
+def run(quick: bool = False):
     from repro.core.collective_stub import run_in_capture_process
-    r = run_in_capture_process(_INNER, 2, timeout=1800)
+    inner = _INNER.replace("__QUICK__", repr(bool(quick)))
+    r = run_in_capture_process(inner, 2, timeout=1800)
     if r.returncode != 0:
         raise RuntimeError(f"fig13 subprocess failed:\n{r.stdout}\n{r.stderr}")
     rows = []
@@ -112,5 +122,12 @@ def run():
 
 
 if __name__ == "__main__":
+    import argparse
+
     from benchmarks.common import emit
-    emit(run(), figure="fig13_autoscale")
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: shorter spike, fewer replicas, same "
+                         "fallback/background/faster-than-vanilla asserts")
+    args = ap.parse_args()
+    emit(run(quick=args.quick), figure="fig13_autoscale")

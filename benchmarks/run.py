@@ -15,22 +15,36 @@ import traceback
 
 MODULES = [
     "fig7_coldstart", "fig8_breakdown", "fig9_tpot", "fig10_pergraph",
-    "fig11_templates", "fig12_rank_stamp", "tab1_storage", "tab2_contention",
+    "fig11_templates", "fig12_rank_stamp", "fig13_autoscale",
+    "fig14_modelzoo", "tab1_storage", "tab2_contention",
 ]
+
+
+def select(wanted) -> list:
+    """Resolve ``--only`` selectors (prefix or substring per module, e.g.
+    ``fig14,tab1``); unknown selectors are an error, not a silent no-op."""
+    chosen = []
+    for w in wanted:
+        hits = [m for m in MODULES if m.startswith(w) or w in m]
+        if not hits:
+            raise SystemExit(f"--only: {w!r} matches no benchmark module "
+                             f"(have: {', '.join(MODULES)})")
+        chosen += [m for m in hits if m not in chosen]
+    return [m for m in MODULES if m in chosen]  # keep canonical order
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma-separated subset of modules")
+                    help="comma-separated subset of modules, matched by "
+                         "prefix/substring (e.g. --only fig14,tab1)")
     args = ap.parse_args()
-    wanted = args.only.split(",") if args.only else MODULES
+    selected = (select([w.strip() for w in args.only.split(",") if w.strip()])
+                if args.only else MODULES)
 
     print("name,us_per_call,derived")
     failures = 0
-    for name in MODULES:
-        if not any(name.startswith(w) or w in name for w in wanted):
-            continue
+    for name in selected:
         mod = __import__(f"benchmarks.{name}", fromlist=["run"])
         t0 = time.perf_counter()
         try:

@@ -2,6 +2,7 @@
 
 Paper mechanism -> module map (see DESIGN.md §1 for the full table):
     archive.py          portable SAVE output (manifest + content-hashed blobs)
+    depot.py            content-addressed multi-archive store (dedup + GC)
     topology.py         topology keys over jaxprs (templating)
     templates.py        grouping + template dispatch (pad / exact swap)
     memory_plan.py      deterministic monotonic arena (VMM interposition)
@@ -12,6 +13,7 @@ Paper mechanism -> module map (see DESIGN.md §1 for the full table):
     restore.py          LOAD (exact / stamped / fallback rebind decision)
 """
 from repro.core.archive import Archive, content_hash
+from repro.core.depot import TemplateDepot
 from repro.core.collective_stub import (mesh_identity, peer_groups,
                                         rank_coords, same_topology,
                                         stamp_compatible)
@@ -28,7 +30,8 @@ from repro.core.templates import (ProgramSet, TopologyGroup,
 from repro.core.topology import jaxpr_topology_key, topology_key
 
 __all__ = [
-    "Archive", "content_hash", "KernelCatalog", "GLOBAL_CATALOG", "mangle",
+    "Archive", "TemplateDepot", "content_hash",
+    "KernelCatalog", "GLOBAL_CATALOG", "mangle",
     "CaptureSpec", "foundry_save", "MemoryPlan", "PlanMismatch",
     "LoadReport", "foundry_load", "wait_for_background", "ProgramSet",
     "TopologyGroup", "default_bucket_ladder", "group_buckets",

@@ -153,8 +153,13 @@ class BlobStore:
                 event.wait()
                 continue  # cached now — or the fetcher failed and we retry
             try:
-                offset, comp_len, _ = entry
-                comp = self._source.read(offset, comp_len)
+                if hasattr(self._source, "read_hash"):
+                    # content-addressed backing (core/depot.py): the hash IS
+                    # the address; (offset, comp_len) are bookkeeping only
+                    comp = self._source.read_hash(h)
+                else:
+                    offset, comp_len, _ = entry
+                    comp = self._source.read(offset, comp_len)
                 data = _decompress(comp)
                 if content_hash(data) != h:
                     raise ValueError(f"archive blob {h} corrupt")
@@ -203,6 +208,14 @@ class BlobStore:
 
     def items(self):
         return [(h, self[h]) for h in self]
+
+    def register(self, h: str, entry) -> None:
+        """Add/refresh a lazy index entry ``(offset, comp_len, raw_len)``
+        without touching cached bytes. Used by depot-shared stores when a new
+        archive's blobs join the (already open) store."""
+        with self._lock:
+            if h not in self._data:
+                self._index[h] = tuple(entry)
 
     # -- accounting ------------------------------------------------------
     def raw_bytes(self) -> int:
@@ -293,30 +306,90 @@ class Archive:
                                raw=False, strict_map_key=False)
         return head, base + hlen
 
-    def save(self, path: str, level: int = 3) -> int:
-        data = self.to_bytes(level)
+    def save(self, path: str, level: int = 3, depot=None) -> int:
+        """Write the archive to ``path``. With ``depot`` (a
+        ``core.depot.TemplateDepot``), the file is a *thin* manifest: the
+        same v2 header (manifest + blob index) with a ``depot`` flag and NO
+        blob section — every blob is deposited into the depot's
+        content-addressed store instead, deduplicated against whatever other
+        archives already live there. Thin archives are reopened with
+        ``Archive.load(path, depot=...)``."""
+        if depot is not None:
+            data = self._to_bytes_thin(depot, level)
+        else:
+            data = self.to_bytes(level)
         tmp = path + ".tmp"
         with open(tmp, "wb") as f:
             f.write(data)
         os.replace(tmp, path)  # atomic
+        if depot is not None:
+            depot.register_ref(os.path.abspath(path), list(self.blobs))
         return len(data)
 
+    def _to_bytes_thin(self, depot, level: int = 3) -> bytes:
+        if self.blobs is depot.store:
+            # a depot-opened archive shares the depot-wide store: iterating
+            # it would sweep EVERY depot blob into this manifest
+            raise ValueError(
+                "cannot re-deposit an archive opened from this depot; "
+                "its thin manifest already lives there")
+        index: Dict[str, list] = {}
+        for h in self.blobs:
+            comp_len, raw_len = depot.ensure_blob(h, lambda h=h: self.blobs[h],
+                                                  level=level)
+            index[h] = [0, comp_len, raw_len]
+        header = _compress(msgpack.packb(
+            {"manifest": self.manifest, "index": index, "depot": True},
+            use_bin_type=True), level)
+        return b"".join([MAGIC2, struct.pack("<Q", len(header)), header])
+
     @classmethod
-    def load(cls, path: str, lazy: bool = True) -> "Archive":
+    def load(cls, path: str, lazy: bool = True, depot=None) -> "Archive":
         """Open an archive file. ``lazy=True`` (default) parses only the
         header; blobs are fetched on demand — the cheap path for N replicas
         LOADing one shared archive. ``lazy=False`` restores the old behavior
-        of materializing and verifying every blob up front."""
+        of materializing and verifying every blob up front.
+
+        A *thin* archive (written with ``save(..., depot=...)``) resolves its
+        blobs through ``depot``'s shared store: pass the same (or an
+        equivalent) depot, or opening fails. The returned Archive's blob
+        store IS the depot store, so blobs shared across models are fetched
+        at most once depot-wide."""
         with open(path, "rb") as f:
             magic = f.read(len(MAGIC2))
-            if magic == MAGIC2 and lazy:
+            if magic == MAGIC2:
                 (hlen,) = struct.unpack("<Q", f.read(8))
                 head = msgpack.unpackb(_decompress(f.read(hlen)),
                                        raw=False, strict_map_key=False)
                 base = len(MAGIC2) + 8 + hlen
-                return cls(manifest=head["manifest"],
-                           blobs=BlobStore(index=head["index"],
-                                           source=_FileSource(path, base)))
+                if head.get("depot"):
+                    if depot is None:
+                        raise ValueError(
+                            f"{path} is a depot-backed (thin) archive; "
+                            f"reopen it with Archive.load(path, depot=...)")
+                    missing = [h for h in head["index"]
+                               if not depot.has_blob(h)]
+                    if missing:
+                        # fail at open with the real cause, not with a
+                        # FileNotFoundError from some later blob fetch
+                        raise ValueError(
+                            f"{path} references {len(missing)} blob(s) the "
+                            f"depot at {depot.root} does not hold (first: "
+                            f"{missing[0]}); wrong depot?")
+                    for h, entry in head["index"].items():
+                        depot.store.register(h, entry)
+                    ar = cls(manifest=head["manifest"], blobs=depot.store)
+                    if not lazy:
+                        for h in head["index"]:
+                            ar.blobs[h]
+                    return ar
+                ar = cls(manifest=head["manifest"],
+                         blobs=BlobStore(index=head["index"],
+                                         source=_FileSource(path, base)))
+                if not lazy:
+                    for h in ar.blobs:  # fetch + verify everything up front
+                        ar.blobs[h]
+                return ar
             f.seek(0)
             return cls.from_bytes(f.read(), lazy=lazy)
 

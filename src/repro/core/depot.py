@@ -1,0 +1,268 @@
+"""Template depot: a content-addressed, on-disk repository for MANY archives.
+
+One ``Archive`` file is the unit the paper's SAVE produces; a serving fleet
+hosting a model zoo has dozens of them — and their blobs repeat heavily
+(kernel binaries, topology templates and StableHLO exports are identical
+across meshes, bucket ladders and often across models of the same family).
+The depot stores every archive's blobs in ONE shared store, keyed by content
+hash, so each distinct blob exists exactly once on disk no matter how many
+archives reference it (HydraServe / "Breaking the Ice": the many-model,
+shifting-popularity serving scenario where per-model state must be cheap).
+
+On-disk layout (``docs/architecture.md`` §7):
+
+    <root>/
+      blobs/<hash>            one individually-compressed blob per file
+                              (codec sniffed on read, like archive blobs)
+      manifests/<name>.fndry  thin v2 container per archive: manifest +
+                              blob index, ``depot`` flag, NO blob section
+      index.json              {blobs: {hash: {comp_len, raw_len, refs}},
+                               archives: {name: {file, blob_hashes, ...}}}
+
+Sharing semantics: the depot owns ONE ``BlobStore`` (``self.store``) whose
+index spans every deposited blob and whose source reads ``blobs/<hash>``
+files. Every archive opened through the depot binds to that store, so the
+fetch-once guarantee of ``core/archive.py`` becomes depot-wide: N fleets
+serving N models from one depot read + decompress + verify each shared blob
+at most once per process, under the store's single-flight lock.
+
+Garbage collection is ref-counted at archive granularity: each archive file
+holds one reference on each of its blobs; ``remove_archive`` drops them and
+``gc()`` deletes blob files nothing references. Blob writes are atomic
+(tmp + rename) and idempotent (content-addressed), so concurrent writers of
+the same blob race harmlessly.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+from typing import Any, Callable, Dict, List
+
+from repro.core.archive import Archive, BlobStore, _compress, content_hash
+
+_INDEX_VERSION = 1
+
+
+class _DepotSource:
+    """BlobStore source over a depot's ``blobs/`` directory. The content
+    hash is the address (``read_hash``); there are no offsets."""
+
+    def __init__(self, blob_dir: str):
+        self._dir = blob_dir
+
+    def read_hash(self, h: str) -> bytes:
+        with open(os.path.join(self._dir, h), "rb") as f:
+            return f.read()
+
+
+class TemplateDepot:
+    """Content-addressed multi-archive repository (module docstring).
+
+    Mutating calls (``put_archive``/``remove_archive``/``gc``/``ensure_blob``)
+    are serialized by an in-process lock and persist the index atomically;
+    reads go through the shared lock-protected ``BlobStore`` and need no
+    depot lock.
+    """
+
+    def __init__(self, root: str):
+        self.root = os.path.abspath(root)
+        self.blob_dir = os.path.join(self.root, "blobs")
+        self.manifest_dir = os.path.join(self.root, "manifests")
+        os.makedirs(self.blob_dir, exist_ok=True)
+        os.makedirs(self.manifest_dir, exist_ok=True)
+        self._lock = threading.RLock()
+        self._index = self._read_index()
+        self.store = BlobStore(
+            index={h: (0, meta["comp_len"], meta["raw_len"])
+                   for h, meta in self._index["blobs"].items()},
+            source=_DepotSource(self.blob_dir))
+
+    # -- index persistence ----------------------------------------------
+    @property
+    def _index_path(self) -> str:
+        return os.path.join(self.root, "index.json")
+
+    def _read_index(self) -> Dict[str, Any]:
+        try:
+            with open(self._index_path) as f:
+                doc = json.load(f)
+            if doc.get("version") == _INDEX_VERSION:
+                return doc
+        except (OSError, ValueError):
+            pass
+        return {"version": _INDEX_VERSION, "blobs": {}, "archives": {}}
+
+    def _flush(self) -> None:
+        tmp = self._index_path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(self._index, f, indent=1, sort_keys=True)
+            f.write("\n")
+        os.replace(tmp, self._index_path)  # atomic
+
+    # -- blob plane ------------------------------------------------------
+    def ensure_blob(self, h: str, data_fn: Callable[[], bytes],
+                    level: int = 3) -> tuple:
+        """Deposit blob ``h`` unless already present (the dedup hit: presence
+        is a dict lookup; ``data_fn`` is only called on a miss). Returns
+        ``(comp_len, raw_len)``."""
+        with self._lock:
+            meta = self._index["blobs"].get(h)
+            if meta is not None:
+                return meta["comp_len"], meta["raw_len"]
+        data = data_fn()
+        if content_hash(data) != h:
+            raise ValueError(f"depot blob {h} failed content verification")
+        comp = _compress(data, level)
+        path = os.path.join(self.blob_dir, h)
+        if not os.path.exists(path):
+            tmp = f"{path}.tmp.{os.getpid()}.{threading.get_ident()}"
+            with open(tmp, "wb") as f:
+                f.write(comp)
+            os.replace(tmp, path)  # atomic + idempotent (content-addressed)
+        with self._lock:
+            # no flush here: Archive.save's trailing register_ref persists
+            # the whole batch once (one index write per archive, not per blob)
+            self._index["blobs"].setdefault(
+                h, {"comp_len": len(comp), "raw_len": len(data), "refs": []})
+            meta = self._index["blobs"][h]
+            self.store.register(h, (0, meta["comp_len"], meta["raw_len"]))
+            return meta["comp_len"], meta["raw_len"]
+
+    def has_blob(self, h: str) -> bool:
+        """Blob present in this depot (indexed, or the content-addressed
+        file exists even if index.json was lost)."""
+        with self._lock:
+            if h in self._index["blobs"]:
+                return True
+        return os.path.exists(os.path.join(self.blob_dir, h))
+
+    def register_ref(self, ref: str, hashes: List[str]) -> None:
+        """Hold one reference per blob on behalf of ``ref`` (an archive
+        name or thin-archive path). Called by ``Archive.save(depot=...)``."""
+        with self._lock:
+            for h in set(hashes):
+                meta = self._index["blobs"].get(h)
+                if meta is not None and ref not in meta["refs"]:
+                    meta["refs"].append(ref)
+            self._flush()
+
+    def release_ref(self, ref: str) -> None:
+        with self._lock:
+            for meta in self._index["blobs"].values():
+                if ref in meta["refs"]:
+                    meta["refs"].remove(ref)
+            self._flush()
+
+    # -- archive plane ---------------------------------------------------
+    def put_archive(self, name: str, archive: Archive,
+                    level: int = 3) -> str:
+        """Deposit ``archive`` under ``name``: blobs into the shared store
+        (deduplicated), manifest as a thin container in ``manifests/``.
+        Re-putting a name replaces it (old blob refs released)."""
+        path = os.path.join(self.manifest_dir, f"{name}.fndry")
+        if archive.blobs is self.store:
+            raise ValueError(
+                "cannot re-deposit an archive opened from this depot")
+        with self._lock:
+            if name in self._index["archives"]:
+                self.remove_archive(name)
+            archive.save(path, level=level, depot=self)  # registers path ref
+            hashes = sorted(set(archive.blobs))
+            raw = sum(self._index["blobs"][h]["raw_len"] for h in hashes)
+            self._index["archives"][name] = {
+                "file": os.path.relpath(path, self.root),
+                "blob_hashes": hashes,
+                "logical_raw_bytes": raw,
+                "manifest_bytes": os.path.getsize(path),
+            }
+            self._flush()
+        return path
+
+    def open(self, name: str) -> Archive:
+        """Open a deposited archive. The returned Archive's blob store IS
+        the depot's shared store (lazy, fetch-once depot-wide)."""
+        with self._lock:
+            try:
+                entry = self._index["archives"][name]
+            except KeyError:
+                raise KeyError(
+                    f"depot has no archive {name!r} "
+                    f"(have: {sorted(self._index['archives'])})") from None
+            path = os.path.join(self.root, entry["file"])
+        return Archive.load(path, depot=self)
+
+    def __contains__(self, name: str) -> bool:
+        with self._lock:
+            return name in self._index["archives"]
+
+    def archives(self) -> List[str]:
+        with self._lock:
+            return sorted(self._index["archives"])
+
+    def remove_archive(self, name: str) -> None:
+        """Drop ``name`` and its blob references (blob files stay on disk
+        until ``gc()``; the shared store keeps serving already-open users)."""
+        with self._lock:
+            entry = self._index["archives"].pop(name, None)
+            if entry is None:
+                raise KeyError(name)
+            path = os.path.join(self.root, entry["file"])
+            self.release_ref(os.path.abspath(path))
+            try:
+                os.remove(path)
+            except OSError:
+                pass
+            self._flush()
+
+    def gc(self) -> Dict[str, int]:
+        """Delete blob files with zero references. Returns accounting."""
+        deleted = freed = 0
+        with self._lock:
+            for h in [h for h, m in self._index["blobs"].items()
+                      if not m["refs"]]:
+                meta = self._index["blobs"].pop(h)
+                try:
+                    os.remove(os.path.join(self.blob_dir, h))
+                except OSError:
+                    pass
+                try:
+                    del self.store[h]
+                except KeyError:
+                    pass
+                deleted += 1
+                freed += meta["comp_len"]
+            self._flush()
+        return {"deleted_blobs": deleted, "freed_comp_bytes": freed}
+
+    # -- accounting ------------------------------------------------------
+    def stats(self) -> Dict[str, Any]:
+        """Storage accounting across the whole depot. ``dedup_ratio`` is the
+        headline: logical bytes (every archive counted in full) over the
+        physical bytes the shared store actually holds — 1.0x means nothing
+        was shared; the reduced-config zoo lands well above it."""
+        with self._lock:
+            blobs = self._index["blobs"]
+            physical_raw = sum(m["raw_len"] for m in blobs.values())
+            physical_comp = sum(m["comp_len"] for m in blobs.values())
+            logical_raw = logical_blobs = 0
+            per_archive = {}
+            for name, entry in self._index["archives"].items():
+                logical_raw += entry["logical_raw_bytes"]
+                logical_blobs += len(entry["blob_hashes"])
+                per_archive[name] = {
+                    "blobs": len(entry["blob_hashes"]),
+                    "raw_bytes": entry["logical_raw_bytes"],
+                    "manifest_bytes": entry["manifest_bytes"],
+                }
+            return {
+                "archives": len(per_archive),
+                "blobs": len(blobs),
+                "logical_blobs": logical_blobs,
+                "physical_raw_bytes": physical_raw,
+                "physical_comp_bytes": physical_comp,
+                "logical_raw_bytes": logical_raw,
+                "dedup_ratio": (logical_raw / physical_raw
+                                if physical_raw else 1.0),
+                "per_archive": per_archive,
+            }

@@ -23,6 +23,7 @@ Phase timings are recorded for the paper's Figure 8 breakdown.
 """
 from __future__ import annotations
 
+import dataclasses
 import pickle
 import time
 from dataclasses import dataclass, field
@@ -62,6 +63,38 @@ def _mesh_identity(mesh) -> dict:
     if mesh is None:
         return {"axes": [], "shape": []}
     return {"axes": list(mesh.axis_names), "shape": list(mesh.devices.shape)}
+
+
+def canonical_export_bytes(exp) -> bytes:
+    """Serialize a ``jax.export.Exported`` with MLIR debug locations
+    stripped from its StableHLO module.
+
+    The raw serialization embeds the full call-site location chain of the
+    export (file:line of every frame), so the same program exported from two
+    places — two SAVE invocations, two engines, even two statements in one
+    script — differs by a few location bytes. That defeats content-addressed
+    dedup in the TemplateDepot (core/depot.py), where identical bucket
+    programs across archives/ladders/versions should collapse to one blob.
+    Round-tripping the module through its location-free textual form makes
+    the blob a pure function of the program; ``jax.export.deserialize``
+    accepts it unchanged (locations become "unknown").
+
+    Uses private jax internals (the Exported dataclass layout and
+    ``_module_to_bytecode``); any drift falls back to the raw — still
+    loadable, just dedup-hostile — serialization.
+    """
+    try:
+        from jax._src.export import _export
+        from jax._src.interpreters import mlir as _mlir
+        from jax._src.lib.mlir import ir as _ir
+        with _mlir.make_ir_context():
+            mod = _ir.Module.parse(exp.mlir_module())
+            text = mod.operation.get_asm(enable_debug_info=False)
+            ser = _export._module_to_bytecode(_ir.Module.parse(text))
+        exp = dataclasses.replace(exp, mlir_module_serialized=ser)
+    except Exception:
+        pass
+    return exp.serialize()
 
 
 def foundry_save(specs: Sequence[CaptureSpec], mesh, *,
@@ -107,7 +140,8 @@ def foundry_save(specs: Sequence[CaptureSpec], mesh, *,
             for b in g.buckets:
                 args = spec.make_args(b)
                 exp = jax.export.export(jitted)(*args)
-                g.bucket_export_blobs[b] = ar.add_blob(exp.serialize())
+                g.bucket_export_blobs[b] = ar.add_blob(
+                    canonical_export_bytes(exp))
         srep["export_s"] = time.perf_counter() - t0
 
         # --- compile + serialize template executables ---------------------

@@ -12,6 +12,12 @@
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-14b-reduced \
         --load /tmp/qwen.fndry --fleet --max-replicas 4 \
         --trace 10:25:30:1:6
+
+    # multi-model gateway: a zoo of models behind one front door, each
+    # scaling to zero when idle and reactivating from one shared depot
+    PYTHONPATH=src python -m repro.launch.serve \
+        --models qwen3-14b-reduced,smollm-360m-reduced --depot /tmp/depot \
+        --zoo-rounds 2
 """
 from __future__ import annotations
 
@@ -23,10 +29,11 @@ import time
 import jax
 
 from repro.configs.registry import get_arch
-from repro.core import Archive
+from repro.core import Archive, TemplateDepot
 from repro.models.model import Model
 from repro.serving.engine import ServingEngine
 from repro.serving.fleet import AutoscalePolicy, Fleet, spike_trace
+from repro.serving.router import ModelPolicy, ModelRouter
 
 
 def build(arch: str, max_batch: int, max_seq: int) -> ServingEngine:
@@ -74,9 +81,48 @@ def run_fleet(args):
               f"{cs and f'{cs:.2f}s'} served={r.served_requests}")
 
 
+def run_zoo(args):
+    """--models a,b,c --depot PATH: multi-model gateway with scale-to-zero.
+
+    Each model's archive is SAVEd into the depot if not already there
+    (content-addressed: blobs shared across models are stored once), then a
+    popularity-shifting workload runs through the ModelRouter as
+    completion-paced phases with a post-phase quiet gap longer than the
+    idle threshold — the hot model rotates, idle models deterministically
+    drain to zero, and the next round's request for a cold model
+    reactivates it from the shared depot (run_phases docstring)."""
+    models = [m.strip() for m in args.models.split(",") if m.strip()]
+    depot = TemplateDepot(args.depot)
+    for name in models:
+        if name not in depot:
+            print(f"[zoo] SAVE {name} -> depot")
+            ar, _ = build(name, args.max_batch, args.max_seq).save_archive()
+            depot.put_archive(name, ar)
+    st = depot.stats()
+    print(f"[zoo] depot: {st['archives']} archives, {st['blobs']} blobs, "
+          f"dedup {st['dedup_ratio']:.2f}x "
+          f"({st['physical_comp_bytes'] / 1e6:.2f} MB on disk)")
+
+    router = ModelRouter(verbose=True)
+    for name in models:
+        router.add_model(
+            name, lambda n=name: build(n, args.max_batch, args.max_seq),
+            archive=depot.open(name),
+            policy=ModelPolicy(
+                autoscale=AutoscalePolicy(min_replicas=args.min_replicas,
+                                          max_replicas=args.max_replicas),
+                idle_ticks_to_zero=args.zoo_idle_ticks))
+    phases = [(name, args.zoo_requests) for _ in range(args.zoo_rounds)
+              for name in models]
+    router.run_phases(phases, seed=0, gap_ticks=args.zoo_idle_ticks + 20)
+    router.deactivate_all()  # fold every fleet's accounting into the report
+    print(json.dumps(router.report().summary(), indent=1, default=str))
+
+
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--arch",
+                    help="single-model serving (one of the registry names)")
     ap.add_argument("--save", default=None, help="write archive and exit")
     ap.add_argument("--load", default=None, help="archive to LOAD")
     ap.add_argument("--requests", type=int, default=8)
@@ -90,7 +136,28 @@ def main():
     ap.add_argument("--max-replicas", type=int, default=4)
     ap.add_argument("--trace", default="10:25:30:1:6",
                     help="warm:spike:cool:base_rate:spike_rate ticks")
+    ap.add_argument("--models", default=None,
+                    help="comma-separated model names: multi-model gateway "
+                         "with per-model scale-to-zero (needs --depot)")
+    ap.add_argument("--depot", default=None,
+                    help="template depot directory (content-addressed, "
+                         "shared across models)")
+    ap.add_argument("--zoo-rounds", type=int, default=2,
+                    help="popularity cycles over the model list (round 2+ "
+                         "reactivates scaled-to-zero models)")
+    ap.add_argument("--zoo-requests", type=int, default=4,
+                    help="requests per hot-model phase")
+    ap.add_argument("--zoo-idle-ticks", type=int, default=20,
+                    help="idle ticks before a model scales to zero")
     args = ap.parse_args()
+
+    if args.models:
+        if not args.depot:
+            ap.error("--models needs --depot")
+        run_zoo(args)
+        return
+    if not args.arch:
+        ap.error("--arch is required (or use --models/--depot)")
 
     if args.save:
         eng = build(args.arch, args.max_batch, args.max_seq)

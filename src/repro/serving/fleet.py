@@ -161,6 +161,14 @@ class Replica:
         self.state = ReplicaState.STOPPED
         self.stats.stopped_t = time.perf_counter()
 
+    def join_provision(self, timeout: float = 120.0) -> ReplicaState:
+        """Wait for an in-flight provision to finish and resolve the state.
+        Stopping a PROVISIONING replica without this races the daemon
+        thread, which would re-attach the freshly built engine (and its KV
+        pool) to the stopped replica after the caller released it."""
+        self._thread.join(timeout)
+        return self.poll()
+
     def drain_background(self, timeout: float = 300.0):
         """Join the engine LOAD's background exact-bucket workers and copy
         their error count into the stats (tests assert it is 0)."""

@@ -1,0 +1,405 @@
+"""Multi-model gateway: one front door, N models, scale-to-zero serving.
+
+The paper's economics (§1-2, §4.4) say cold start is cheap enough that
+capacity can follow traffic; HydraServe and "Breaking the Ice" (PAPERS.md)
+frame the serverless version — a zoo of models with shifting popularity
+where every activation of a cold model eats its cold start in user TTFT.
+The ``ModelRouter`` makes that scenario executable on the existing
+``Fleet``/``Replica`` machinery:
+
+  * requests are routed by model name to a per-model replica group
+    (one ``serving/fleet.py`` Fleet per ACTIVE model);
+  * each model has a ``ModelPolicy``: the fleet's ``AutoscalePolicy`` plus
+    scale-to-ZERO — a model idle for ``idle_ticks_to_zero`` consecutive
+    router ticks drains and releases its ENTIRE fleet (replicas, engines,
+    KV pools), leaving only its archive manifest in memory;
+  * a request for a COLD model triggers reactivation: a fresh fleet whose
+    replicas ``cold_start_foundry`` from the shared ``TemplateDepot``
+    archive (``core/depot.py``). Because the depot store caches fetched
+    blobs process-wide, the second activation of a model skips even the
+    blob read — reactivation cost is essentially deserialize + install;
+  * per-model activation latency (trigger -> first replica READY and
+    trigger -> first token) and TTFT are recorded (``RouterReport``), which
+    is exactly what ``benchmarks/fig14_modelzoo.py`` compares against the
+    keep-everything-resident baseline.
+
+Model lifecycle state machine (docs/architecture.md §7):
+
+    COLD ──submit()──▶ ACTIVATING ──first replica READY──▶ ACTIVE
+      ▲                                                      │
+      └────────── idle_ticks_to_zero reached ◀───(drain)─────┘
+                 (scale_to_zero only; fleet/KV released)
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from enum import Enum
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+from repro.core import Archive
+from repro.serving.engine import ServingEngine
+from repro.serving.fleet import (AutoscalePolicy, Fleet, FleetReport,
+                                 ReplicaState)
+from repro.serving.scheduler import ReqState, Request
+
+
+class ModelState(Enum):
+    COLD = "cold"               # no fleet; archive manifest only
+    ACTIVATING = "activating"   # fleet spawned, no replica READY yet
+    ACTIVE = "active"           # serving
+
+
+@dataclass
+class ModelPolicy:
+    """Per-model serving policy: the fleet autoscaler plus scale-to-zero."""
+    autoscale: AutoscalePolicy = field(default_factory=AutoscalePolicy)
+    scale_to_zero: bool = True
+    # consecutive router ticks with nothing inflight (and no replica still
+    # provisioning) before the model's fleet is drained and released
+    idle_ticks_to_zero: int = 30
+
+
+@dataclass
+class ModelStats:
+    """Lifetime accounting for one model across activation cycles."""
+    name: str
+    activations: int = 0
+    deactivations: int = 0
+    # per activation: trigger -> first replica READY (the queue-unblocking
+    # latency) and trigger -> first token out of the new fleet
+    activation_ready_s: List[float] = field(default_factory=list)
+    activation_first_token_s: List[float] = field(default_factory=list)
+    # accumulated over released fleets + the live one at report time
+    fallback_compiles: int = 0
+    background_errors: int = 0
+    replicas_spawned: int = 0
+
+    def summary(self, requests: Sequence[Request]) -> Dict[str, Any]:
+        ttfts = [r.ttft for r in requests
+                 if r.state is ReqState.DONE and r.ttft is not None]
+
+        def pct(q):
+            return FleetReport._pct(ttfts, q)
+        return {
+            "activations": self.activations,
+            "deactivations": self.deactivations,
+            "activation_ready_s": list(self.activation_ready_s),
+            "activation_ready_max_s": (max(self.activation_ready_s)
+                                       if self.activation_ready_s else None),
+            "activation_first_token_s": list(self.activation_first_token_s),
+            "n_done": sum(r.state is ReqState.DONE for r in requests),
+            "n_failed": sum(r.state is ReqState.FAILED for r in requests),
+            "ttft_p50_s": pct(0.50),
+            "ttft_p95_s": pct(0.95),
+            "fallback_compiles": self.fallback_compiles,
+            "background_errors": self.background_errors,
+            "replicas_spawned": self.replicas_spawned,
+        }
+
+
+class _ModelEntry:
+    """Router-internal per-model record (archive handle outlives fleets)."""
+
+    def __init__(self, name: str, factory: Callable[[], ServingEngine],
+                 archive: Optional[Archive], policy: ModelPolicy, mode: str):
+        self.name = name
+        self.factory = factory
+        self.archive = archive
+        self.policy = policy
+        self.mode = mode
+        self.state = ModelState.COLD
+        self.fleet: Optional[Fleet] = None
+        self.idle_ticks = 0
+        self.trigger_t: Optional[float] = None
+        self.await_first_token = False
+        self.requests: List[Request] = []
+        self.stats = ModelStats(name)
+        self.fleet_reports: List[FleetReport] = []
+
+
+@dataclass
+class RouterReport:
+    ticks: int
+    wall_s: float
+    peak_resident_replicas: int
+    models: Dict[str, Dict[str, Any]] = field(default_factory=dict)
+
+    def summary(self) -> Dict[str, Any]:
+        return {
+            "ticks": self.ticks,
+            "wall_s": self.wall_s,
+            "peak_resident_replicas": self.peak_resident_replicas,
+            "models": self.models,
+            "fallback_compiles": sum(m["fallback_compiles"]
+                                     for m in self.models.values()),
+            "background_errors": sum(m["background_errors"]
+                                     for m in self.models.values()),
+            "n_done": sum(m["n_done"] for m in self.models.values()),
+            "n_failed": sum(m["n_failed"] for m in self.models.values()),
+        }
+
+
+def default_prompt_fn(rng) -> tuple:
+    """(prompt, max_new_tokens) generator shared by run_trace/run_phases."""
+    return ([rng.randrange(1, 50) for _ in range(rng.randrange(2, 8))],
+            rng.randrange(4, 10))
+
+
+def popularity_trace(models: Sequence[str], *, phase_ticks: int = 12,
+                     hot_rate: int = 3, cold_rate: int = 0,
+                     rounds: int = 2,
+                     gap_ticks: int = 0) -> List[Dict[str, int]]:
+    """Popularity-shifting arrivals: each model takes a turn as the hot one
+    (``hot_rate`` arrivals/tick for ``phase_ticks``; everyone else gets
+    ``cold_rate``), cycling ``rounds`` times — so a model that was hot goes
+    fully idle for (len(models)-1) phases and must reactivate when its turn
+    comes back. ``gap_ticks`` of global silence between phases lets
+    scale-to-zero engage even with chatty ``cold_rate``."""
+    trace: List[Dict[str, int]] = []
+    for _ in range(rounds):
+        for hot in models:
+            for _ in range(phase_ticks):
+                trace.append({m: (hot_rate if m == hot else cold_rate)
+                              for m in models})
+            trace.extend({} for _ in range(gap_ticks))
+    return trace
+
+
+class ModelRouter:
+    """Gateway owning per-model replica groups with scale-to-zero.
+
+    ``add_model`` registers a model: an engine factory, an archive (usually
+    ``depot.open(name)``), and a ``ModelPolicy``. ``submit`` routes by model
+    name, activating a COLD model's fleet on demand; ``tick`` advances every
+    live fleet one step and applies the lifecycle state machine (module
+    docstring). ``mode`` per model picks the replica cold-start path —
+    "foundry" (LOAD from the depot archive) or the "vanilla"/"eager"
+    baselines.
+    """
+
+    def __init__(self, *, verbose: bool = False):
+        self.entries: Dict[str, _ModelEntry] = {}
+        self.verbose = verbose
+        self.peak_resident_replicas = 0
+        self._tick = 0
+        self._t0: Optional[float] = None
+
+    # -- registry --------------------------------------------------------
+    def add_model(self, name: str, factory: Callable[[], ServingEngine], *,
+                  archive: Optional[Archive] = None,
+                  policy: Optional[ModelPolicy] = None,
+                  mode: str = "foundry") -> None:
+        if mode == "foundry" and archive is None:
+            raise ValueError(f"model {name!r}: foundry mode needs an archive "
+                             f"(e.g. depot.open({name!r}))")
+        self.entries[name] = _ModelEntry(name, factory, archive,
+                                         policy or ModelPolicy(), mode)
+
+    def models(self) -> List[str]:
+        return sorted(self.entries)
+
+    def state_of(self, name: str) -> ModelState:
+        return self.entries[name].state
+
+    # -- lifecycle -------------------------------------------------------
+    def _activate(self, e: _ModelEntry) -> None:
+        e.fleet = Fleet(e.factory, mode=e.mode, archive=e.archive,
+                        policy=e.policy.autoscale, verbose=self.verbose)
+        e.fleet.start()
+        e.state = ModelState.ACTIVATING
+        e.trigger_t = time.perf_counter()
+        e.await_first_token = True
+        e.idle_ticks = 0
+        e.stats.activations += 1
+        if self.verbose:
+            print(f"[router] +model {e.name} (activation "
+                  f"{e.stats.activations}, tick {self._tick})")
+
+    def activate(self, name: str) -> None:
+        """Pre-warm a model (the keep-resident baseline activates everything
+        up front; normal operation lets ``submit`` trigger this lazily)."""
+        e = self.entries[name]
+        if e.fleet is None:
+            self._activate(e)
+
+    def _deactivate(self, e: _ModelEntry) -> None:
+        fleet = e.fleet
+        for r in fleet.replicas:
+            # deactivate_all may catch an autoscale-spawned replica mid
+            # cold start; let it finish so releasing the engine below is
+            # not undone by the provisioning thread (and so its LOAD's
+            # background errors are drained + counted like everyone else's)
+            if r.state is ReplicaState.PROVISIONING:
+                r.join_provision(120.0)
+        fleet.drain_background(timeout=120.0)  # join LOAD workers, count errs
+        rep = fleet.report()
+        e.fleet_reports.append(rep)
+        e.stats.fallback_compiles += sum(r.fallback_compiles
+                                         for r in rep.replicas)
+        e.stats.background_errors += sum(r.background_errors
+                                         for r in rep.replicas)
+        e.stats.replicas_spawned += len(rep.replicas)
+        for r in fleet.replicas:
+            if r.state in (ReplicaState.PROVISIONING, ReplicaState.READY):
+                r.stop()
+            r.engine = None  # release engine + KV pool now, not at GC whim
+        e.fleet = None
+        e.state = ModelState.COLD
+        e.idle_ticks = 0
+        e.stats.deactivations += 1
+        if self.verbose:
+            print(f"[router] -model {e.name} (scale-to-zero after "
+                  f"{e.policy.idle_ticks_to_zero} idle ticks, "
+                  f"tick {self._tick})")
+
+    def deactivate_all(self) -> None:
+        """Drain and release every live fleet (end-of-run accounting)."""
+        for e in self.entries.values():
+            if e.fleet is not None:
+                self._deactivate(e)
+
+    # -- traffic ---------------------------------------------------------
+    def submit(self, model: str, prompt: Sequence[int],
+               max_new_tokens: int) -> Request:
+        """Route one request. A COLD model starts activating immediately;
+        the request waits on the new fleet's backlog, so its TTFT includes
+        the activation it triggered — the quantity fig14 measures."""
+        try:
+            e = self.entries[model]
+        except KeyError:
+            raise KeyError(f"unknown model {model!r} "
+                           f"(have: {self.models()})") from None
+        if e.fleet is None:
+            self._activate(e)
+        req = e.fleet.submit(prompt, max_new_tokens)
+        e.requests.append(req)
+        return req
+
+    # -- serving loop ----------------------------------------------------
+    def _fleet_idle(self, e: _ModelEntry) -> bool:
+        fleet = e.fleet
+        if fleet.backlog:
+            return False
+        if any(r.state is ReplicaState.PROVISIONING for r in fleet.replicas):
+            return False  # never drop a fleet under a replica mid-cold-start
+        return all(q.state in (ReqState.DONE, ReqState.FAILED)
+                   for q in fleet.requests)
+
+    def tick(self) -> int:
+        """One gateway iteration: advance every live fleet one tick, apply
+        activation/deactivation transitions, track resident replicas.
+        Returns requests actively served across all models."""
+        if self._t0 is None:
+            self._t0 = time.perf_counter()
+        self._tick += 1
+        served = resident = 0
+        for e in self.entries.values():
+            if e.fleet is None:
+                continue
+            served += e.fleet.tick()
+            resident += len(e.fleet._alive())
+            now = time.perf_counter()
+            if e.state is ModelState.ACTIVATING and e.fleet._ready():
+                e.stats.activation_ready_s.append(now - e.trigger_t)
+                e.state = ModelState.ACTIVE
+            if e.await_first_token:
+                firsts = [q.first_token_t for q in e.fleet.requests
+                          if q.first_token_t is not None
+                          and q.first_token_t >= e.trigger_t]
+                if firsts:
+                    e.stats.activation_first_token_s.append(
+                        min(firsts) - e.trigger_t)
+                    e.await_first_token = False
+            if e.state is ModelState.ACTIVE:
+                if self._fleet_idle(e):
+                    e.idle_ticks += 1
+                    if (e.policy.scale_to_zero
+                            and e.idle_ticks >= e.policy.idle_ticks_to_zero):
+                        self._deactivate(e)
+                else:
+                    e.idle_ticks = 0
+        self.peak_resident_replicas = max(self.peak_resident_replicas,
+                                          resident)
+        return served
+
+    def _unresolved(self) -> int:
+        return sum(q.state not in (ReqState.DONE, ReqState.FAILED)
+                   for e in self.entries.values() for q in e.requests)
+
+    def run_trace(self, trace: Sequence[Dict[str, int]], *,
+                  prompt_fn: Optional[Callable] = None, seed: int = 0,
+                  drain: bool = True, max_ticks: int = 20000) -> "RouterReport":
+        """Replay a per-model arrivals trace (see ``popularity_trace``):
+        ``trace[t]`` maps model name -> arrivals that tick. ``prompt_fn(rng)``
+        returns (prompt, max_new_tokens)."""
+        import random
+        rng = random.Random(seed)
+        prompt_fn = prompt_fn or default_prompt_fn
+        for arrivals in trace:
+            for model, n in arrivals.items():
+                for _ in range(n):
+                    self.submit(model, *prompt_fn(rng))
+            if self.tick() == 0 and self._unresolved():
+                time.sleep(0.001)  # yield to provisioning threads
+        while drain and self._unresolved() and self._tick < max_ticks:
+            if self.tick() == 0:
+                time.sleep(0.001)  # everything still provisioning
+        return self.report()
+
+    def run_phases(self, phases: Sequence[tuple], *,
+                   prompt_fn: Optional[Callable] = None, seed: int = 0,
+                   gap_ticks: int = 0,
+                   max_ticks_per_phase: int = 200000) -> "RouterReport":
+        """Replay a popularity-shifting workload as completion-paced phases:
+        each ``(model, n_requests)`` phase submits n requests to the hot
+        model and ticks the WHOLE gateway until they resolve — so models
+        left idle by the shift accrue idle ticks during the next phase and
+        scale to zero while other models serve. A model hot again in a
+        later phase therefore exercises the reactivation path. (The
+        tick-per-arrival ``run_trace`` is kept for externally-timed traces;
+        completion pacing is what makes phase boundaries meaningful when one
+        tick is microseconds but an activation is wall-clock seconds.)
+
+        ``gap_ticks`` inserts a quiet period after each phase. Idle-ness is
+        counted in ticks but phases end on wall-clock completion, so whether
+        the previous hot model reaches ``idle_ticks_to_zero`` *during* the
+        next phase depends on scheduler timing; a gap >= the idle threshold
+        makes every popularity shift deterministically reach COLD — what the
+        examples/benchmarks assert on."""
+        import random
+        rng = random.Random(seed)
+        prompt_fn = prompt_fn or default_prompt_fn
+        for model, n in phases:
+            reqs = [self.submit(model, *prompt_fn(rng)) for _ in range(n)]
+            start = self._tick
+            while (any(q.state not in (ReqState.DONE, ReqState.FAILED)
+                       for q in reqs)
+                   and self._tick - start < max_ticks_per_phase):
+                if self.tick() == 0:
+                    time.sleep(0.001)  # yield to provisioning threads
+            for _ in range(gap_ticks):
+                if self.tick() == 0:
+                    time.sleep(0.0001)
+        return self.report()
+
+    # -- accounting ------------------------------------------------------
+    def report(self) -> RouterReport:
+        rep = RouterReport(
+            ticks=self._tick,
+            wall_s=(time.perf_counter() - self._t0) if self._t0 else 0.0,
+            peak_resident_replicas=self.peak_resident_replicas)
+        for name, e in self.entries.items():
+            stats = ModelStats(**vars(e.stats))
+            if e.fleet is not None:  # fold the live fleet in, non-destructively
+                e.fleet.drain_background(timeout=120.0)
+                frep = e.fleet.report()
+                stats.fallback_compiles += sum(r.fallback_compiles
+                                               for r in frep.replicas)
+                stats.background_errors += sum(r.background_errors
+                                               for r in frep.replicas)
+                stats.replicas_spawned += len(frep.replicas)
+            entry = stats.summary(e.requests)
+            entry["state"] = e.state.value
+            rep.models[name] = entry
+        return rep

@@ -1,0 +1,177 @@
+"""ModelRouter: routing by model name, scale-to-zero round trips with token
+identity, keep-resident policy, and two fleets concurrently reading one
+shared depot (serving/router.py + core/depot.py)."""
+import threading
+import time
+
+import jax
+import pytest
+
+from repro.configs.registry import get_arch
+from repro.core import TemplateDepot
+from repro.models.model import Model
+from repro.serving.engine import ServingEngine
+from repro.serving.fleet import AutoscalePolicy
+from repro.serving.router import (ModelPolicy, ModelRouter, ModelState,
+                                  popularity_trace)
+
+CFG = get_arch("smollm-360m").reduced()
+PROMPT = [5, 9, 2]
+
+
+def factory():
+    eng = ServingEngine(Model(CFG), max_batch=4, max_seq=32,
+                        bucket_mode="pow2")
+    eng.load_weights(rng=jax.random.PRNGKey(0))
+    return eng
+
+
+@pytest.fixture(scope="module")
+def depot(tmp_path_factory):
+    """One depot holding the same capture set under two model names (the
+    two-model zoo; 100% blob sharing by construction)."""
+    d = TemplateDepot(str(tmp_path_factory.mktemp("zoo") / "depot"))
+    ar, _ = factory().save_archive()
+    d.put_archive("model-a", ar)
+    d.put_archive("model-b", ar)
+    return d
+
+
+@pytest.fixture(scope="module")
+def reference():
+    """Token stream of a never-deactivated engine for PROMPT."""
+    eng = factory()
+    eng.cold_start_vanilla()
+    ref = eng.submit(PROMPT, 6)
+    eng.run_until_drained()
+    return list(ref.generated)
+
+
+def policy(**kw):
+    base = dict(
+        autoscale=AutoscalePolicy(min_replicas=1, max_replicas=2,
+                                  target_inflight_per_replica=8,
+                                  scale_down_idle_ticks=5),
+        scale_to_zero=True, idle_ticks_to_zero=10)
+    base.update(kw)
+    return ModelPolicy(**base)
+
+
+def drive(router, req, max_s=300.0):
+    t0 = time.perf_counter()
+    while req.state.value not in ("done", "failed"):
+        if router.tick() == 0:
+            time.sleep(0.001)
+        assert time.perf_counter() - t0 < max_s, "router wedged"
+    return req
+
+
+def test_scale_to_zero_round_trip(depot, reference):
+    """The ISSUE acceptance test: deactivate under load-drain, reactivate
+    from the depot, token streams byte-identical to a never-deactivated
+    engine, zero critical-path compiles across both activations."""
+    router = ModelRouter()
+    router.add_model("model-a", factory, archive=depot.open("model-a"),
+                     policy=policy())
+    r1 = drive(router, router.submit("model-a", PROMPT, 6))
+    assert r1.state.value == "done" and list(r1.generated) == reference
+
+    # load drains -> idle ticks accumulate -> the model scales to ZERO
+    for _ in range(5000):
+        router.tick()
+        if router.state_of("model-a") is ModelState.COLD:
+            break
+        time.sleep(0.001)
+    assert router.state_of("model-a") is ModelState.COLD
+    assert router.entries["model-a"].fleet is None  # replicas+KV released
+
+    # a queued request reactivates it from the (now warm) depot
+    r2 = drive(router, router.submit("model-a", PROMPT, 6))
+    assert r2.state.value == "done"
+    assert list(r2.generated) == reference, \
+        "token stream diverged across deactivate->reactivate"
+    rep = router.report().summary()
+    assert rep["models"]["model-a"]["activations"] == 2
+    assert rep["models"]["model-a"]["deactivations"] >= 1
+    assert rep["fallback_compiles"] == 0
+    assert rep["background_errors"] == 0
+    assert len(rep["models"]["model-a"]["activation_ready_s"]) == 2
+    router.deactivate_all()
+
+
+def test_routing_and_unknown_model(depot):
+    router = ModelRouter()
+    for name in ("model-a", "model-b"):
+        router.add_model(name, factory, archive=depot.open(name),
+                         policy=policy())
+    ra = router.submit("model-a", PROMPT, 4)
+    rb = router.submit("model-b", [7, 7], 4)
+    for r in (ra, rb):
+        drive(router, r)
+    assert ra.state.value == rb.state.value == "done"
+    # requests landed on their own model's fleet, not each other's
+    assert ra in router.entries["model-a"].requests
+    assert rb in router.entries["model-b"].requests
+    assert ra not in router.entries["model-b"].requests
+    with pytest.raises(KeyError, match="unknown model"):
+        router.submit("model-c", PROMPT, 4)
+    router.deactivate_all()
+
+
+def test_concurrent_two_fleets_one_depot(depot):
+    """Two models' fleets cold-start CONCURRENTLY against one shared depot:
+    every blob is read from disk at most once depot-wide (single-flight
+    through the shared BlobStore), and both models serve correctly."""
+    store = depot.store
+    reads = []
+    lock = threading.Lock()
+    orig = type(store._source).read_hash
+
+    def counting(h):
+        with lock:
+            reads.append(h)
+        return orig(store._source, h)
+    store._source.read_hash = counting
+    try:
+        router = ModelRouter()
+        for name in ("model-a", "model-b"):
+            router.add_model(name, factory, archive=depot.open(name),
+                             policy=policy())
+        # trigger both activations in the same tick: two provisioning
+        # threads LOAD from the depot at the same time
+        ra = router.submit("model-a", PROMPT, 4)
+        rb = router.submit("model-b", PROMPT, 4)
+        for r in (ra, rb):
+            drive(router, r)
+        assert ra.state.value == rb.state.value == "done"
+        assert list(ra.generated) == list(rb.generated)  # same weights+seed
+        dup = len(reads) - len(set(reads))
+        assert dup == 0, f"{dup} duplicate depot reads across fleets"
+        rep = router.report().summary()
+        assert rep["fallback_compiles"] == 0
+        assert rep["background_errors"] == 0
+        router.deactivate_all()
+    finally:
+        store._source.read_hash = orig.__get__(store._source)
+
+
+def test_keep_resident_never_deactivates(depot):
+    router = ModelRouter()
+    router.add_model("model-a", factory, archive=depot.open("model-a"),
+                     policy=policy(scale_to_zero=False, idle_ticks_to_zero=2))
+    drive(router, router.submit("model-a", PROMPT, 4))
+    for _ in range(50):
+        router.tick()
+    assert router.state_of("model-a") is ModelState.ACTIVE
+    assert router.entries["model-a"].fleet is not None
+    router.deactivate_all()
+    assert router.state_of("model-a") is ModelState.COLD
+
+
+def test_popularity_trace_shape():
+    tr = popularity_trace(["a", "b"], phase_ticks=3, hot_rate=2,
+                          cold_rate=0, rounds=2, gap_ticks=1)
+    assert len(tr) == 2 * 2 * (3 + 1)
+    assert tr[0] == {"a": 2, "b": 0}
+    assert tr[3] == {}                      # gap tick
+    assert tr[4] == {"a": 0, "b": 2}
