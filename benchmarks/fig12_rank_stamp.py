@@ -26,6 +26,7 @@ import time
 import numpy as np
 import jax, jax.numpy as jnp
 from repro.configs.registry import get_arch
+from repro.core.archive import Archive
 from repro.launch.mesh import ShardCtx, make_capture_mesh, make_tp_mesh
 from repro.models.model import Model
 from repro.serving.engine import ServingEngine
@@ -40,7 +41,7 @@ def build(mesh):
 mesh_cap = make_capture_mesh()
 with mesh_cap:
     eng = build(mesh_cap)
-    archive, _ = eng.save_archive()
+    archive_bytes = eng.save_archive()[0].to_bytes()
 
 for n in (%(ranks)s):
     mesh = make_tp_mesh(n)
@@ -49,6 +50,10 @@ for n in (%(ranks)s):
         jax.clear_caches()
         with mesh:
             e = build(mesh)
+            # fresh Archive object per leg: each cold start models a fresh
+            # process, so the per-Archive deserialized-template cache and
+            # blob cache must not carry over between measured LOADs
+            archive = Archive.from_bytes(archive_bytes, lazy=True)
             t0 = time.perf_counter()
             rep = e.cold_start_foundry(archive, background_exact=False,
                                        allow_stamping=allow)

@@ -107,6 +107,14 @@ class LoadReport:
                           visible: happy-path tests assert this is 0.
         background_first_error
                           message of the first background failure (or None).
+        warm              this was a LOAD into an already-warm serving
+                          process (live reshard): prealloc was skipped —
+                          the plan extent is already mapped — and templates
+                          deserialized by an earlier LOAD of the same
+                          Archive object were reused.
+        templates_reused  templates taken from the archive's deserialized-
+                          template cache instead of being fetched +
+                          deserialized again (counted toward n_templates).
     """
     phases: Dict[str, float] = field(default_factory=dict)
     pipeline: Dict[str, float] = field(default_factory=dict)
@@ -118,6 +126,8 @@ class LoadReport:
     background_exact: int = 0
     background_errors: int = 0
     background_first_error: Optional[str] = None
+    warm: bool = False
+    templates_reused: int = 0
 
     @property
     def critical_path_s(self) -> float:
@@ -131,6 +141,21 @@ def _deserialize_template(blob: bytes):
     if isinstance(payload, tuple):
         return se.deserialize_and_load(*payload)
     return se.deserialize_and_load(payload)
+
+
+def _template_cache(archive: Archive) -> dict:
+    """Per-Archive cache of *unwrapped* deserialized template executables,
+    keyed by blob hash. Scoped to the Archive object on purpose: a fleet (or
+    a live reshard) shares ONE archive across every replica LOAD, so the
+    second and later LOADs skip fetch + deserialize entirely, while separate
+    Archive instances (benchmark legs, tests) stay independent. Sharing the
+    underlying loaded executable is safe — calls are functional and each
+    LOAD wraps it in its own Resharding/StampedExecutable — and a racing
+    first-LOAD pair at worst deserializes twice (last write wins)."""
+    cache = getattr(archive, "_loaded_template_cache", None)
+    if cache is None:
+        cache = archive._loaded_template_cache = {}
+    return cache
 
 
 # ---------------------------------------------------------------------------
@@ -250,6 +275,8 @@ def foundry_load(archive: Archive, mesh, *,
                  kernel_catalog=None,
                  allow_stamping: bool = True,
                  pipeline_depth: int = 4,
+                 warm: bool = False,
+                 reuse_templates: bool = True,
                  verbose: bool = False) -> tuple[Dict[str, ProgramSet], LoadReport, Optional[MemoryPlan]]:
     """Restore executables from an archive. Returns
     ({spec_name: ProgramSet}, report, load_side_memory_plan).
@@ -258,8 +285,16 @@ def foundry_load(archive: Archive, mesh, *,
     mesh mismatches down the compile-from-StableHLO fallback (the paper's
     no-stamping ablation; benchmarks/fig12_rank_stamp.py).
     ``pipeline_depth`` bounds how many topology groups the LOAD stage graph
-    keeps in flight (module docstring); 0 degrades to depth 1."""
-    rep = LoadReport()
+    keeps in flight (module docstring); 0 degrades to depth 1.
+    ``warm=True`` is the live-reshard case — a LOAD racing an already-warm
+    serving process (paper §4.3 "dynamic parallelism switching"): the
+    memory-plan extent is already mapped by the serving replicas, so
+    preallocation is skipped (the plan itself is still parsed and returned
+    for verification). ``reuse_templates`` (default on) consults the
+    archive's deserialized-template cache so repeat LOADs of one shared
+    Archive — fleet scale-out, reshard — skip fetch + deserialize for
+    templates an earlier LOAD already realized."""
+    rep = LoadReport(warm=warm)
     t0 = time.perf_counter()
     manifest = archive.manifest
     rep.phases["parse_s"] = time.perf_counter() - t0
@@ -285,6 +320,7 @@ def foundry_load(archive: Archive, mesh, *,
     names = spec_names or list(manifest["specs"])
     jobs: List[_TemplateJob] = []
     pending_exact: List[tuple] = []
+    tcache = _template_cache(archive) if reuse_templates else {}
     for name in names:
         spec_m = manifest["specs"][name]
         donate = spec_m.get("donate_argnums")
@@ -294,14 +330,20 @@ def foundry_load(archive: Archive, mesh, *,
         for g in groups:
             blob_hash = None
             deserialize = False
+            cached = None
             if g.executable_blob:
                 if rep.restore_path == "fallback":
                     # prefetch the StableHLO the fallback compile will read
                     blob_hash = g.bucket_export_blobs[g.template_bucket]
+                elif reuse_templates and (cached := tcache.get(
+                        g.executable_blob)) is not None:
+                    rep.templates_reused += 1  # no fetch, no deserialize
                 else:
                     blob_hash = g.executable_blob
                     deserialize = True
-            jobs.append(_TemplateJob(ps, g, donate, blob_hash, deserialize))
+            job = _TemplateJob(ps, g, donate, blob_hash, deserialize)
+            job.exe = cached
+            jobs.append(job)
             for b in g.buckets:
                 if b != g.template_bucket and b in g.bucket_export_blobs:
                     pending_exact.append((ps, g, b, donate))
@@ -315,7 +357,10 @@ def foundry_load(archive: Archive, mesh, *,
         plan = None
         if manifest.get("memory_plan"):
             plan = MemoryPlan.for_load(manifest["memory_plan"])
-            plan.preallocate()
+            if not warm:
+                # a warm process (live reshard) already has the recorded
+                # extent mapped; re-preallocating would double the footprint
+                plan.preallocate()
         rep.phases["prealloc_s"] = time.perf_counter() - t0
 
         # --- kernel catalog prime -----------------------------------------
@@ -329,6 +374,10 @@ def foundry_load(archive: Archive, mesh, *,
         for job in pipe:
             g, exe = job.group, job.exe
             if g.executable_blob:
+                if (reuse_templates and job.deserialize and exe is not None
+                        and g.executable_blob not in tcache):
+                    tcache[g.executable_blob] = exe  # unwrapped: wrappers
+                    # below are per-LOAD (donation ownership is per engine)
                 if exe is not None and rep.restore_path == "stamped":
                     try:
                         exe = stamp_template(exe, rank_deltas,

@@ -58,6 +58,47 @@ def mesh_device_count(mesh: Optional[Mesh]) -> int:
     return 1 if mesh is None else int(mesh.devices.size)
 
 
+@dataclass(frozen=True)
+class MeshSpec:
+    """Buildable description of a deployment mesh: (shape, axes) without
+    committed devices. Policies that *switch* parallelism at runtime (the
+    router's ``ReshardPolicy``, ``Fleet.reshard``) hold specs rather than
+    concrete meshes so a topology can be named before — and independently
+    of — the moment its devices are claimed. ``shape=()`` describes the
+    un-meshed single-process topology (builds to ``None``)."""
+
+    shape: tuple = ()
+    axes: tuple = ("data", "model")
+
+    def build(self) -> Optional[Mesh]:
+        if not self.shape:
+            return None
+        return jax.make_mesh(tuple(self.shape), tuple(self.axes[:len(self.shape)]))
+
+    def describe(self) -> str:
+        if not self.shape:
+            return "unmeshed"
+        return "x".join(str(s) for s in self.shape)
+
+
+def resolve_mesh(mesh_or_spec) -> Optional[Mesh]:
+    """Accept a concrete ``Mesh``, a ``MeshSpec``, or ``None`` (un-meshed)
+    wherever a deployment topology is taken (``Fleet.reshard``,
+    router reshard policies)."""
+    if isinstance(mesh_or_spec, MeshSpec):
+        return mesh_or_spec.build()
+    return mesh_or_spec
+
+
+def describe_mesh(mesh: Optional[Mesh]) -> str:
+    """Human-readable topology tag for reports ("unmeshed", "1x2", ...)."""
+    if mesh is None:
+        return "unmeshed"
+    if isinstance(mesh, MeshSpec):
+        return mesh.describe()
+    return "x".join(str(s) for s in mesh.devices.shape)
+
+
 # Default logical-axis -> mesh-axis candidates. Each entry is a tuple of mesh
 # axes the logical axis WANTS to occupy; axes missing from the mesh or failing
 # divisibility are dropped (in order), falling back to replication.

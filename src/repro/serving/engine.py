@@ -52,8 +52,8 @@ from repro.core import (Archive, CaptureSpec, MemoryPlan, ProgramSet,
 from repro.core.templates import TopologyGroup
 from repro.launch.mesh import ShardCtx
 from repro.models.model import Model
-from repro.serving.kvcache import KVCachePool
-from repro.serving.scheduler import Request, Scheduler
+from repro.serving.kvcache import KVCachePool, RowBundle
+from repro.serving.scheduler import ReqState, Request, Scheduler
 
 
 @dataclass
@@ -226,6 +226,7 @@ class ServingEngine:
     def cold_start_foundry(self, archive: Archive,
                            background_exact: bool = True,
                            allow_stamping: bool = True,
+                           warm: bool = False,
                            verbose: bool = False) -> ColdStartReport:
         """LOAD ``archive`` and become servable. The report's mode is
         "foundry" when the archive was captured on this engine's topology
@@ -236,7 +237,13 @@ class ServingEngine:
         The engine adopts the archive's decode loop: the archived programs
         either fuse sampling (device loop) or return logits (host loop), and
         the serving loop must match what SAVE captured. Archives without the
-        tag (pre-fusion) are served with the host loop."""
+        tag (pre-fusion) are served with the host loop.
+
+        ``warm=True`` marks this a LOAD into an already-warm serving process
+        (live reshard: the old topology's replicas are still serving when
+        the new ones come up): the memory-plan preallocation is skipped —
+        the extent is already mapped in this process — and templates
+        deserialized by an earlier LOAD of the same archive are reused."""
         spec_m = archive.manifest.get("specs", {}).get("decode", {})
         archived_loop = (spec_m.get("tags") or {}).get("decode_loop", "host")
         if archived_loop != self.decode_loop and verbose:
@@ -246,7 +253,7 @@ class ServingEngine:
         progs, load_rep, plan = foundry_load(
             archive, self.ctx.mesh,
             background_exact=background_exact,
-            allow_stamping=allow_stamping, verbose=verbose)
+            allow_stamping=allow_stamping, warm=warm, verbose=verbose)
         mode = ("foundry-stamped" if load_rep.restore_path == "stamped"
                 else "foundry")
         rep = ColdStartReport(mode, n_buckets=len(self.buckets),
@@ -444,6 +451,60 @@ class ServingEngine:
             self.step()
             steps += 1
         return steps
+
+    # ---- live migration (Fleet.reshard cutover) ----------------------------
+    def export_inflight(self):
+        """Detach this engine's whole in-flight population for migration to
+        another engine (possibly on a different mesh): every RUNNING request
+        with its KV rows, plus the queued-but-not-admitted requests. Returns
+        ``(running, bundle, queued)`` where ``bundle`` is a
+        ``kvcache.RowBundle`` aligned with ``running`` (None when nothing was
+        running). The requests are left in WAITING with no slot — in flight
+        between engines — and this engine's device token state is
+        invalidated."""
+        running = [r for r in self.scheduler.running.values()
+                   if r.slot is not None]
+        bundle = (self.pool.export_rows([r.slot for r in running])
+                  if running else None)
+        for r in running:
+            self.scheduler.running.pop(r.req_id, None)
+            r.slot = None
+            r.state = ReqState.WAITING
+        # anything admitted but slotless (mid-failure) rides with the queue
+        stragglers = list(self.scheduler.running.values())
+        for r in stragglers:
+            self.scheduler.running.pop(r.req_id, None)
+            r.state = ReqState.WAITING
+        queued = stragglers + list(self.scheduler.queue)
+        self.scheduler.queue.clear()
+        self._tokens_dirty = True
+        return running, bundle, queued
+
+    def adopt_inflight(self, reqs: List[Request],
+                       bundle: Optional[RowBundle]) -> int:
+        """Adopt migrated requests together with their exported KV rows from
+        a foreign pool: rows are resharded onto this pool's cache specs
+        (``KVCachePool.import_rows``) and decode continues from the migrated
+        state — token streams stay byte-identical across the move. Adopts as
+        many requests as this engine has free capacity for and returns the
+        count; the caller re-routes the remainder (with
+        ``bundle.select(range(n, bundle.n))``)."""
+        if not reqs:
+            return 0
+        if bundle is None or bundle.n != len(reqs):
+            raise ValueError("adopt_inflight needs one bundle row per request")
+        n_fit = min(len(reqs), self.max_batch - self.pool.n_active)
+        if n_fit <= 0:
+            return 0
+        take = reqs[:n_fit]
+        slots = self.pool.import_rows(bundle.select(range(n_fit)),
+                                      [r.req_id for r in take])
+        for r, s in zip(take, slots):
+            r.slot = s
+            r.state = ReqState.RUNNING
+            self.scheduler.running[r.req_id] = r
+        self._tokens_dirty = True
+        return n_fit
 
     # ---- fault tolerance ---------------------------------------------------
     def simulate_worker_failure(self):

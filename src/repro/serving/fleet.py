@@ -27,6 +27,26 @@ provisioning, so a burst does not spawn a storm), scale down — at most one
 replica per tick — when a replica has been idle for
 ``scale_down_idle_ticks`` consecutive ticks and the fleet is above
 ``min_replicas``.
+
+Live reshard (``Fleet.reshard``, paper §4.3 "dynamic parallelism
+switching"; docs/architecture.md §8): the fleet moves a *serving* model
+between shape-compatible meshes without tearing traffic down. Replacement
+replicas stand up on the new topology via stamped-template LOAD of the SAME
+archive (warm: no re-prealloc, deserialized templates reused) while the old
+generation keeps serving; at cutover every in-flight request's KV rows are
+exported from the old pools and imported — ``device_put``-resharded — into
+the new mesh's pools, the backlog flips over atomically, and the old
+replicas are drained and released. State machine::
+
+    SERVING ──reshard()──▶ DUAL ──all new replicas READY──▶ CUTOVER
+       ▲                    (old generation keeps serving)      │
+       └───────── DRAINED ◀── migrate KV rows + flip queue ─────┘
+
+Zero dropped requests, zero fallback compiles, token streams byte-identical
+across the switch (benchmarks/fig15_reshard.py asserts all three). The
+``strategy="restart"`` ablation is the drain-and-restart baseline: old
+replicas are torn down FIRST, requests retry from their kept prefixes, and
+the backlog stalls while the new topology provisions.
 """
 from __future__ import annotations
 
@@ -42,6 +62,7 @@ from enum import Enum
 from typing import Callable, Deque, Dict, List, Optional, Sequence
 
 from repro.core import Archive, wait_for_background
+from repro.launch.mesh import describe_mesh, resolve_mesh
 from repro.serving.engine import ServingEngine
 from repro.serving.scheduler import Request, ReqState
 
@@ -97,6 +118,10 @@ class Replica:
         self.engine: Optional[ServingEngine] = None
         self.cold_report = None
         self.idle_ticks = 0
+        # set by Fleet.abort_reshard on a replica it could not join: an
+        # engine the provisioning thread attaches later must be dropped,
+        # not served or accounted (poll() reaps it on the next tick)
+        self.discard_engine = False
         self._engine_factory = engine_factory
         self._cold_start = cold_start
         self._mesh = mesh
@@ -124,6 +149,8 @@ class Replica:
 
     def poll(self) -> ReplicaState:
         """Advance PROVISIONING -> READY/FAILED when the thread finishes."""
+        if self.discard_engine and self.engine is not None:
+            self.engine = None  # late attach after an aborted reshard
         if self.state is ReplicaState.PROVISIONING and not self._thread.is_alive():
             if self._error is not None or self.engine is None:
                 self.state = ReplicaState.FAILED
@@ -147,11 +174,16 @@ class Replica:
         self.stats.steps += 1
         self.stats.served_requests = len(self.engine.scheduler.done)
         if self.stats.first_token_t is None:
+            # only tokens emitted by THIS replica count: a request migrated
+            # in by a reshard cutover carries a first_token_t from the old
+            # generation, which predates this replica's spawn
             firsts = [r.first_token_t
                       for r in self.engine.scheduler.running.values()
-                      if r.first_token_t is not None]
+                      if r.first_token_t is not None
+                      and r.first_token_t >= self.stats.spawned_t]
             firsts += [r.first_token_t for r in self.engine.scheduler.done
-                       if r.first_token_t is not None]
+                       if r.first_token_t is not None
+                       and r.first_token_t >= self.stats.spawned_t]
             if firsts:
                 self.stats.first_token_t = min(firsts)
         self.idle_ticks = self.idle_ticks + 1 if self.load == 0 else 0
@@ -193,6 +225,65 @@ class AutoscalePolicy:
 
 
 @dataclass
+class ReshardReport:
+    """Timeline + accounting of one parallelism switch (``Fleet.reshard``).
+
+    All times are perf_counter seconds. ``cutover_t``/``drained_t`` stay
+    None until the corresponding transition happens; ``aborted`` carries the
+    reason when the switch could not complete (the old generation keeps
+    serving on a "live" abort).
+    """
+    strategy: str               # "live" | "restart"
+    from_mesh: str
+    to_mesh: str
+    started_t: float
+    new_replicas: int = 0
+    cutover_t: Optional[float] = None
+    drained_t: Optional[float] = None
+    dual_ticks: int = 0          # ticks the two generations coexisted
+                                 # (live only; stays 0 for "restart")
+    migrated_requests: int = 0   # in-flight KV rows moved across meshes
+    requeued_requests: int = 0   # retried from kept prefix (no KV carried)
+    released_replicas: int = 0
+    aborted: Optional[str] = None
+
+    @property
+    def done(self) -> bool:
+        return self.drained_t is not None or self.aborted is not None
+
+    @property
+    def time_to_new_topology_s(self) -> Optional[float]:
+        """reshard() call -> old generation fully drained and released."""
+        return (None if self.drained_t is None
+                else self.drained_t - self.started_t)
+
+    def summary(self) -> Dict[str, object]:
+        return {
+            "strategy": self.strategy,
+            "from_mesh": self.from_mesh, "to_mesh": self.to_mesh,
+            "time_to_new_topology_s": self.time_to_new_topology_s,
+            "dual_ticks": self.dual_ticks,
+            "migrated_requests": self.migrated_requests,
+            "requeued_requests": self.requeued_requests,
+            "new_replicas": self.new_replicas,
+            "released_replicas": self.released_replicas,
+            "aborted": self.aborted,
+        }
+
+
+@dataclass
+class _ReshardOp:
+    """In-flight reshard state (one at a time per fleet)."""
+    new_mesh: object
+    factory: Callable[[], ServingEngine]
+    strategy: str
+    report: ReshardReport
+    old: List[Replica] = field(default_factory=list)
+    new: List[Replica] = field(default_factory=list)
+    deferrals: int = 0  # cutover holds (see Fleet._advance_reshard)
+
+
+@dataclass
 class FleetReport:
     """Fleet-wide outcome of a trace replay (see Fleet.report)."""
     mode: str
@@ -204,6 +295,7 @@ class FleetReport:
     tpots: List[float] = field(default_factory=list)
     n_done: int = 0
     n_failed: int = 0
+    reshards: List[Dict[str, object]] = field(default_factory=list)
 
     @staticmethod
     def _pct(xs: List[float], q: float) -> Optional[float]:
@@ -233,6 +325,7 @@ class FleetReport:
                                      for r in self.replicas),
             "background_errors": sum(r.background_errors
                                      for r in self.replicas),
+            "reshards": list(self.reshards),
         }
 
 
@@ -252,45 +345,60 @@ class Fleet:
     "foundry" (LOAD ``archive``; reported as "foundry-stamped" automatically
     when the archive was captured on a different, shape-compatible mesh).
     ``mesh`` (optional) is entered around every engine build/step — pass the
-    deployment mesh for stamped fleets.
+    deployment mesh for stamped fleets. ``factory_for_mesh`` is the
+    mesh-parameterized engine factory a resharding fleet needs (the
+    zero-arg ``engine_factory`` then becomes optional): replicas are built
+    with ``factory_for_mesh(current_mesh)``, and ``reshard`` can derive the
+    new topology's factory itself.
     """
 
-    def __init__(self, engine_factory: Callable[[], ServingEngine], *,
+    def __init__(self, engine_factory: Optional[Callable[[], ServingEngine]] = None, *,
                  mode: str = "foundry", archive: Optional[Archive] = None,
                  policy: Optional[AutoscalePolicy] = None,
                  allow_stamping: bool = True, background_exact: bool = True,
-                 mesh=None, verbose: bool = False):
+                 mesh=None,
+                 factory_for_mesh: Optional[Callable] = None,
+                 verbose: bool = False):
         if mode == "foundry" and archive is None:
             raise ValueError("foundry fleet needs the shared archive")
         if mode not in ("foundry", "vanilla", "eager"):
             raise ValueError(f"unknown fleet mode {mode!r}")
+        if engine_factory is None and factory_for_mesh is None:
+            raise ValueError("Fleet needs engine_factory or factory_for_mesh")
         self.engine_factory = engine_factory
+        self.factory_for_mesh = factory_for_mesh
         self.mode = mode
         self.archive = archive
         self.policy = policy or AutoscalePolicy()
         self.allow_stamping = allow_stamping
         self.background_exact = background_exact
-        self.mesh = mesh
+        self.mesh = resolve_mesh(mesh)
         self.verbose = verbose
         self.replicas: List[Replica] = []
         self.backlog: Deque[Request] = deque()
         self.requests: List[Request] = []
         self.peak_alive = 0
         self.spawn_failures = 0
+        # set True (router ReshardPolicy.prefer_reshard_over_scale_out) when
+        # the answer to sustained load is a bigger mesh, not more replicas
+        self.suppress_scale_out = False
+        self.reshard_reports: List[ReshardReport] = []
+        self._reshard: Optional[_ReshardOp] = None
         self._ids = itertools.count()
         self._rids = itertools.count()
         self._tick = 0
         self._t0: Optional[float] = None
 
     # -- lifecycle -------------------------------------------------------
-    def _cold_start(self, eng: ServingEngine):
+    def _cold_start(self, eng: ServingEngine, warm: bool = False):
         if self.mode == "vanilla":
             return eng.cold_start_vanilla()
         if self.mode == "eager":
             return eng.cold_start_eager()
         return eng.cold_start_foundry(self.archive,
                                       background_exact=self.background_exact,
-                                      allow_stamping=self.allow_stamping)
+                                      allow_stamping=self.allow_stamping,
+                                      warm=warm)
 
     def _alive(self) -> List[Replica]:
         return [r for r in self.replicas
@@ -299,11 +407,20 @@ class Fleet:
     def _ready(self) -> List[Replica]:
         return [r for r in self.replicas if r.state is ReplicaState.READY]
 
+    def _factory_for(self, mesh) -> Callable[[], ServingEngine]:
+        """Zero-arg factory for one replica, with the mesh snapshotted at
+        spawn time (a reshard may flip ``self.mesh`` while a provisioning
+        thread is still running)."""
+        if self.factory_for_mesh is not None:
+            return lambda fm=self.factory_for_mesh, m=mesh: fm(m)
+        return self.engine_factory
+
     def scale_up(self, n: int = 1) -> List[Replica]:
         out = []
         for _ in range(n):
-            r = Replica(next(self._rids), self.engine_factory,
-                        self._cold_start, mesh=self.mesh)
+            mesh = self.mesh
+            r = Replica(next(self._rids), self._factory_for(mesh),
+                        self._cold_start, mesh=mesh)
             self.replicas.append(r)
             out.append(r)
             if self.verbose:
@@ -334,8 +451,15 @@ class Fleet:
 
     def _dispatch(self):
         """Drain the shared backlog onto READY replicas, least-loaded first,
-        never queueing more than one batch-worth ahead per replica."""
+        never queueing more than one batch-worth ahead per replica. During a
+        live reshard's DUAL phase the replacement generation is NOT a
+        dispatch target: the queue flips to it atomically at cutover, and
+        routing work there early would leave the cutover nothing to
+        migrate."""
         ready = self._ready()
+        if self._reshard is not None and self._reshard.strategy == "live":
+            pending_new = {id(r) for r in self._reshard.new}
+            ready = [r for r in ready if id(r) not in pending_new]
         while self.backlog and ready:
             ready.sort(key=lambda r: r.load)
             tgt = ready[0]
@@ -343,13 +467,21 @@ class Fleet:
                 break  # everyone is saturated; leave work visible on backlog
             tgt.assign(self.backlog.popleft())
 
+    def inflight(self) -> int:
+        """Requests the fleet currently owes: backlog + every READY
+        replica's queued/running load (the autoscale and router reshard
+        trigger signal)."""
+        return len(self.backlog) + sum(r.load for r in self._ready())
+
     def _autoscale(self):
         pol = self.policy
         alive = self._alive()
-        inflight = len(self.backlog) + sum(r.load for r in self._ready())
+        inflight = self.inflight()
         desired = max(pol.min_replicas,
                       math.ceil(inflight / max(1, pol.target_inflight_per_replica)))
         desired = min(pol.max_replicas, desired)
+        if self.suppress_scale_out:
+            desired = min(desired, max(pol.min_replicas, len(alive)))
         if desired > len(alive) and self._can_spawn():
             self.scale_up(desired - len(alive))
         elif not self.backlog and len(alive) > pol.min_replicas:
@@ -362,10 +494,252 @@ class Fleet:
                               f"(idle {r.idle_ticks} ticks)")
                     break
 
+    # -- live reshard (module docstring; docs/architecture.md §8) --------
+    def reshard(self, new_mesh, *, factory: Optional[Callable[[], ServingEngine]] = None,
+                n_replicas: Optional[int] = None, strategy: str = "live",
+                warm: bool = True, wait: bool = False,
+                wait_timeout_s: float = 600.0) -> ReshardReport:
+        """Move this serving fleet onto ``new_mesh`` (a Mesh, a
+        ``launch.mesh.MeshSpec``, or None for un-meshed single-process).
+
+        strategy="live" (the tentpole path): replacement replicas provision
+        on the new topology — stamped-template LOAD of the same shared
+        archive, ``warm`` by default — while the old generation keeps
+        serving (DUAL); once every replacement resolves, the cutover
+        migrates each in-flight request's KV rows from the old pools into
+        the new mesh's pools (``ServingEngine.export_inflight`` /
+        ``adopt_inflight``), flips the backlog, and drains + releases the
+        old replicas. No request is dropped and no token diverges.
+
+        strategy="restart" is the drain-and-restart baseline fig15 measures
+        against: the old topology is torn down FIRST (in-flight requests
+        requeue with their generated prefixes, losing their KV rows) and
+        the backlog stalls until the new topology provisions.
+
+        The switch is asynchronous — ``tick()`` advances it — unless
+        ``wait=True``, which ticks the fleet (still serving) until the
+        switch completes. Returns the live ``ReshardReport``; a "live"
+        switch whose every replacement replica fails to provision is
+        aborted in place and the old generation keeps serving.
+        """
+        if self._reshard is not None:
+            raise RuntimeError("a reshard is already in progress")
+        if strategy not in ("live", "restart"):
+            raise ValueError(f"unknown reshard strategy {strategy!r}")
+        new_mesh = resolve_mesh(new_mesh)
+        if factory is None:
+            if self.factory_for_mesh is None:
+                raise ValueError(
+                    "reshard needs `factory` (zero-arg engine factory for "
+                    "the new topology) or a fleet-level factory_for_mesh")
+            factory = (lambda fm=self.factory_for_mesh, m=new_mesh: fm(m))
+        if self._t0 is None:
+            self.start()
+        n = n_replicas if n_replicas is not None else max(len(self._ready()), 1)
+        n = max(1, min(n, self.policy.max_replicas))
+        report = ReshardReport(
+            strategy=strategy, from_mesh=describe_mesh(self.mesh),
+            to_mesh=describe_mesh(new_mesh),
+            started_t=time.perf_counter(), new_replicas=n)
+        op = _ReshardOp(new_mesh=new_mesh, factory=factory,
+                        strategy=strategy, report=report,
+                        old=list(self._alive()))
+        if self.verbose:
+            print(f"[fleet] reshard[{strategy}] {report.from_mesh} -> "
+                  f"{report.to_mesh} ({n} replicas, tick {self._tick})")
+        if strategy == "restart":
+            # baseline: tear the old topology down before the new one exists
+            for old in op.old:
+                self._requeue_replica(old, report)
+            self.mesh = op.new_mesh
+            self.engine_factory = op.factory
+            report.cutover_t = time.perf_counter()
+        op.new = self._spawn_generation(op, n, warm)
+        self._reshard = op
+        if wait:
+            t_end = time.perf_counter() + wait_timeout_s
+            while self._reshard is not None:
+                if time.perf_counter() > t_end:
+                    # abort before raising: leaving the op installed would
+                    # block every later reshard AND keep autoscaling paused
+                    self.abort_reshard(f"wait timeout after {wait_timeout_s}s")
+                    raise RuntimeError(
+                        f"reshard to {report.to_mesh} did not complete in "
+                        f"{wait_timeout_s}s (replacement replicas stuck "
+                        f"provisioning); aborted — the old topology keeps "
+                        f"serving")
+                if self.tick() == 0:
+                    time.sleep(0.001)  # serving idle; yield to provisioning
+        return report
+
+    def abort_reshard(self, reason: str = "aborted by caller"
+                      ) -> Optional[ReshardReport]:
+        """Cancel an in-flight reshard (e.g. replacement provisioning is
+        wedged): the pending new generation is stopped and dropped, and the
+        fleet resumes normal dispatch/autoscaling on the next tick. A
+        "live" abort leaves the old generation serving exactly as before;
+        a "restart" abort (the old generation is already gone) resumes
+        autoscaling on the new topology, which respawns replicas. A stuck
+        provisioning thread cannot be killed — its replica is STOPPED, so
+        an engine it attaches later is never dispatched to. Returns the
+        aborted report, or None when no reshard was in flight."""
+        op = self._reshard
+        if op is None:
+            return None
+        op.report.aborted = reason
+        for r in op.new:
+            if r.state is ReplicaState.PROVISIONING:
+                # a briefly-slow (not dead) provision may attach its engine
+                # after we give up; flag it for the poll() reaper so the
+                # engine (KV pool + weights) is released, never served, and
+                # never folded into fleet accounting
+                r.discard_engine = True
+            if r.state in (ReplicaState.PROVISIONING, ReplicaState.READY):
+                r.stop()
+            r.engine = None
+        self._finish_reshard(op)
+        return op.report
+
+    def _spawn_generation(self, op: _ReshardOp, n: int,
+                          warm: bool) -> List[Replica]:
+        cold = ((lambda eng: self._cold_start(eng, warm=True)) if warm
+                else self._cold_start)
+        out = []
+        for _ in range(n):
+            r = Replica(next(self._rids), op.factory, cold, mesh=op.new_mesh)
+            self.replicas.append(r)
+            out.append(r)
+            if self.verbose:
+                print(f"[fleet] +replica {r.stats.replica_id} "
+                      f"(reshard -> {op.report.to_mesh}, tick {self._tick})")
+        return out
+
+    def _retire_replica(self, r: Replica):
+        """Stop a replica and release its engine + KV pool immediately,
+        preserving its stats (background errors drained and counted)."""
+        if r.state is ReplicaState.PROVISIONING:
+            r.join_provision()
+        if r.engine is not None:
+            r.drain_background(timeout=120.0)
+        if r.state in (ReplicaState.PROVISIONING, ReplicaState.READY):
+            r.stop()
+        r.engine = None
+
+    def _requeue_replica(self, old: Replica, report: ReshardReport):
+        """restart-baseline teardown: push the replica's whole in-flight
+        population back onto the fleet backlog (KV rows dropped; requests
+        re-prefill from their kept prefixes) and release it."""
+        if old.state is ReplicaState.PROVISIONING:
+            old.join_provision()
+        if old.state is ReplicaState.READY and old.engine is not None:
+            with old._ctx():
+                reqs, _bundle, queued = old.engine.export_inflight()
+            for r in reversed(reqs + queued):
+                self.backlog.appendleft(r)
+            report.requeued_requests += len(reqs) + len(queued)
+        self._retire_replica(old)
+        report.released_replicas += 1
+
+    def _advance_reshard(self):
+        """One tick of the reshard state machine (called from ``tick``)."""
+        op = self._reshard
+        if op.strategy == "live":
+            # only the live strategy has two generations coexisting; the
+            # restart baseline's provisioning ticks are a backlog stall,
+            # not a dual-serving window
+            op.report.dual_ticks += 1
+        if any(r.state is ReplicaState.PROVISIONING for r in op.new):
+            return  # DUAL: old generation is serving; new one still warming
+        ready_new = [r for r in op.new if r.state is ReplicaState.READY]
+        if op.strategy == "restart":
+            if ready_new:
+                op.report.drained_t = time.perf_counter()
+            else:
+                op.report.aborted = ("every replacement replica failed to "
+                                     "provision")
+            self._finish_reshard(op)
+            return
+        if not ready_new:
+            # live abort: nothing to cut over to — the old generation never
+            # stopped serving, so simply drop the dead new generation
+            op.report.aborted = ("every replacement replica failed to "
+                                 "provision; old topology keeps serving")
+            self._finish_reshard(op)
+            return
+        # Hold the cutover for a tick when work is pending but nothing is
+        # decoding: batch-admitted cohorts complete in lockstep, so the old
+        # generation's running set can be momentarily empty exactly when
+        # the replacements come READY. One deferred tick lets dispatch +
+        # step put the pending work in flight so its decode state migrates
+        # mid-stream instead of silently re-prefilling. Bounded so a
+        # pathological case cannot stall the switch.
+        old_ready = [r for r in op.old
+                     if r.state is ReplicaState.READY and r.engine is not None]
+        if old_ready and op.deferrals < 3:
+            running = any(r.engine.scheduler.running for r in old_ready)
+            pending = (bool(self.backlog)
+                       or any(r.engine.scheduler.pending for r in old_ready))
+            if pending and not running:
+                op.deferrals += 1
+                return
+        self._cutover(op, ready_new)
+
+    def _cutover(self, op: _ReshardOp, targets: List[Replica]):
+        """CUTOVER -> DRAINED, atomically between decode steps: migrate
+        every old replica's in-flight KV rows into the new generation's
+        pools, flip the fleet's identity to the new topology, release the
+        old replicas."""
+        rep = op.report
+        rep.cutover_t = time.perf_counter()
+        for old in op.old:
+            if old.state is ReplicaState.PROVISIONING:
+                old.join_provision()
+            if old.state is ReplicaState.READY and old.engine is not None:
+                with old._ctx():
+                    reqs, bundle, queued = old.engine.export_inflight()
+                for q in reversed(queued):
+                    self.backlog.appendleft(q)
+                while reqs:
+                    cands = [t for t in targets
+                             if t.engine.max_batch - t.engine.pool.n_active > 0]
+                    if not cands:
+                        # no capacity anywhere on the new mesh: the tail
+                        # requeues with its prefix kept (still zero drops)
+                        for r in reversed(reqs):
+                            self.backlog.appendleft(r)
+                        rep.requeued_requests += len(reqs)
+                        break
+                    tgt = min(cands, key=lambda t: t.load)
+                    with tgt._ctx():
+                        k = tgt.engine.adopt_inflight(reqs, bundle)
+                    rep.migrated_requests += k
+                    reqs = reqs[k:]
+                    bundle = (bundle.select(range(k, bundle.n))
+                              if reqs else None)
+            self._retire_replica(old)
+            rep.released_replicas += 1
+        self.mesh = op.new_mesh
+        self.engine_factory = op.factory
+        rep.drained_t = time.perf_counter()
+        self._finish_reshard(op)
+
+    def _finish_reshard(self, op: _ReshardOp):
+        self.reshard_reports.append(op.report)
+        self._reshard = None
+        if self.verbose or op.report.aborted:
+            s = op.report
+            print(f"[fleet] reshard[{s.strategy}] {s.from_mesh} -> "
+                  f"{s.to_mesh}: "
+                  + (f"ABORTED ({s.aborted})" if s.aborted else
+                     f"done in {s.time_to_new_topology_s * 1e3:.1f} ms "
+                     f"(migrated {s.migrated_requests}, requeued "
+                     f"{s.requeued_requests}, dual {s.dual_ticks} ticks)"))
+
     # -- serving loop ----------------------------------------------------
     def tick(self) -> int:
-        """One fleet iteration: poll provisioning, dispatch, autoscale, one
-        decode step per READY replica. Returns requests actively served."""
+        """One fleet iteration: poll provisioning, advance any in-flight
+        reshard, dispatch, autoscale, one decode step per READY replica.
+        Returns requests actively served."""
         if self._t0 is None:
             self.start()
         self._tick += 1
@@ -378,8 +752,13 @@ class Fleet:
                       f"provision ({self.spawn_failures}/"
                       f"{self.policy.max_spawn_failures} before giving up): "
                       f"{r.stats.error}")
+        if self._reshard is not None:
+            self._advance_reshard()
         self._dispatch()
-        self._autoscale()
+        if self._reshard is None:
+            # replica-count autoscaling pauses while a topology switch is in
+            # flight (it would spawn on a mesh that is about to change)
+            self._autoscale()
         served = 0
         for r in self._ready():
             served += r.step()
@@ -421,16 +800,18 @@ class Fleet:
         """Join every replica LOAD's background workers (deterministic tests
         / benchmarks; serving itself never needs this)."""
         for r in self.replicas:
-            if r.engine is not None:
+            if r.engine is not None and not r.discard_engine:
                 r.drain_background(timeout)
 
     def report(self) -> FleetReport:
         rep = FleetReport(
             mode=self.mode, ticks=self._tick,
             wall_s=(time.perf_counter() - self._t0) if self._t0 else 0.0,
-            peak_alive=self.peak_alive)
+            peak_alive=self.peak_alive,
+            reshards=[r.summary() for r in self.reshard_reports])
         for r in self.replicas:
-            lr = getattr(r.engine, "_load_report", None)
+            lr = (None if r.discard_engine
+                  else getattr(r.engine, "_load_report", None))
             if lr is not None:
                 r.stats.background_errors = lr.background_errors
             rep.replicas.append(r.stats)
@@ -439,7 +820,8 @@ class Fleet:
                 rep.n_done += 1
                 if q.ttft is not None:
                     rep.ttfts.append(q.ttft)
-                if q.done_t and q.first_token_t and len(q.generated) > 1:
+                if (q.done_t is not None and q.first_token_t is not None
+                        and len(q.generated) > 1):
                     rep.tpots.append((q.done_t - q.first_token_t)
                                      / (len(q.generated) - 1))
             elif q.state is ReqState.FAILED:

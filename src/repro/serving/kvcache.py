@@ -27,6 +27,33 @@ def _leaf_bytes(sd) -> int:
     return int(np.prod(sd.shape)) * jnp.dtype(sd.dtype).itemsize
 
 
+@dataclass
+class RowBundle:
+    """Device-resident export of pool rows for cross-pool migration.
+
+    One entry per cache leaf, in tree-leaf order; ``rows[i]`` holds the
+    exported requests' rows stacked along that leaf's batch dim (``None``
+    for batch-invariant leaves — the importing pool keeps its own). The
+    arrays stay committed to the *source* pool's mesh; ``import_rows``
+    reshards them onto the destination's cache specs with ``device_put``
+    (live-reshard KV migration, docs/architecture.md §8).
+    """
+    rows: List[Optional[Any]]
+    bdims: List[Optional[int]]
+    n: int
+
+    def select(self, idx) -> "RowBundle":
+        """Sub-bundle of the given row indices (e.g. the remainder after a
+        partial adopt)."""
+        idx = list(idx)
+        if idx == list(range(self.n)):
+            return self
+        j = jnp.asarray(idx, jnp.int32)
+        rows = [None if (r is None or bd is None) else jnp.take(r, j, axis=bd)
+                for r, bd in zip(self.rows, self.bdims)]
+        return RowBundle(rows, list(self.bdims), len(idx))
+
+
 class KVCachePool:
     def __init__(self, model, max_batch: int, max_seq: int,
                  bucket_of, memory_plan: Optional[MemoryPlan] = None):
@@ -111,7 +138,21 @@ class KVCachePool:
         return self.acquire(req_id)
 
     def release(self, slot: int):
-        """Free a slot and compact: move the last active row into the hole."""
+        """Free a slot and compact: move the last active row into the hole.
+
+        Guarded against the two failure-path corruptions: releasing on an
+        empty pool used to raise a bare ``ValueError`` out of ``max()``, and
+        double-releasing an already-free slot silently compacted a *live*
+        row into it (evicting an unrelated request's KV state)."""
+        if not (0 <= slot < len(self.slots)):
+            raise ValueError(
+                f"release of slot {slot}: out of range for bucket "
+                f"{self.cur_bucket} (valid slots 0..{len(self.slots) - 1})")
+        if self.slots[slot] is None:
+            raise ValueError(
+                f"release of slot {slot}: not an active slot "
+                f"({'pool is empty' if self.n_active == 0 else 'double release'}"
+                f") — compacting would corrupt a live row")
         last = max(i for i, s in enumerate(self.slots) if s is not None)
         if last != slot:
             self._move_row(last, slot)
@@ -124,6 +165,70 @@ class KVCachePool:
 
     def moved_request(self, slot: int) -> Optional[int]:
         return self.slots[slot]
+
+    # ------------------------------------------------------------------
+    # cross-pool row migration (live reshard, serving/fleet.py)
+    # ------------------------------------------------------------------
+    def export_rows(self, slots: List[int]) -> RowBundle:
+        """Gather the given slots' rows (KV, SSM state, lengths — every
+        batch-dim leaf) into a standalone ``RowBundle``. The pool itself is
+        left untouched; callers release the slots separately."""
+        for s in slots:
+            if not (0 <= s < len(self.slots)) or self.slots[s] is None:
+                raise ValueError(f"export of slot {s}: not an active slot")
+        idx = jnp.asarray(list(slots), jnp.int32)
+        leaves = jax.tree.leaves(self.cache)
+        rows = [jnp.take(x, idx, axis=bd) if bd is not None else None
+                for x, bd in zip(leaves, self._bdims)]
+        return RowBundle(rows, list(self._bdims), len(slots))
+
+    def import_rows(self, bundle: RowBundle, req_ids: List[int]) -> List[int]:
+        """Adopt a foreign pool's exported rows: acquire one slot per
+        request, reshard each row onto THIS pool's cache specs with
+        ``device_put`` (the source may live on a different mesh), and write
+        it in place. Returns the assigned slots, in ``req_ids`` order."""
+        if len(req_ids) != bundle.n:
+            raise ValueError(f"import of {bundle.n} rows for {len(req_ids)} "
+                             f"requests")
+        if self.n_active + bundle.n > self.max_batch:
+            raise RuntimeError(
+                f"pool cannot host {bundle.n} imported rows "
+                f"({self.n_active} active, max_batch {self.max_batch})")
+        slots = [self.acquire(rid) for rid in req_ids]
+        specs = jax.tree.leaves(
+            self.model.cache_specs(self.cur_bucket, self.max_seq))
+        leaves, treedef = jax.tree.flatten(self.cache)
+        out = []
+        for pool, rows, bd, sd in zip(leaves, bundle.rows, self._bdims, specs):
+            if bd is None or rows is None:
+                out.append(pool)
+                continue
+            rows = self._reshard_rows(rows, sd)
+            for i, slot in enumerate(slots):
+                one = jax.lax.slice_in_dim(rows, i, i + 1, axis=bd)
+                pool = jax.lax.dynamic_update_slice_in_dim(
+                    pool, one.astype(pool.dtype), slot, axis=bd)
+            out.append(pool)
+        self.cache = jax.tree.unflatten(treedef, out)
+        self._apply_shardings()
+        return slots
+
+    def _reshard_rows(self, rows, sd):
+        """Commit migrated rows to this pool's devices: the leaf's spec
+        sharding when it accepts the row-count (batch may not divide the
+        data axes), replicated on this mesh otherwise, first local device
+        when un-meshed (eager update ops reject operands committed to a
+        different mesh's device set)."""
+        mesh = self.model.ctx.mesh
+        if sd.sharding is not None:
+            try:
+                return jax.device_put(rows, sd.sharding)
+            except Exception:
+                pass
+        if mesh is not None:
+            from jax.sharding import NamedSharding, PartitionSpec
+            return jax.device_put(rows, NamedSharding(mesh, PartitionSpec()))
+        return jax.device_put(rows, jax.devices()[0])
 
     def _move_row(self, src: int, dst: int):
         # device-side row move: slice + in-place-style update on the

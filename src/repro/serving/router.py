@@ -38,6 +38,7 @@ from enum import Enum
 from typing import Any, Callable, Dict, List, Optional, Sequence
 
 from repro.core import Archive
+from repro.launch.mesh import resolve_mesh
 from repro.serving.engine import ServingEngine
 from repro.serving.fleet import (AutoscalePolicy, Fleet, FleetReport,
                                  ReplicaState)
@@ -51,13 +52,42 @@ class ModelState(Enum):
 
 
 @dataclass
+class ReshardPolicy:
+    """Load-adaptive parallelism switching (paper §4.3; ParaServe/HydraServe
+    adapt parallelism to load in exactly this shape): sustained inflight at
+    or above ``up_inflight`` for ``sustain_ticks`` consecutive router ticks
+    flips the model's fleet onto ``high_mesh`` via ``Fleet.reshard``
+    (live, KV-migrating, zero-drop); sustained load at or below
+    ``down_inflight`` flips it back onto ``low_mesh``. Meshes are
+    ``launch.mesh.MeshSpec``s (or concrete meshes / None) so the policy can
+    be declared before any devices are claimed.
+
+    ``prefer_reshard_over_scale_out=True`` (default) pins the fleet's
+    replica count while the policy is active: the answer to sustained load
+    is a bigger mesh for the SAME replicas, not more replicas — the
+    ParaServe trade (intra-request parallelism over instance count).
+    """
+    high_mesh: object = None     # MeshSpec | Mesh | None
+    low_mesh: object = None
+    up_inflight: int = 8
+    down_inflight: int = 0
+    sustain_ticks: int = 5
+    # minimum ticks between switches (a reshard takes wall-clock seconds;
+    # without a cooldown an oscillating queue would thrash topologies)
+    cooldown_ticks: int = 50
+    prefer_reshard_over_scale_out: bool = True
+
+
+@dataclass
 class ModelPolicy:
-    """Per-model serving policy: the fleet autoscaler plus scale-to-zero."""
+    """Per-model serving policy: the fleet autoscaler plus scale-to-zero,
+    plus optional load-adaptive parallelism switching (``reshard``)."""
     autoscale: AutoscalePolicy = field(default_factory=AutoscalePolicy)
     scale_to_zero: bool = True
     # consecutive router ticks with nothing inflight (and no replica still
     # provisioning) before the model's fleet is drained and released
     idle_ticks_to_zero: int = 30
+    reshard: Optional[ReshardPolicy] = None
 
 
 @dataclass
@@ -74,6 +104,10 @@ class ModelStats:
     fallback_compiles: int = 0
     background_errors: int = 0
     replicas_spawned: int = 0
+    # parallelism switches the reshard policy triggered (ReshardReport
+    # summaries, in order), and the mesh level the model currently serves at
+    reshards: List[Dict[str, Any]] = field(default_factory=list)
+    mesh_level: str = "low"
 
     def summary(self, requests: Sequence[Request]) -> Dict[str, Any]:
         ttfts = [r.ttft for r in requests
@@ -95,16 +129,20 @@ class ModelStats:
             "fallback_compiles": self.fallback_compiles,
             "background_errors": self.background_errors,
             "replicas_spawned": self.replicas_spawned,
+            "reshards": list(self.reshards),
+            "mesh_level": self.mesh_level,
         }
 
 
 class _ModelEntry:
     """Router-internal per-model record (archive handle outlives fleets)."""
 
-    def __init__(self, name: str, factory: Callable[[], ServingEngine],
-                 archive: Optional[Archive], policy: ModelPolicy, mode: str):
+    def __init__(self, name: str, factory: Optional[Callable[[], ServingEngine]],
+                 archive: Optional[Archive], policy: ModelPolicy, mode: str,
+                 factory_for_mesh: Optional[Callable] = None):
         self.name = name
         self.factory = factory
+        self.factory_for_mesh = factory_for_mesh
         self.archive = archive
         self.policy = policy
         self.mode = mode
@@ -116,6 +154,22 @@ class _ModelEntry:
         self.requests: List[Request] = []
         self.stats = ModelStats(name)
         self.fleet_reports: List[FleetReport] = []
+        # reshard-policy bookkeeping: sustained-load tick counters + the
+        # tick of the last switch (cooldown); mesh_level lives on stats so
+        # a scale-to-zero/reactivate cycle resumes at the same parallelism
+        self.sustain_ticks = 0
+        self.last_reshard_tick: Optional[int] = None
+        # (ReshardReport, target_level) of the in-flight switch; mesh_level
+        # flips only when the report confirms the switch completed — an
+        # aborted reshard leaves the fleet on the OLD topology and the
+        # policy must keep saying so or it wedges (never re-triggers)
+        self.pending_reshard: Optional[tuple] = None
+
+    def current_mesh_spec(self):
+        rp = self.policy.reshard
+        if rp is None:
+            return None
+        return rp.high_mesh if self.stats.mesh_level == "high" else rp.low_mesh
 
 
 @dataclass
@@ -186,15 +240,29 @@ class ModelRouter:
         self._t0: Optional[float] = None
 
     # -- registry --------------------------------------------------------
-    def add_model(self, name: str, factory: Callable[[], ServingEngine], *,
+    def add_model(self, name: str,
+                  factory: Optional[Callable[[], ServingEngine]] = None, *,
                   archive: Optional[Archive] = None,
                   policy: Optional[ModelPolicy] = None,
+                  factory_for_mesh: Optional[Callable] = None,
                   mode: str = "foundry") -> None:
+        """Register a model. ``factory`` is the zero-arg engine factory;
+        a model with a ``ReshardPolicy`` needs ``factory_for_mesh(mesh)``
+        instead, so its fleet can rebuild engines for whichever topology
+        the policy currently selects."""
         if mode == "foundry" and archive is None:
             raise ValueError(f"model {name!r}: foundry mode needs an archive "
                              f"(e.g. depot.open({name!r}))")
-        self.entries[name] = _ModelEntry(name, factory, archive,
-                                         policy or ModelPolicy(), mode)
+        policy = policy or ModelPolicy()
+        if factory is None and factory_for_mesh is None:
+            raise ValueError(f"model {name!r}: needs factory or "
+                             f"factory_for_mesh")
+        if policy.reshard is not None and factory_for_mesh is None:
+            raise ValueError(f"model {name!r}: a ReshardPolicy needs "
+                             f"factory_for_mesh (engines must be buildable "
+                             f"for both topologies)")
+        self.entries[name] = _ModelEntry(name, factory, archive, policy,
+                                         mode, factory_for_mesh)
 
     def models(self) -> List[str]:
         return sorted(self.entries)
@@ -205,7 +273,16 @@ class ModelRouter:
     # -- lifecycle -------------------------------------------------------
     def _activate(self, e: _ModelEntry) -> None:
         e.fleet = Fleet(e.factory, mode=e.mode, archive=e.archive,
-                        policy=e.policy.autoscale, verbose=self.verbose)
+                        policy=e.policy.autoscale,
+                        mesh=resolve_mesh(e.current_mesh_spec()),
+                        factory_for_mesh=e.factory_for_mesh,
+                        verbose=self.verbose)
+        rp = e.policy.reshard
+        if rp is not None and rp.prefer_reshard_over_scale_out:
+            e.fleet.suppress_scale_out = True
+        e.sustain_ticks = 0
+        e.last_reshard_tick = None
+        e.pending_reshard = None
         e.fleet.start()
         e.state = ModelState.ACTIVATING
         e.trigger_t = time.perf_counter()
@@ -225,6 +302,12 @@ class ModelRouter:
 
     def _deactivate(self, e: _ModelEntry) -> None:
         fleet = e.fleet
+        if e.pending_reshard is not None:
+            # reconcile a switch that completed since the last policy tick
+            rep, want = e.pending_reshard
+            e.pending_reshard = None
+            if rep.done and rep.aborted is None:
+                e.stats.mesh_level = want
         for r in fleet.replicas:
             # deactivate_all may catch an autoscale-spawned replica mid
             # cold start; let it finish so releasing the engine below is
@@ -240,6 +323,7 @@ class ModelRouter:
         e.stats.background_errors += sum(r.background_errors
                                          for r in rep.replicas)
         e.stats.replicas_spawned += len(rep.replicas)
+        e.stats.reshards = e.stats.reshards + list(rep.reshards)
         for r in fleet.replicas:
             if r.state in (ReplicaState.PROVISIONING, ReplicaState.READY):
                 r.stop()
@@ -312,7 +396,9 @@ class ModelRouter:
                         min(firsts) - e.trigger_t)
                     e.await_first_token = False
             if e.state is ModelState.ACTIVE:
-                if self._fleet_idle(e):
+                if e.policy.reshard is not None and e.fleet is not None:
+                    self._apply_reshard_policy(e)
+                if e.fleet is not None and self._fleet_idle(e):
                     e.idle_ticks += 1
                     if (e.policy.scale_to_zero
                             and e.idle_ticks >= e.policy.idle_ticks_to_zero):
@@ -322,6 +408,52 @@ class ModelRouter:
         self.peak_resident_replicas = max(self.peak_resident_replicas,
                                           resident)
         return served
+
+    def _apply_reshard_policy(self, e: _ModelEntry) -> None:
+        """One tick of the load-adaptive parallelism trigger (``ReshardPolicy``):
+        count consecutive ticks of sustained load outside the current mesh
+        level's band; past ``sustain_ticks`` (and outside the cooldown),
+        flip the fleet onto the other topology with a live, KV-migrating
+        ``Fleet.reshard`` — the paper's "dynamic parallelism switching"
+        answered with a bigger/smaller mesh instead of more/fewer replicas."""
+        rp = e.policy.reshard
+        if e.pending_reshard is not None and e.fleet._reshard is None:
+            # the async switch resolved: adopt the new level only if it
+            # actually happened (an abort leaves the old topology serving)
+            rep, want = e.pending_reshard
+            e.pending_reshard = None
+            if rep.aborted is None:
+                e.stats.mesh_level = want
+            elif self.verbose:
+                print(f"[router] ~model {e.name}: reshard to {want} mesh "
+                      f"ABORTED ({rep.aborted}); staying at "
+                      f"{e.stats.mesh_level}")
+        if e.fleet._reshard is not None:
+            return  # a switch is already in flight
+        inflight = e.fleet.inflight()
+        level = e.stats.mesh_level
+        want = None
+        if level == "low" and inflight >= rp.up_inflight:
+            want = "high"
+        elif level == "high" and inflight <= rp.down_inflight:
+            want = "low"
+        if want is None:
+            e.sustain_ticks = 0
+            return
+        e.sustain_ticks += 1
+        if e.sustain_ticks < rp.sustain_ticks:
+            return
+        if (e.last_reshard_tick is not None
+                and self._tick - e.last_reshard_tick < rp.cooldown_ticks):
+            return
+        mesh = rp.high_mesh if want == "high" else rp.low_mesh
+        e.pending_reshard = (e.fleet.reshard(mesh), want)
+        e.last_reshard_tick = self._tick
+        e.sustain_ticks = 0
+        if self.verbose:
+            print(f"[router] ~model {e.name}: reshard -> {want} mesh "
+                  f"(inflight {inflight} for {rp.sustain_ticks} ticks, "
+                  f"tick {self._tick})")
 
     def _unresolved(self) -> int:
         return sum(q.state not in (ReqState.DONE, ReqState.FAILED)
@@ -399,6 +531,9 @@ class ModelRouter:
                 stats.background_errors += sum(r.background_errors
                                                for r in frep.replicas)
                 stats.replicas_spawned += len(frep.replicas)
+                # rebind, don't append: the list object is shared with
+                # e.stats and this fold must stay non-destructive
+                stats.reshards = stats.reshards + list(frep.reshards)
             entry = stats.summary(e.requests)
             entry["state"] = e.state.value
             rep.models[name] = entry

@@ -42,8 +42,11 @@ class Request:
 
     @property
     def ttft(self) -> Optional[float]:
+        # `is not None`, not truthiness: perf_counter() can legitimately be
+        # 0.0 (monotonic epoch is unspecified), and summaries must not drop
+        # a request whose first token landed exactly there
         return (self.first_token_t - self.arrival_t
-                if self.first_token_t else None)
+                if self.first_token_t is not None else None)
 
 
 class Scheduler:
@@ -109,12 +112,19 @@ class Scheduler:
         self.failed.append(req)
 
     def requeue_on_failure(self, req: Request):
-        """Worker failure path: keep generated prefix, retry at queue front."""
+        """Worker failure path: keep generated prefix, retry at queue front.
+        The terminal branch is a real completion: it must set ``fail_reason``
+        and ``done_t`` exactly like ``reject`` does, or fleet/router latency
+        summaries see a FAILED request with ``done_t=None``."""
         self.running.pop(req.req_id, None)
         req.retries += 1
         req.slot = None
         if req.retries > self.max_retries:
             req.state = ReqState.FAILED
+            req.fail_reason = (f"retries exhausted after {req.retries} "
+                               f"worker failures (max_retries="
+                               f"{self.max_retries})")
+            req.done_t = time.perf_counter()
             self.failed.append(req)
             return
         req.state = ReqState.WAITING
