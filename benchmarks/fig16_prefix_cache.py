@@ -1,0 +1,168 @@
+"""[Fig 16] Radix prefix caching over the paged KV pool: TTFT and prefill
+work for shared-system-prompt traffic, paged+radix vs the slot-pool baseline.
+
+The workload every serving deployment sees: N requests share one long system
+prompt and differ only in a short user suffix. Three engines serve the same
+trace:
+
+  paged     (``kv_layout="paged"``) block-table pool + radix prefix cache.
+            Request 1 is cold and decode-fills the whole prompt; requests
+            2..N hit the radix tree, attach the cached prefix blocks by
+            reference (no copy, no recompute) and fill only the suffix —
+            the TTFT win measured here.
+  slot      (``kv_layout="slot"``) the row-per-request baseline: every
+            request re-prefills the full prompt into its private row; no
+            sharing is possible because rows are monolithic.
+
+Measured: wall TTFT cold vs warm on the paged engine, decode-fill steps to
+first token, prefix hit rate, prefilled-token totals for both layouts, and
+the paged pool's MemoryPlan per-rank footprint (§5.4 — the deterministic
+extent LOAD pins before restore).
+
+Hard assertions, not just prints: every request after the first is a prefix
+hit; warm fill-steps and warm wall TTFT are strictly below cold; the paged
+engine prefills < 60% of the slot baseline's tokens on the same trace; and
+warm token streams are byte-identical to a cold engine serving the same
+prompts (identity is re-checked here, not only in tests, because this is
+the configuration the figure ships).
+
+CLI: ``python -m benchmarks.fig16_prefix_cache [--quick]``. ``--quick`` is
+the CI smoke mode (wired into the test-fast job next to the fig9/fig13/
+fig15 gates): fewer requests, same hard assertions — a regression exits
+nonzero.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from repro.configs.registry import get_arch
+from repro.models.model import Model
+from repro.serving.engine import ServingEngine
+
+CFG = get_arch("smollm-360m").reduced()
+BLOCK = 8
+MAX_SEQ = 64
+N_NEW = 6
+# 40-token shared system prompt (5 full blocks), 3-token user suffixes
+SYSTEM = [((7 * i) % 96) + 1 for i in range(40)]
+P50 = 0.50
+
+
+def make_engine(kv_layout: str) -> ServingEngine:
+    eng = ServingEngine(Model(CFG), max_batch=8, max_seq=MAX_SEQ,
+                        bucket_mode="pow2", kv_layout=kv_layout,
+                        kv_block_size=BLOCK)
+    eng.load_weights(rng=jax.random.PRNGKey(0))
+    eng.cold_start_vanilla()
+    return eng
+
+
+def prompts(n: int):
+    return [SYSTEM + [100 + i, 3, ((11 * i) % 96) + 1] for i in range(n)]
+
+
+def serve_trace(eng, trace):
+    """One request at a time (the prefix-cache steady state: later arrivals
+    find earlier prompts' chains committed). Returns per-request records."""
+    out = []
+    for p in trace:
+        r = eng.submit(p, N_NEW)
+        t0 = time.perf_counter()
+        steps = 0
+        while not r.generated:
+            eng.step()
+            steps += 1
+        ttft = time.perf_counter() - t0
+        eng.run_until_drained()
+        assert r.state.value == "done", r.fail_reason
+        out.append({"ttft_s": ttft, "fill_steps": steps,
+                    "tokens": tuple(r.generated)})
+    return out
+
+
+def _pct(xs, q):
+    xs = sorted(xs)
+    return xs[min(len(xs) - 1, int(q * len(xs)))]
+
+
+def run(quick: bool = False):
+    n_reqs = 6 if quick else 16
+    trace = prompts(n_reqs)
+
+    paged = make_engine("paged")
+    recs = serve_trace(paged, trace)
+    cold, warm = recs[0], recs[1:]
+    stats = paged.prefill_stats
+    hit_rate = stats["prefix_hits"] / max(
+        1, stats["prefix_hits"] + stats["prefix_misses"])
+    paged_prefilled = stats["prefilled_tokens"]
+
+    slot = make_engine("slot")
+    slot_recs = serve_trace(slot, trace)
+    # the slot pool re-prefills every prompt in full: its token work is the
+    # trace itself (the engine's prefill path has no cache to skip any)
+    slot_prefilled = sum(len(p) for p in trace)
+
+    # ---- hard invariants (the ISSUE acceptance criteria) ----------------
+    assert stats["prefix_hits"] == n_reqs - 1, \
+        f"expected every warm request to hit, got {stats['prefix_hits']}"
+    warm_steps = _pct([w["fill_steps"] for w in warm], P50)
+    assert warm_steps < cold["fill_steps"], \
+        f"warm fill {warm_steps} steps !< cold {cold['fill_steps']}"
+    warm_ttft = _pct([w["ttft_s"] for w in warm], P50)
+    assert warm_ttft < cold["ttft_s"], \
+        f"warm TTFT {warm_ttft:.4f}s !< cold {cold['ttft_s']:.4f}s"
+    assert paged_prefilled < 0.6 * slot_prefilled, \
+        (f"paged prefilled {paged_prefilled} tokens, slot baseline "
+         f"{slot_prefilled}: prefix cache saved too little")
+    # identity: warm streams must match a fresh paged engine serving the
+    # same prompt cold (the slot baseline uses a different fill convention,
+    # so the oracle is paged-cold, not slot)
+    oracle = make_engine("paged")
+    check = 1 if quick else 3  # cold-serve a few warm prompts, compare
+    for i in range(1, 1 + check):
+        o = oracle.submit(trace[i], N_NEW)
+        oracle.run_until_drained()
+        assert tuple(o.generated) == recs[i]["tokens"], \
+            f"warm stream {i} diverged from its cold oracle"
+
+    kv_bytes = paged.memory_plan.scoped_extent("per_rank")
+    return [
+        ("fig16.paged.cold_ttft_s", cold["ttft_s"] * 1e6,
+         f"fill_steps={cold['fill_steps']}"),
+        ("fig16.paged.warm_ttft_p50_s", warm_ttft * 1e6,
+         f"fill_steps_p50={warm_steps};n={len(warm)}"),
+        ("fig16.paged.ttft_speedup", cold["ttft_s"] / max(warm_ttft, 1e-9),
+         "cold_over_warm_asserted_gt_1"),
+        ("fig16.paged.prefix_hit_rate", hit_rate,
+         f"hits={stats['prefix_hits']};misses={stats['prefix_misses']}"),
+        ("fig16.paged.prefilled_tokens", paged_prefilled,
+         f"cached={stats['cached_tokens']}"),
+        ("fig16.slot.prefilled_tokens", slot_prefilled,
+         "full_prompt_every_request"),
+        ("fig16.slot.ttft_p50_s",
+         _pct([s["ttft_s"] for s in slot_recs], P50) * 1e6,
+         "one_shot_prefill_baseline"),
+        ("fig16.prefill_work_saved_frac",
+         1.0 - paged_prefilled / slot_prefilled, "asserted_gt_0.4"),
+        ("fig16.kv_plan_bytes_per_rank", kv_bytes,
+         f"blocks={paged.kv_blocks};block_size={BLOCK}"),
+    ]
+
+
+if __name__ == "__main__":
+    import argparse
+
+    from benchmarks.common import emit
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: fewer requests, same hit-rate / "
+                         "TTFT-win / prefill-savings / identity assertions")
+    args = ap.parse_args()
+    rows = run(quick=args.quick)
+    emit(rows, figure="fig16_prefix_cache",
+         headline={"ttft_speedup": rows[2][1],
+                   "prefix_hit_rate": rows[3][1],
+                   "prefill_work_saved_frac": rows[7][1]})

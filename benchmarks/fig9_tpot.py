@@ -37,7 +37,11 @@ def _tpot(eng, bucket: int, steps: int = 20):
     """Mean decode-step time at a given active batch (pad path included)."""
     m = eng.model
     exec_bucket, exe, path = eng.programs.lookup(bucket)
-    cache = m.init_cache(exec_bucket, eng.max_seq)
+    if getattr(eng, "kv_layout", "slot") == "paged":
+        cache = m.init_cache_paged(exec_bucket, eng.max_seq, eng.kv_blocks,
+                                   eng.kv_block_size)
+    else:
+        cache = m.init_cache(exec_bucket, eng.max_seq)
     cache = {**cache, "lengths": jnp.full((exec_bucket,), 4, jnp.int32)}
     toks = jnp.ones((exec_bucket,), jnp.int32)
     # warmup

@@ -96,6 +96,15 @@ class MemoryPlan:
     def capture_window(self) -> List[Allocation]:
         return [a for a in self.allocations if a.phase == "capture"]
 
+    def scoped_extent(self, scope: str) -> int:
+        """Total recorded bytes under ``scope`` ("global" | "per_rank") —
+        the pool-sizing view of §5.4: long-lived pools (KV slot rows, paged
+        block pools) register per_rank, so LOAD can pin the deployment's
+        per-rank footprint before restore and benchmarks can report it."""
+        if scope not in ("global", "per_rank"):
+            raise ValueError(f"unknown allocation scope {scope!r}")
+        return sum(a.size for a in self.allocations if a.scope == scope)
+
     # ---- rank-relative view (paper §4.3) ------------------------------
     def rank_extents(self, n_ranks: int) -> List[dict]:
         """Per-rank layout for an ``n_ranks`` deployment of this (capture)

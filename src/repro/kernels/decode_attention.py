@@ -101,3 +101,99 @@ def decode_attention_kernel(q, k_cache, v_cache, lengths, *, blk: int = 512,
         interpret=interpret,
     )(lengths, qg, k_cache, v_cache)
     return out.reshape(B, H, Dh)
+
+
+# ---------------------------------------------------------------------------
+# paged variant: KV lives in a shared block pool, indirected by block tables
+# ---------------------------------------------------------------------------
+def _paged_decode_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                         m_ref, l_ref, acc_ref, *, bs: int, scale: float):
+    b = pl.program_id(0)
+    s = pl.program_id(2)
+    n_s = pl.num_programs(2)
+
+    @pl.when(s == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = len_ref[b]
+    q = q_ref[0, 0].astype(jnp.float32)      # [G, Dh]
+    k = k_ref[0, :, 0, :].astype(jnp.float32)  # [bs, Dh] — one pool block
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+
+    scores = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale  # [G, bs]
+    # logical position of pool slot j within THIS sequence is table-relative
+    # (block s of the table holds positions s*bs..s*bs+bs-1), independent of
+    # which physical block the table entry points at
+    pos = s * bs + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+    scores = jnp.where(pos <= length, scores, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, scores.max(axis=1, keepdims=True))
+    p = jnp.exp(scores - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(s == n_s - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def decode_attention_paged_kernel(q, k_pool, v_pool, block_tables, lengths,
+                                  *, interpret: bool = True):
+    """Flash-decode over the paged pool layout (serving/blockpool.py).
+
+    q: [B, H, Dh]; pools: [NB, bs, Hkv, Dh] (no batch dim — blocks are
+    shared across sequences via ref-counted prefix caching); block_tables:
+    [B, MB] int32 mapping each sequence's logical block s to a physical
+    pool block (unused tail entries point at the scratch block 0 and are
+    masked by ``lengths``); lengths: [B]. Returns [B, H, Dh].
+
+    The indirection is the TPU analogue of PagedAttention's gather: the
+    block table and lengths ride in as scalar-prefetch operands
+    (``PrefetchScalarGridSpec``), so the k/v BlockSpec index_map can pick
+    the physical block ``bt[b, s]`` for grid step (b, h, s) and the DMA
+    engine streams exactly one pool block per step — no [B, S] contiguous
+    materialization of the cache ever exists.
+    """
+    B, H, Dh = q.shape
+    NB, bs, Hkv, _ = k_pool.shape
+    MB = block_tables.shape[1]
+    G = H // Hkv
+    scale = 1.0 / math.sqrt(Dh)
+    qg = q.reshape(B, Hkv, G, Dh)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,  # block_tables, lengths
+        grid=(B, Hkv, MB),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, Dh), lambda b, h, s, bt, ln: (b, h, 0, 0)),
+            pl.BlockSpec((1, bs, 1, Dh),
+                         lambda b, h, s, bt, ln: (bt[b, s], 0, h, 0)),
+            pl.BlockSpec((1, bs, 1, Dh),
+                         lambda b, h, s, bt, ln: (bt[b, s], 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, Dh),
+                               lambda b, h, s, bt, ln: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),   # m
+            pltpu.VMEM((G, 1), jnp.float32),   # l
+            pltpu.VMEM((G, Dh), jnp.float32),  # acc
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_paged_decode_kernel, bs=bs, scale=scale),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, Dh), q.dtype),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), lengths.astype(jnp.int32),
+      qg, k_pool, v_pool)
+    return out.reshape(B, H, Dh)

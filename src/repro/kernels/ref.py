@@ -23,6 +23,18 @@ def decode_attention_ref(q, k_cache, v_cache, lengths):
     return out.reshape(B, H, Dh).astype(q.dtype)
 
 
+def decode_attention_paged_ref(q, k_pool, v_pool, block_tables, lengths):
+    """Paged oracle: gather each sequence's blocks into a contiguous cache
+    ([B, MB*bs, Hkv, Dh]) and defer to ``decode_attention_ref``.
+    q: [B, H, Dh]; pools: [NB, bs, Hkv, Dh]; block_tables: [B, MB] int32."""
+    B = q.shape[0]
+    MB = block_tables.shape[1]
+    bs = k_pool.shape[1]
+    kd = k_pool[block_tables].reshape(B, MB * bs, *k_pool.shape[2:])
+    vd = v_pool[block_tables].reshape(B, MB * bs, *v_pool.shape[2:])
+    return decode_attention_ref(q, kd, vd, lengths)
+
+
 def mamba1_scan_ref(dt, x, Bm, Cm, A):
     """dt, x: [B, T, C]; Bm, Cm: [B, T, N]; A: [C, N] -> y [B, T, C]."""
     B, T, C = x.shape

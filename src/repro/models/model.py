@@ -480,6 +480,138 @@ class Model:
         out["lengths"] = sds((B,), ("batch",), jnp.int32)
         return out
 
+    # ------------------------------------------------------------------
+    # paged decode (block-table KV; serving/blockpool.py)
+    # ------------------------------------------------------------------
+    def paged_cache_logical_axes(self):
+        """Axes for the paged K/V pools [L, NB, bs, Hkv, Dh]. The pools
+        carry no batch dim (blocks are shared across requests), so only the
+        kv-head axis can shard; seqpar layouts stay on the slot pool."""
+        if self.kv_shard:
+            return ("layers", None, None, "kv_heads", None)
+        return ("layers", None, None, None, None)
+
+    def paged_cache_specs(self, B: int, S: int, n_blocks: int,
+                          block_size: int):
+        """ShapeDtypeStructs for the paged decode cache. Only block_tables
+        and lengths are bucket-sized ([B, ...]); the K/V pools are identical
+        across buckets, so every bucket's captured program closes over the
+        same pool shapes and templates group exactly as before."""
+        c, ctx = self.cfg, self.ctx
+        if c.family not in ("dense", "vlm", "moe"):
+            raise ValueError(f"{c.family} has no paged decode cache")
+        L, Hkv, Dh = c.num_layers, c.num_kv_heads, c.head_dim
+        MB = -(-S // block_size)
+
+        def sds(shape, axes, dtype=None):
+            sh = ctx.sharding(axes, shape) if ctx.mesh is not None else None
+            return jax.ShapeDtypeStruct(shape, dtype or self.dtype, sharding=sh)
+
+        axes = self.paged_cache_logical_axes()
+        return {"block_tables": sds((B, MB), ("batch", None), jnp.int32),
+                "k": sds((L, n_blocks, block_size, Hkv, Dh), axes),
+                "lengths": sds((B,), ("batch",), jnp.int32),
+                "v": sds((L, n_blocks, block_size, Hkv, Dh), axes)}
+
+    def init_cache_paged(self, B: int, S: int, n_blocks: int,
+                         block_size: int):
+        """Zero-initialized paged cache pytree with valid dense block
+        tables: row b owns consecutive physical blocks (scratch block 0
+        backs any overflow). Benchmark/test-harness path — the serving
+        engine builds its pool through ``PagedKVCachePool`` instead."""
+        import numpy as np
+        specs = self.paged_cache_specs(B, S, n_blocks, block_size)
+
+        def mk(sd):
+            z = jnp.zeros(sd.shape, sd.dtype)
+            return jax.device_put(z, sd.sharding) if sd.sharding is not None \
+                else z
+        cache = jax.tree.map(mk, specs)
+        MB = -(-S // block_size)
+        bt = np.zeros((B, MB), np.int32)
+        nb = 1
+        for b in range(B):
+            for j in range(MB):
+                if nb < n_blocks:
+                    bt[b, j] = nb
+                    nb += 1
+        tables = jnp.asarray(bt)
+        sh = specs["block_tables"].sharding
+        if sh is not None:
+            tables = jax.device_put(tables, sh)
+        return {**cache, "block_tables": tables}
+
+    def _attn_decode_paged(self, x_t, lw, k_pool, v_pool, block_tables,
+                           lengths):
+        """One-token attention against a per-layer paged pool. The new K/V
+        scatters into each row's current write slot (block_tables[row,
+        length//bs], offset length%bs); attention gathers each row's blocks
+        into a dense [B, MB*bs] view and reuses the masked dense kernel —
+        padded rows point every table entry at the scratch block and their
+        garbage is masked by ``pos <= length`` before the softmax."""
+        c, ctx = self.cfg, self.ctx
+        B, D = x_t.shape
+        H, Hkv, Dh = c.num_heads, c.num_kv_heads, c.head_dim
+        NB, bs = k_pool.shape[0], k_pool.shape[1]  # per-layer [NB,bs,Hkv,Dh]
+        MB = block_tables.shape[1]
+        h = rms_norm(x_t, lw["ln_attn"], c.norm_eps)
+        q = (h @ lw["wq"]).reshape(B, 1, H, Dh)
+        k = (h @ lw["wk"]).reshape(B, 1, Hkv, Dh)
+        v = (h @ lw["wv"]).reshape(B, 1, Hkv, Dh)
+        pos = lengths[:, None]
+        q = rope(q, pos, c.rope_theta)
+        k = rope(k, pos, c.rope_theta)
+        # scatter new K/V: flatten blocks to [NB*bs, Hkv, Dh] positions.
+        # Inactive rows all target scratch slot 0 — duplicate writes race
+        # but the result is never read unmasked.
+        wblk = block_tables[jnp.arange(B), jnp.clip(lengths // bs, 0, MB - 1)]
+        widx = wblk * bs + lengths % bs
+        kf = k_pool.reshape((NB * bs,) + k_pool.shape[2:])
+        vf = v_pool.reshape((NB * bs,) + v_pool.shape[2:])
+        kf = kf.at[widx].set(k[:, 0].astype(kf.dtype))
+        vf = vf.at[widx].set(v[:, 0].astype(vf.dtype))
+        k_pool = kf.reshape(k_pool.shape)
+        v_pool = vf.reshape(v_pool.shape)
+        # gather each row's table into a dense bshd view and mask-attend
+        gidx = ((block_tables * bs)[:, :, None]
+                + jnp.arange(bs)[None, None, :]).reshape(B, MB * bs)
+        kd, vd = kf[gidx], vf[gidx]
+        if self.kv_shard:
+            kd = ctx.constrain(kd, "batch", None, "kv_heads", None)
+            vd = ctx.constrain(vd, "batch", None, "kv_heads", None)
+        out = decode_attention_dense(q, kd, vd, lengths, layout="bshd")
+        out = out.reshape(B, H * Dh) @ lw["wo"]
+        return ctx.constrain(out, "batch", None), k_pool, v_pool
+
+    def decode_step_paged(self, params, cache, tokens):
+        """Paged-layout decode step: same contract as ``decode_step`` but
+        the cache pytree is {block_tables, k, lengths, v} with block-major
+        pools. tokens: [B] int32 -> (cache', logits [B, Vp])."""
+        c, ctx = self.cfg, self.ctx
+        if c.family not in ("dense", "vlm", "moe"):
+            raise ValueError(f"{c.family} has no paged decode step")
+        lengths = cache["lengths"]
+        bt = cache["block_tables"]
+        x = self._embed(params, tokens[:, None])[:, 0]  # [B, D]
+
+        def block(carry, xs):
+            x = carry
+            lw, kc, vc = xs
+            a, kc, vc = self._attn_decode_paged(x, lw, kc, vc, bt, lengths)
+            x = x + a
+            if c.family == "moe":
+                mo, _ = self._moe(x[:, None, :], lw, lossless=True)
+                x = x + mo[:, 0, :]
+            else:
+                x = x + self._mlp(x, lw)
+            return ctx.constrain(x, "batch", None), (kc, vc)
+
+        x, (k_new, v_new) = jax.lax.scan(
+            block, x, (params["layers"], cache["k"], cache["v"]))
+        new_cache = {**cache, "k": k_new, "v": v_new, "lengths": lengths + 1}
+        logits = self._logits(params, x[:, None, :])[:, 0]
+        return new_cache, logits
+
     def _attn_decode(self, x_t, lw, k_cache, v_cache, lengths):
         """One-token attention vs per-layer cache. x_t: [B, D].
         Returns (out [B, D], k_cache', v_cache')."""

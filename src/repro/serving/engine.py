@@ -52,6 +52,7 @@ from repro.core import (Archive, CaptureSpec, MemoryPlan, ProgramSet,
 from repro.core.templates import TopologyGroup
 from repro.launch.mesh import ShardCtx
 from repro.models.model import Model
+from repro.serving.blockpool import PagedKVCachePool
 from repro.serving.kvcache import KVCachePool, RowBundle
 from repro.serving.scheduler import ReqState, Request, Scheduler
 
@@ -92,10 +93,15 @@ class ServingEngine:
                  max_seq: int = 128, bucket_mode: str = "all",
                  eos_token: Optional[int] = None,
                  memory_plan: Optional[MemoryPlan] = None,
-                 decode_loop: str = "device"):
+                 decode_loop: str = "device",
+                 kv_layout: str = "auto", kv_block_size: int = 16,
+                 kv_blocks: Optional[int] = None):
         if decode_loop not in ("device", "host"):
             raise ValueError(f"decode_loop must be 'device' or 'host', "
                              f"got {decode_loop!r}")
+        if kv_layout not in ("auto", "paged", "slot"):
+            raise ValueError(f"kv_layout must be 'auto', 'paged' or 'slot', "
+                             f"got {kv_layout!r}")
         self.model = model
         self.cfg = model.cfg
         self.ctx = model.ctx
@@ -107,11 +113,28 @@ class ServingEngine:
         self.params = None
         self.programs: Optional[ProgramSet] = None
         self.scheduler = Scheduler()
-        self.pool: Optional[KVCachePool] = None
+        self.pool = None  # KVCachePool or PagedKVCachePool per kv_layout
         self._prefill_cache: Dict[int, Any] = {}
         self._eager_mode = False
         self.decode_steps = 0
         self.decode_loop = decode_loop
+        # KV layout: block-table paged pool with radix prefix cache for the
+        # attention families; slot compaction for SSM/hybrid/seqpar layouts
+        # (their decode state has no block structure to page).
+        self.kv_layout = (self._auto_kv_layout() if kv_layout == "auto"
+                          else kv_layout)
+        if self.kv_layout == "paged" and self._auto_kv_layout() == "slot":
+            raise ValueError(
+                f"kv_layout='paged' unsupported for family "
+                f"'{self.cfg.family}' / seqpar sharding; use 'slot'")
+        self.kv_block_size = kv_block_size
+        self.kv_blocks = (kv_blocks or
+                          max_batch * (-(-max_seq // kv_block_size)) + 1)
+        # paged decode-fill bookkeeping: req_id -> prompt+prefix length the
+        # fill must reach before sampled ids become recordable
+        self._fill_target: Dict[int, int] = {}
+        self.prefill_stats = {"prefilled_tokens": 0, "cached_tokens": 0,
+                              "prefix_hits": 0, "prefix_misses": 0}
         # device-resident token state (decode_loop="device"): the sampled ids
         # of step k ARE step k+1's input, device-to-device; dirty marks the
         # scheduling events that force an O(B) host rebuild.
@@ -122,6 +145,12 @@ class ServingEngine:
         # transfer accounting; tests cross-check it with patched transports)
         self.transfer_stats = {"h2d_bytes": 0, "d2h_bytes": 0,
                                "token_rebuilds": 0}
+
+    def _auto_kv_layout(self) -> str:
+        if (self.cfg.family in ("dense", "vlm", "moe")
+                and not self.model._seqpar_axes()):
+            return "paged"
+        return "slot"
 
     # ------------------------------------------------------------------
     def _decode_fn(self, loop: Optional[str] = None):
@@ -134,9 +163,11 @@ class ServingEngine:
         """
         m = self.model
         vocab = self.cfg.vocab_size
+        step_fn = (m.decode_step_paged if self.kv_layout == "paged"
+                   else m.decode_step)
         if (loop or self.decode_loop) == "device":
             def decode_step(params, cache, tokens):
-                new_cache, logits = m.decode_step(params, cache, tokens)
+                new_cache, logits = step_fn(params, cache, tokens)
                 live = logits[:, :vocab]
                 # first-max argmax as two vectorizable reduces (max, then min
                 # over the tied-index iota). XLA:CPU lowers jnp.argmax to a
@@ -151,22 +182,33 @@ class ServingEngine:
                 return new_cache, ids
         else:
             def decode_step(params, cache, tokens):
-                return m.decode_step(params, cache, tokens)
+                return step_fn(params, cache, tokens)
         return decode_step
 
     def _decode_args(self, bucket: int):
         m, ctx = self.model, self.ctx
         tok_sh = (ctx.sharding(("batch",), (bucket,))
                   if ctx.mesh is not None else None)
-        return (m.param_specs(), m.cache_specs(bucket, self.max_seq),
+        if self.kv_layout == "paged":
+            cache = m.paged_cache_specs(bucket, self.max_seq,
+                                        self.kv_blocks, self.kv_block_size)
+        else:
+            cache = m.cache_specs(bucket, self.max_seq)
+        return (m.param_specs(), cache,
                 jax.ShapeDtypeStruct((bucket,), jnp.int32, sharding=tok_sh))
 
     def capture_spec(self) -> CaptureSpec:
+        # kv_* tags version the captured calling convention: a paged archive
+        # must be served through the paged pool (and vice versa); archives
+        # without the tag predate paging and load via the slot path.
         return CaptureSpec("decode", self._decode_fn(), self._decode_args,
                            self.buckets, donate_argnums=(1,),
                            tags={"decode_loop": self.decode_loop,
                                  "fused_sampling":
-                                     self.decode_loop == "device"})
+                                     self.decode_loop == "device",
+                                 "kv_layout": self.kv_layout,
+                                 "kv_block_size": self.kv_block_size,
+                                 "kv_blocks": self.kv_blocks})
 
     # ---- weights -------------------------------------------------------
     def load_weights(self, params=None, rng=None):
@@ -182,9 +224,16 @@ class ServingEngine:
         return time.perf_counter() - t0
 
     def _init_pool(self):
-        self.pool = KVCachePool(
-            self.model, self.max_batch, self.max_seq,
-            bucket_of=self._bucket_of, memory_plan=self.memory_plan)
+        if self.kv_layout == "paged":
+            self.pool = PagedKVCachePool(
+                self.model, self.max_batch, self.max_seq,
+                bucket_of=self._bucket_of, memory_plan=self.memory_plan,
+                block_size=self.kv_block_size, n_blocks=self.kv_blocks)
+        else:
+            self.pool = KVCachePool(
+                self.model, self.max_batch, self.max_seq,
+                bucket_of=self._bucket_of, memory_plan=self.memory_plan)
+        self._fill_target.clear()
         self._tokens_dev = None
         self._tokens_dirty = True
 
@@ -245,11 +294,18 @@ class ServingEngine:
         the extent is already mapped in this process — and templates
         deserialized by an earlier LOAD of the same archive are reused."""
         spec_m = archive.manifest.get("specs", {}).get("decode", {})
-        archived_loop = (spec_m.get("tags") or {}).get("decode_loop", "host")
+        tags = spec_m.get("tags") or {}
+        archived_loop = tags.get("decode_loop", "host")
         if archived_loop != self.decode_loop and verbose:
             print(f"[LOAD] archive captured for decode_loop="
                   f"'{archived_loop}'; adopting it")
         self.decode_loop = archived_loop
+        # adopt the archived KV calling convention: the restored programs
+        # bake in the cache layout, so the pool must match it. Untagged
+        # (pre-paged) archives default to the slot path.
+        self.kv_layout = tags.get("kv_layout", "slot")
+        self.kv_block_size = tags.get("kv_block_size", self.kv_block_size)
+        self.kv_blocks = tags.get("kv_blocks", self.kv_blocks)
         progs, load_rep, plan = foundry_load(
             archive, self.ctx.mesh,
             background_exact=background_exact,
@@ -326,6 +382,25 @@ class ServingEngine:
         # and for SSM archs we re-run prefill at exact length buckets.
         return slot
 
+    def _begin_fill(self, req: Request) -> int:
+        """Paged admission: attach the radix-cached prefix of the request's
+        tokens to a fresh slot and schedule the rest for decode-fill — the
+        uncached positions run token-by-token through the *captured* decode
+        graph (no separate prefill program, no extra compile). Sampled ids
+        become recordable once the fill reaches the last prompt token; a
+        prefix hit skips straight there, which is the TTFT win."""
+        toks = list(req.prompt) + list(req.generated)
+        slot = self.pool.acquire(req.req_id)
+        req.slot = slot
+        cached = self.pool.begin_sequence(slot, toks)
+        self._fill_target[req.req_id] = len(toks)
+        self.prefill_stats["prefilled_tokens"] += len(toks) - cached
+        self.prefill_stats["cached_tokens"] += cached
+        self.prefill_stats["prefix_hits" if cached else
+                           "prefix_misses"] += 1
+        self._tokens_dirty = True
+        return slot
+
     def _put_tokens(self, t):
         t = jnp.asarray(t)
         if self.ctx.mesh is not None:
@@ -338,8 +413,18 @@ class ServingEngine:
         """O(B) host rebuild of the token vector (the only host->device
         transfer the decode loop ever makes, and only on dirty steps)."""
         arr = np.zeros((exec_bucket,), np.int32)
-        for slot, req in by_slot.items():
-            arr[slot] = (req.generated or req.prompt)[-1]
+        if self.kv_layout == "paged":
+            # unified decode-fill rule: every step feeds the token at the
+            # row's next write position. Steady state this is the last
+            # sampled token (host_len == len(toks) - 1); during a fill it
+            # walks the uncached prompt suffix.
+            for slot, req in by_slot.items():
+                toks = req.prompt + req.generated
+                arr[slot] = toks[min(self.pool.host_len[slot],
+                                     len(toks) - 1)]
+        else:
+            for slot, req in by_slot.items():
+                arr[slot] = (req.generated or req.prompt)[-1]
         self.transfer_stats["h2d_bytes"] += arr.nbytes
         self.transfer_stats["token_rebuilds"] += 1
         return self._put_tokens(arr)
@@ -395,44 +480,147 @@ class ServingEngine:
         self.transfer_stats["d2h_bytes"] += logits_np.nbytes
         return logits_np.argmax(axis=-1)
 
-    def step(self) -> int:
-        """One engine iteration: admit + decode one token for all running.
-        Returns number of active requests served."""
+    def _admit(self, free: int):
+        """Pull admissions from the scheduler and give each a slot.
+
+        Paged admission accounting charges a request only for its *uncached*
+        KV blocks: the radix-matched prefix is served from shared cached
+        blocks, so a request whose full prompt would blow the block budget
+        is still admitted when the cached suffix fits (ISSUE 6 satellite).
+        A genuine shortfall defers (queue front, no retry penalty); only a
+        request that could never fit — uncached need beyond every usable
+        block — fails terminally."""
         sched, pool = self.scheduler, self.pool
-        free = self.max_batch - pool.n_active
-        for req in sched.admissions(free):
-            # a request must fit prompt + retry prefix + at least one new
-            # token inside max_seq; prefilling an oversized one would raise
-            # mid-step (broadcast error) and wedge it in `running` forever
+        admitted = sched.admissions(free)
+        to_defer: List[Request] = []
+        for req in admitted:
             plen = len(req.prompt) + len(req.generated)
             if plen >= self.max_seq:
+                # position capacity, not block budget: even a fully cached
+                # prompt occupies plen positions + one generated token
                 sched.reject(
                     req, f"prompt+prefix length {plen} exceeds engine "
                          f"capacity (max_seq={self.max_seq} incl. one "
                          f"generated token)")
                 continue
-            self._prefill(req)
+            if to_defer:
+                to_defer.append(req)  # keep FIFO order behind the blocker
+                continue
+            if self.kv_layout != "paged":
+                self._prefill(req)
+                continue
+            # end-of-life table size; generated-prefix retries fold into
+            # max_new (finished counts generated against the same budget)
+            total = pool.blocks_needed(len(req.prompt), req.max_new_tokens)
+            if total > pool.allocator.n_usable:
+                sched.reject(
+                    req, f"request needs {total} KV blocks end-to-end, "
+                         f"beyond pool capacity ({pool.allocator.n_usable} "
+                         f"usable blocks of {pool.block_size} tokens)")
+                continue
+            toks = list(req.prompt) + list(req.generated)
+            matched = pool.prefix.match(toks[:max(0, len(toks) - 1)])
+            need = total - len(matched)
+            headroom = (pool.allocator.n_free
+                        + pool.prefix.reclaimable_count(
+                            frozenset(n.block for n in matched))
+                        - self._outstanding_blocks())
+            if need > headroom:
+                to_defer.append(req)
+                continue
+            self._begin_fill(req)
+        for req in reversed(to_defer):
+            sched.defer(req)
+
+    def _outstanding_blocks(self) -> int:
+        """Blocks already-admitted running requests will still allocate on
+        their way to their generation budget — reserved, not yet drawn from
+        the free list. Admission headroom subtracts this so two admissions
+        cannot jointly over-commit the pool and thrash via preemption."""
+        pool, out = self.pool, 0
+        for r in self.scheduler.running.values():
+            if r.slot is None:
+                continue
+            total = pool.blocks_needed(len(r.prompt), r.max_new_tokens)
+            out += max(0, total - len(pool.tables[r.slot]))
+        return out
+
+    def _preempt_until_feasible(self):
+        """Paged mid-decode block exhaustion: running requests' tables grow
+        every block_size steps, and the admission budget can be overtaken by
+        later admissions' growth. Preempt (defer + release) the slot that
+        failed to get its write block until the rest of the batch fits."""
+        sched, pool = self.scheduler, self.pool
+        while True:
+            stuck = pool.ensure_step_capacity()
+            if stuck is None:
+                return
+            victim = sched.running[pool.slots[stuck]]
+            self._fill_target.pop(victim.req_id, None)
+            sched.defer(victim)
+            pool.release(stuck)
+            moved_id = (pool.slots[stuck]
+                        if stuck < len(pool.slots) else None)
+            if moved_id is not None and moved_id in sched.running:
+                sched.running[moved_id].slot = stuck
+            self._tokens_dirty = True
+
+    def step(self) -> int:
+        """One engine iteration: admit + decode one token for all running.
+        Returns number of active requests served."""
+        sched, pool = self.scheduler, self.pool
+        self._admit(self.max_batch - pool.n_active)
+        if self.kv_layout == "paged":
+            self._preempt_until_feasible()
         n = pool.n_active
         if n == 0:
             return 0
+        if self.kv_layout == "paged":
+            # rebuild the (small) device block tables if scheduling dirtied
+            # them; steady-state decode takes the free fast path
+            self.transfer_stats["h2d_bytes"] += pool.sync()
+            if self._fill_target:
+                # fill steps feed prompt tokens, not the sampled ids
+                self._tokens_dirty = True
         bucket = pool.cur_bucket
         by_slot = {r.slot: r for r in sched.running.values()}
+        if self.kv_layout == "paged":
+            # recordability is decided on PRE-step lengths: the step feeding
+            # the last prompt token produces the first real sample
+            eligible = {
+                slot: (self._fill_target.get(req.req_id) is None
+                       or pool.host_len[slot]
+                       >= self._fill_target[req.req_id] - 1)
+                for slot, req in by_slot.items()}
         if self.decode_loop == "device":
             next_tokens = self._step_device(bucket, by_slot)
         else:
             next_tokens = self._step_host(bucket, by_slot)
         self.decode_steps += 1
-        self._finish_step(by_slot, next_tokens)
+        if self.kv_layout == "paged":
+            pool.note_step()  # host mirror of the in-graph lengths + 1
+            for slot, req in by_slot.items():
+                tgt = self._fill_target.get(req.req_id)
+                if tgt is not None and pool.host_len[slot] >= tgt:
+                    # fill finished: publish the prompt's full blocks to the
+                    # radix tree for later requests to hit
+                    pool.commit_prefix(slot, req.prompt)
+                    del self._fill_target[req.req_id]
+            pairs = [(req, int(next_tokens[slot]))
+                     for slot, req in by_slot.items() if eligible[slot]]
+        else:
+            pairs = [(req, int(next_tokens[slot]))
+                     for slot, req in by_slot.items()]
+        self._finish_step(pairs)
         return n
 
-    def _finish_step(self, by_slot, next_tokens: np.ndarray):
-        """Batched host readback bookkeeping: record all B sampled ids,
+    def _finish_step(self, pairs):
+        """Batched host readback bookkeeping: record the sampled ids,
         complete/compact finished requests, invalidate device token state
         when slots moved."""
         sched = self.scheduler
         finished = sched.record_step(
-            ((req, int(next_tokens[slot])) for slot, req in by_slot.items()),
-            eos_token=self.eos_token, max_total_len=self.max_seq - 1)
+            pairs, eos_token=self.eos_token, max_total_len=self.max_seq - 1)
         for req in finished:
             sched.complete(req)
             self.pool.release(req.slot)
@@ -470,6 +658,9 @@ class ServingEngine:
             self.scheduler.running.pop(r.req_id, None)
             r.slot = None
             r.state = ReqState.WAITING
+            # fill progress travels as the exported row's length; the
+            # adopting engine re-derives its own fill target from it
+            self._fill_target.pop(r.req_id, None)
         # anything admitted but slotless (mid-failure) rides with the queue
         stragglers = list(self.scheduler.running.values())
         for r in stragglers:
@@ -503,6 +694,14 @@ class ServingEngine:
             r.slot = s
             r.state = ReqState.RUNNING
             self.scheduler.running[r.req_id] = r
+            if self.kv_layout == "paged":
+                # re-derive fill state from the migrated row length: a row
+                # short of prompt+prefix resumes its decode-fill here (a
+                # steady row degenerates to a one-step-left fill, which is
+                # exactly the steady-state feeding rule)
+                tot = len(r.prompt) + len(r.generated)
+                if self.pool.host_len[s] < tot:
+                    self._fill_target[r.req_id] = tot
         self._tokens_dirty = True
         return n_fit
 

@@ -27,6 +27,23 @@ def _leaf_bytes(sd) -> int:
     return int(np.prod(sd.shape)) * jnp.dtype(sd.dtype).itemsize
 
 
+def reshard_rows(rows, sd, mesh):
+    """Commit migrated rows to a destination pool's devices: the leaf's spec
+    sharding when it accepts the row-count (batch may not divide the data
+    axes), replicated on the mesh otherwise, first local device when
+    un-meshed (eager update ops reject operands committed to a different
+    mesh's device set). Shared by both pool layouts (slot and paged)."""
+    if sd.sharding is not None:
+        try:
+            return jax.device_put(rows, sd.sharding)
+        except Exception:
+            pass
+    if mesh is not None:
+        from jax.sharding import NamedSharding, PartitionSpec
+        return jax.device_put(rows, NamedSharding(mesh, PartitionSpec()))
+    return jax.device_put(rows, jax.devices()[0])
+
+
 @dataclass
 class RowBundle:
     """Device-resident export of pool rows for cross-pool migration.
@@ -214,21 +231,18 @@ class KVCachePool:
         return slots
 
     def _reshard_rows(self, rows, sd):
-        """Commit migrated rows to this pool's devices: the leaf's spec
-        sharding when it accepts the row-count (batch may not divide the
-        data axes), replicated on this mesh otherwise, first local device
-        when un-meshed (eager update ops reject operands committed to a
-        different mesh's device set)."""
-        mesh = self.model.ctx.mesh
-        if sd.sharding is not None:
-            try:
-                return jax.device_put(rows, sd.sharding)
-            except Exception:
-                pass
-        if mesh is not None:
-            from jax.sharding import NamedSharding, PartitionSpec
-            return jax.device_put(rows, NamedSharding(mesh, PartitionSpec()))
-        return jax.device_put(rows, jax.devices()[0])
+        return reshard_rows(rows, sd, self.model.ctx.mesh)
+
+    # ------------------------------------------------------------------
+    # uniform row accessors (layout-neutral seams for tests/tools)
+    # ------------------------------------------------------------------
+    def row_length(self, slot: int) -> int:
+        return int(self.cache["lengths"][slot])
+
+    def seed_length(self, slot: int, n: int):
+        """Force a slot's length to ``n`` (test/tool seam; the slot layout
+        keeps per-row lengths directly in the device cache)."""
+        self.cache["lengths"] = self.cache["lengths"].at[slot].set(n)
 
     def _move_row(self, src: int, dst: int):
         # device-side row move: slice + in-place-style update on the

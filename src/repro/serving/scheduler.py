@@ -111,6 +111,16 @@ class Scheduler:
         req.slot = None
         self.failed.append(req)
 
+    def defer(self, req: Request):
+        """Return a request to the queue front with prefix intact: an
+        admission-time (or preemption) *resource* shortfall — e.g. the KV
+        block budget — not a worker failure, so no retry penalty accrues.
+        The engine re-attempts it next step once capacity frees up."""
+        self.running.pop(req.req_id, None)
+        req.state = ReqState.WAITING
+        req.slot = None
+        self.queue.appendleft(req)
+
     def requeue_on_failure(self, req: Request):
         """Worker failure path: keep generated prefix, retry at queue front.
         The terminal branch is a real completion: it must set ``fail_reason``

@@ -106,13 +106,17 @@ def test_device_loop_fallback_compile_identity():
 
 def test_archive_without_tags_served_with_host_loop():
     """Pre-fusion archives (no spec tags) carry logits-returning programs;
-    a LOADing engine must bind the host loop, whatever its default."""
-    eng = make_engine("host")
+    a LOADing engine must bind the host loop, whatever its default. They
+    also predate the paged KV layout, so the SAVE side is pinned to the
+    slot pool — and the LOADing engine must adopt it (untagged archives
+    default to kv_layout='slot', the pre-paged calling convention)."""
+    eng = make_engine("host", kv_layout="slot")
     archive, _ = eng.save_archive()
     del archive.manifest["specs"]["decode"]["tags"]
     eng2 = make_engine("device")
     eng2.cold_start_foundry(archive, background_exact=False)
     assert eng2.decode_loop == "host"
+    assert eng2.kv_layout == "slot"
     serve_tokens(eng2, PROMPTS[:2])
 
 
@@ -124,7 +128,11 @@ def _steady_d2h_bytes_per_step(eng, monkeypatch, steps=6):
     numpy.asarray materializations of jax arrays, the readback transport)."""
     for _ in range(4):
         eng.submit([3, 1, 4], steps + 8)
-    eng.step()  # admissions + prefill; steady window starts after
+    # admissions + prefill: the paged layout decode-fills the 3-token
+    # prompts over the first 3 steps (each a scheduled token rebuild), so
+    # the steady window starts after the fill completes
+    for _ in range(3):
+        eng.step()
     moved = {"d2h": 0}
     real_asarray = np.asarray
 

@@ -134,6 +134,16 @@ class TestMemoryPlan:
         q = MemoryPlan.from_manifest(p.to_manifest())
         assert q.layout_equal(p)
 
+    def test_scoped_extent(self):
+        p = MemoryPlan()
+        p.alloc("weights", 1000)
+        p.alloc("kv_paged/k", 4096, scope="per_rank")
+        p.alloc("kv_paged/v", 4096, scope="per_rank")
+        assert p.scoped_extent("global") == 1000
+        assert p.scoped_extent("per_rank") == 8192
+        with pytest.raises(ValueError, match="scope"):
+            p.scoped_extent("per_host")
+
 
 # ---------------------------------------------------------------------------
 # archive

@@ -9,7 +9,8 @@ import pytest
 
 from repro.core.kernel_catalog import KernelCatalog
 from repro.kernels import ops, ref
-from repro.kernels.decode_attention import decode_attention_kernel
+from repro.kernels.decode_attention import (decode_attention_kernel,
+                                            decode_attention_paged_kernel)
 from repro.kernels.moe_gemm import moe_grouped_gemm_kernel
 from repro.kernels.ssm_scan import mamba1_scan_kernel
 
@@ -55,6 +56,94 @@ class TestDecodeAttention:
         kc2 = kc.at[:, 41:].set(999.0)
         vc2 = vc.at[:, 41:].set(-999.0)
         out2 = decode_attention_kernel(q, kc2, vc2, lengths, blk=64)
+        np.testing.assert_allclose(np.asarray(out1), np.asarray(out2),
+                                   rtol=1e-6)
+
+
+class TestPagedDecodeAttention:
+    """Block-table indirected flash-decode vs the gather-then-attend oracle
+    and the contiguous kernel (the two must agree on identical logical
+    content regardless of physical block placement)."""
+
+    @staticmethod
+    def _rand_pool(key, B, MB, bs, Hkv, Dh, dtype, n_spare=3):
+        """Pool + per-sequence tables of distinct physical blocks, shuffled
+        so logical order != physical order; block 0 reserved scratch."""
+        NB = 1 + B * MB + n_spare
+        ks = jax.random.split(key, 3)
+        kp = jax.random.normal(ks[0], (NB, bs, Hkv, Dh), dtype)
+        vp = jax.random.normal(ks[1], (NB, bs, Hkv, Dh), dtype)
+        perm = np.asarray(jax.random.permutation(ks[2], NB - 1)) + 1
+        tables = jnp.asarray(perm[:B * MB].reshape(B, MB), jnp.int32)
+        return kp, vp, tables
+
+    @pytest.mark.parametrize("B,MB,bs,H,Hkv,Dh", [
+        (2, 4, 64, 8, 2, 64),
+        (1, 2, 256, 4, 4, 128),   # MHA
+        (3, 8, 16, 8, 1, 64),     # MQA, small blocks
+        (2, 4, 64, 16, 4, 128),
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_matches_ref(self, B, MB, bs, H, Hkv, Dh, dtype):
+        ks = jax.random.split(jax.random.PRNGKey(10), 3)
+        q = jax.random.normal(ks[0], (B, H, Dh), dtype)
+        kp, vp, tables = self._rand_pool(ks[1], B, MB, bs, Hkv, Dh, dtype)
+        lengths = jax.random.randint(ks[2], (B,), 1, MB * bs - 1)
+        out = decode_attention_paged_kernel(q, kp, vp, tables, lengths,
+                                            interpret=True)
+        want = ref.decode_attention_paged_ref(q, kp, vp, tables, lengths)
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32), np.asarray(want, np.float32),
+            **_tols(dtype))
+
+    def test_matches_contiguous_kernel_on_gathered_cache(self):
+        B, MB, bs, H, Hkv, Dh = 2, 4, 64, 8, 2, 64
+        ks = jax.random.split(jax.random.PRNGKey(11), 3)
+        q = jax.random.normal(ks[0], (B, H, Dh), jnp.float32)
+        kp, vp, tables = self._rand_pool(ks[1], B, MB, bs, Hkv, Dh,
+                                         jnp.float32)
+        lengths = jnp.asarray([100, 255])
+        paged = decode_attention_paged_kernel(q, kp, vp, tables, lengths)
+        kd = kp[tables].reshape(B, MB * bs, Hkv, Dh)
+        vd = vp[tables].reshape(B, MB * bs, Hkv, Dh)
+        dense = decode_attention_kernel(q, kd, vd, lengths, blk=bs)
+        np.testing.assert_allclose(np.asarray(paged), np.asarray(dense),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_shared_prefix_blocks_attend_identically(self):
+        """Two sequences whose tables alias the SAME physical prefix blocks
+        (a radix prefix-cache hit) must each see that prefix exactly as if
+        they owned a private copy."""
+        B, MB, bs, H, Hkv, Dh = 2, 4, 32, 4, 2, 64
+        ks = jax.random.split(jax.random.PRNGKey(12), 3)
+        q = jax.random.normal(ks[0], (B, H, Dh), jnp.float32)
+        kp, vp, _ = self._rand_pool(ks[1], B, MB, bs, Hkv, Dh, jnp.float32,
+                                    n_spare=8)
+        # seqs share physical blocks 1,2 for their first two logical blocks
+        shared = jnp.asarray([[1, 2, 3, 4], [1, 2, 5, 6]], jnp.int32)
+        lengths = jnp.asarray([MB * bs - 1, MB * bs - 1])
+        aliased = decode_attention_paged_kernel(q, kp, vp, shared, lengths)
+        # private copies of the same content at different physical blocks
+        kp2 = kp.at[7].set(kp[1]).at[8].set(kp[2])
+        vp2 = vp.at[7].set(vp[1]).at[8].set(vp[2])
+        private = jnp.asarray([[1, 2, 3, 4], [7, 8, 5, 6]], jnp.int32)
+        copied = decode_attention_paged_kernel(q, kp2, vp2, private, lengths)
+        np.testing.assert_allclose(np.asarray(aliased), np.asarray(copied),
+                                   rtol=1e-6)
+
+    def test_mask_ignores_scratch_tail_blocks(self):
+        """Unallocated table tail entries point at the scratch block 0:
+        whatever garbage lives there must not leak into the output."""
+        B, MB, bs, H, Hkv, Dh = 1, 4, 32, 4, 2, 64
+        ks = jax.random.split(jax.random.PRNGKey(13), 2)
+        q = jax.random.normal(ks[0], (B, H, Dh), jnp.float32)
+        kp, vp, _ = self._rand_pool(ks[1], B, MB, bs, Hkv, Dh, jnp.float32)
+        tables = jnp.asarray([[1, 2, 0, 0]], jnp.int32)  # 2 live blocks
+        lengths = jnp.asarray([2 * bs - 1])
+        out1 = decode_attention_paged_kernel(q, kp, vp, tables, lengths)
+        kp2 = kp.at[0].set(999.0)
+        vp2 = vp.at[0].set(-999.0)
+        out2 = decode_attention_paged_kernel(q, kp2, vp2, tables, lengths)
         np.testing.assert_allclose(np.asarray(out1), np.asarray(out2),
                                    rtol=1e-6)
 

@@ -365,6 +365,56 @@ def test_export_adopt_between_engines(archive, reference):
             "tokens diverged across the engine migration"
 
 
+def test_prefix_hit_rows_survive_reshard():
+    """Paged leg: a request admitted via a radix prefix-cache hit migrates
+    mid-stream to a different topology and finishes byte-identical. The
+    radix tree itself is per-pool state and does not migrate — only the
+    request's KV rows do — so the adopted engine must keep decoding from
+    rows that originated in shared cached blocks."""
+    SYS = [9, 4, 7, 7, 1, 3, 8, 2, 6, 6, 2, 5]
+    A, B = SYS + [5, 1], SYS + [2, 8, 4]
+
+    def mk(mesh=None):
+        eng = ServingEngine(Model(CFG, ShardCtx(mesh=resolve_mesh(mesh))),
+                            max_batch=8, max_seq=64, bucket_mode="pow2",
+                            kv_block_size=4)
+        eng.load_weights(rng=jax.random.PRNGKey(7))
+        return eng
+
+    ref = {}
+    for p in (A, B):  # cold oracle: one fresh engine per prompt, no cache
+        e = mk()
+        e.cold_start_vanilla()
+        r = e.submit(p, N_NEW)
+        e.run_until_drained()
+        ref[tuple(p)] = tuple(r.generated)
+
+    src = mk()
+    src.cold_start_vanilla()
+    assert src.kv_layout == "paged"
+    ra = src.submit(A, N_NEW)
+    src.run_until_drained()      # caches SYS's chain in the radix tree
+    rb = src.submit(B, N_NEW)    # admitted via a prefix hit
+    for _ in range(5):
+        src.step()               # mid-stream: some tokens, not all
+    assert src.prefill_stats["prefix_hits"] == 1
+    assert 0 < len(rb.generated) < N_NEW
+
+    running, bundle, queued = src.export_inflight()
+    assert len(running) == 1 and bundle.n == 1 and not queued
+    mesh = make_host_mesh()
+    with mesh:
+        dst = mk(mesh)
+        dst.cold_start_vanilla()
+        assert dst.adopt_inflight(running, bundle) == 1
+        assert dst.prefill_stats["prefix_hits"] == 0  # tree did not migrate
+        dst.run_until_drained()
+    assert rb.state is ReqState.DONE
+    assert tuple(ra.generated) == ref[tuple(A)]
+    assert tuple(rb.generated) == ref[tuple(B)], \
+        "prefix-hit request diverged across the topology switch"
+
+
 def test_adopt_partial_when_capacity_short(archive):
     src = build(None)
     src.cold_start_foundry(archive, background_exact=False)
@@ -440,13 +490,15 @@ def test_pool_export_import_rows_roundtrip():
     eng_b = build(None)
     eng_b.cold_start_eager()
     a0, a1 = eng_a.pool.acquire(0), eng_a.pool.acquire(1)
-    eng_a.pool.cache["lengths"] = (
-        eng_a.pool.cache["lengths"].at[a0].set(5).at[a1].set(9))
+    # layout-neutral accessors: the slot pool keeps lengths in the device
+    # cache, the paged pool in host metadata + block tables
+    eng_a.pool.seed_length(a0, 5)
+    eng_a.pool.seed_length(a1, 9)
     bundle = eng_a.pool.export_rows([a0, a1])
     slots = eng_b.pool.import_rows(bundle, [100, 101])
     assert eng_b.pool.slots[slots[0]] == 100
-    assert int(eng_b.pool.cache["lengths"][slots[0]]) == 5
-    assert int(eng_b.pool.cache["lengths"][slots[1]]) == 9
+    assert eng_b.pool.row_length(slots[0]) == 5
+    assert eng_b.pool.row_length(slots[1]) == 9
     with pytest.raises(ValueError, match="not an active slot"):
         eng_a.pool.export_rows([a0, 7])  # inactive slot
     with pytest.raises(ValueError):

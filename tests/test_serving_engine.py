@@ -127,8 +127,11 @@ def test_boundary_prompt_still_served():
 def test_multi_completion_slot_compaction():
     """Two+ requests finishing in the same step(): after release+compaction
     every surviving request's slot must still point at its own KV row (the
-    moved_id repair in ServingEngine.step)."""
-    eng = make_engine()
+    moved_id repair in ServingEngine.step). Pinned to the slot layout whose
+    device row-compaction it exercises (and whose one-shot prefill the step
+    counts assume); the paged layout's compaction is covered by
+    tests/test_prefix_cache.py and the blockpool property suite."""
+    eng = make_engine(kv_layout="slot")
     eng.cold_start_vanilla()
     short = [eng.submit(p, 3) for p in ([5, 9, 2], [11, 3], [7, 7, 7, 1])]
     long = [eng.submit(p, 8) for p in ([2, 4], [13, 4, 9])]
@@ -145,8 +148,9 @@ def test_multi_completion_slot_compaction():
 
 def test_pool_shrink_during_release_keeps_slots_valid():
     """A mass completion shrinks the pool bucket (hysteresis) while a
-    survivor is still decoding; its slot must survive the shrink."""
-    eng = make_engine()
+    survivor is still decoding; its slot must survive the shrink. Slot
+    layout pinned — the step counts assume one-shot prefill."""
+    eng = make_engine(kv_layout="slot")
     eng.cold_start_vanilla()
     many = [eng.submit([3, 1, 4], 2) for _ in range(5)]
     survivor = eng.submit([2, 7], 9)
