@@ -1,0 +1,141 @@
+"""Analysis gate (CI): the static verifier must pass real SAVE output clean
+and must catch seeded corruption by the exact advertised pass id.
+
+Three fresh archives are produced the way deployments produce them —
+``ServingEngine.save_archive`` for the exact (deployment-topology) and
+stamped (placeholder capture-mesh) paths, ``TemplateDepot.put_archive`` for
+the thin depot-backed path — and ``python -m repro.analysis.check`` must
+find nothing in any of them (deep blob verification + IR lint included).
+Then each corruption class from docs/architecture.md §11 is seeded into a
+copy and must surface as its named finding id with exit code 2:
+
+    truncated v2 header        -> container-structure
+    bit-flipped template blob  -> blob-integrity
+    unknown CaptureSpec tag    -> tags-schema
+    RankDelta missing peer     -> rank-delta-coverage
+
+Exit 0 iff every expectation holds. Runs in-process on CPU; the capture
+mesh needs placeholder devices, so XLA_FLAGS is pinned before jax loads.
+"""
+import os
+import sys
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(ROOT, "src"))
+
+import shutil  # noqa: E402
+import tempfile  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.analysis.check import main as check_main  # noqa: E402
+from repro.analysis.checker import (check_archive_file,  # noqa: E402
+                                    check_container_bytes, check_depot,
+                                    verify_for_load)
+from repro.configs.registry import get_arch  # noqa: E402
+from repro.core import Archive, TemplateDepot  # noqa: E402
+from repro.launch.mesh import (ShardCtx, make_capture_mesh,  # noqa: E402
+                               make_tp_mesh)
+from repro.models.model import Model  # noqa: E402
+from repro.serving.engine import ServingEngine  # noqa: E402
+
+failures = []
+
+
+def gate(name: str, ok: bool, detail: str = ""):
+    print(f"[gate] {'ok  ' if ok else 'FAIL'} {name}  {detail}")
+    if not ok:
+        failures.append(name)
+
+
+def build(mesh):
+    eng = ServingEngine(Model(get_arch("smollm-360m").reduced(),
+                              ShardCtx(mesh=mesh)),
+                        max_batch=4, max_seq=32, bucket_mode="pow2")
+    eng.load_weights(rng=jax.random.PRNGKey(0))
+    return eng
+
+
+tmp = tempfile.mkdtemp(prefix="foundry_analysis_gate_")
+try:
+    # ---- three real SAVE products must verify completely clean ----------
+    exact_path = os.path.join(tmp, "exact.fndry")
+    ar_exact, _ = build(None).save_archive(exact_path)
+    gate("exact archive clean (CLI, deep+ir)",
+         check_main([exact_path]) == 0)
+
+    stamp_path = os.path.join(tmp, "stamped.fndry")
+    mesh_cap = make_capture_mesh()
+    with mesh_cap:
+        build(mesh_cap).save_archive(stamp_path)
+    gate("stamped (capture-mesh) archive clean (CLI, deep+ir)",
+         check_main([stamp_path]) == 0)
+
+    tp2_path = os.path.join(tmp, "tp2.fndry")
+    mesh_tp2 = make_tp_mesh(2)
+    with mesh_tp2:
+        build(mesh_tp2).save_archive(tp2_path)
+    gate("2-rank TP archive clean (CLI, deep+ir)",
+         check_main([tp2_path]) == 0)
+
+    depot = TemplateDepot(os.path.join(tmp, "depot"))
+    depot.put_archive("exact", ar_exact)
+    thin_path = os.path.join(depot.manifest_dir, "exact.fndry")
+    gate("depot fsck clean", check_main([depot.root]) == 0)
+    gate("thin archive clean through depot (CLI, deep, no-ir dedup)",
+         check_main([thin_path, "--depot", depot.root, "--no-ir"]) == 0)
+    fs, _ = check_depot(depot.root, deep=True)
+    gate("depot deep re-hash clean", fs == [])
+
+    # ---- corruption fixtures: named pass id + exit code 2 ---------------
+    raw = open(exact_path, "rb").read()
+
+    p = os.path.join(tmp, "c_trunc.fndry")
+    open(p, "wb").write(raw[:12])
+    got = {f.pass_id for f in check_archive_file(p)}
+    gate("truncated header -> container-structure",
+         got == {"container-structure"}, f"got {sorted(got)}")
+    gate("truncated header exits 2", check_main([p]) == 2)
+
+    _, info = check_container_bytes(raw, "gate")
+    exe_hash = ar_exact.manifest["specs"]["decode"]["groups"][0][
+        "executable_blob"]
+    off, comp_len, _r = info.index[exe_hash]
+    bad = bytearray(raw)
+    bad[info.blob_base + off + comp_len // 2] ^= 0xFF
+    p = os.path.join(tmp, "c_flip.fndry")
+    open(p, "wb").write(bytes(bad))
+    got = {f.pass_id for f in check_archive_file(p, ir=False)}
+    gate("bit-flipped blob -> blob-integrity",
+         "blob-integrity" in got, f"got {sorted(got)}")
+    gate("bit-flipped blob exits 2", check_main([p, "--no-ir"]) == 2)
+
+    a = Archive.load(exact_path)
+    a.manifest["specs"]["decode"]["tags"]["kv_teleport"] = True
+    got = {f.pass_id for f in verify_for_load(a)}
+    gate("unknown tag -> tags-schema",
+         got == {"tags-schema"}, f"got {sorted(got)}")
+    p = os.path.join(tmp, "c_tags.fndry")
+    a.save(p)
+    gate("unknown tag exits 2", check_main([p, "--no-ir", "--no-deep"]) == 2)
+
+    # the 2-rank TP archive: its RankDelta section has a peer table per
+    # mesh axis to lose (the stamped capture is single-rank by design)
+    a = Archive.load(tp2_path)
+    a.manifest["rank_delta"]["capture_ranks"][1]["peer_groups"].pop("model")
+    got = {f.pass_id for f in verify_for_load(a)}
+    gate("RankDelta missing peer -> rank-delta-coverage",
+         got == {"rank-delta-coverage"}, f"got {sorted(got)}")
+    p = os.path.join(tmp, "c_rank.fndry")
+    a.save(p)
+    gate("RankDelta missing peer exits 2",
+         check_main([p, "--no-ir", "--no-deep"]) == 2)
+finally:
+    shutil.rmtree(tmp, ignore_errors=True)
+
+if failures:
+    print(f"analysis gate: {len(failures)} expectation(s) failed: "
+          f"{failures}")
+    sys.exit(1)
+print("analysis gate: all expectations held")

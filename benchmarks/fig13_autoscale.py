@@ -104,6 +104,23 @@ for label in ("foundry", "foundry_stamped"):
             < results["vanilla"]["cold_start_to_first_token_max_s"]), \
         f"{label} scale-out not faster than vanilla"
 print("ROW,fig13.foundry_faster_than_vanilla,1.0,asserted")
+
+# strict-LOAD verification budget: the static pre-flight that
+# foundry_load(strict=True) runs (repro.analysis.checker.verify_for_load)
+# must cost < 5% of the LOAD critical path — measured on a fresh LOAD (no
+# template-cache reuse) so verify_s is weighed against real restore work
+from repro.core import foundry_load, wait_for_background
+_, lrep, _ = foundry_load(
+    Archive.from_bytes(ar_exact.to_bytes(), lazy=True), None,
+    reuse_templates=False)
+wait_for_background(lrep)
+verify = lrep.phases["verify_s"]
+assert lrep.fallback_compiles == 0
+assert verify < 0.05 * lrep.critical_path_s, \
+    f"strict verification {verify * 1e3:.2f}ms exceeds 5% of LOAD " \
+    f"critical path {lrep.critical_path_s * 1e3:.2f}ms"
+print(f"ROW,fig13.strict_verify_s,{verify * 1e6:.1f},"
+      f"pct={100 * verify / lrep.critical_path_s:.2f}%_of_load")
 """
 
 

@@ -1,0 +1,122 @@
+"""foundry-check CLI: ``python -m repro.analysis.check <targets...>``.
+
+Targets are archive files (``.fndry``) and/or depot root directories; each
+is verified with the full offline pass set of ``repro.analysis.checker``
+(container structure, manifest/blob/tags, StableHLO IR lint, memory plan,
+depot fsck — nothing is executed). Examples:
+
+    # full verification of one archive (deep blob integrity + IR lint)
+    python -m repro.analysis.check model.fndry
+
+    # thin (depot-backed) archive: resolve blobs through its depot
+    python -m repro.analysis.check model.fndry --depot /var/foundry/depot
+
+    # depot fsck; then again, deleting unreferenced blob files
+    python -m repro.analysis.check /var/foundry/depot
+    python -m repro.analysis.check /var/foundry/depot --gc-orphans
+
+    # fast metadata-only pass (what foundry_load(strict=True) runs)
+    python -m repro.analysis.check model.fndry --no-deep --no-ir
+
+    # machine-readable findings for CI gates
+    python -m repro.analysis.check model.fndry --json
+
+Exit codes (stable; CI gates key off them):
+    0  clean — no findings above info
+    1  warnings only (servable but degraded: dedup lost, orphaned storage)
+    2  errors — the artifact must not be served; strict LOAD would refuse it
+    3  fatal — unusable invocation or unreadable target
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import List, Optional
+
+from repro.analysis.checker import (Finding, check_archive_file, check_depot,
+                                    exit_code, findings_to_json, summarize)
+
+EXIT_CLEAN, EXIT_WARNINGS, EXIT_ERRORS, EXIT_FATAL = 0, 1, 2, 3
+
+
+class _Parser(argparse.ArgumentParser):
+    """argparse exits 2 on bad usage — that slot means "errors found" here,
+    so usage problems exit with the fatal code instead."""
+
+    def error(self, message):
+        self.print_usage(sys.stderr)
+        print(f"{self.prog}: error: {message}", file=sys.stderr)
+        raise SystemExit(EXIT_FATAL)
+
+
+def _build_parser() -> argparse.ArgumentParser:
+    ap = _Parser(
+        prog="python -m repro.analysis.check",
+        description="Offline static verifier for Foundry archives, depots "
+                    "and capture manifests (no execution).",
+        epilog="exit codes: 0 clean, 1 warnings only, 2 errors, 3 fatal")
+    ap.add_argument("targets", nargs="+",
+                    help="archive file(s) and/or depot root directorie(s)")
+    ap.add_argument("--depot", metavar="ROOT",
+                    help="depot root used to resolve thin archives' blobs")
+    ap.add_argument("--no-deep", dest="deep", action="store_false",
+                    help="skip blob fetch + content-hash verification "
+                         "(metadata-only, the strict-LOAD pre-flight scope)")
+    ap.add_argument("--no-ir", dest="ir", action="store_false",
+                    help="skip the StableHLO IR lint passes")
+    ap.add_argument("--gc-orphans", action="store_true",
+                    help="depot targets: delete blob files the index does "
+                         "not reference (crash residue)")
+    ap.add_argument("--json", action="store_true",
+                    help="emit findings as JSON on stdout")
+    return ap
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    args = _build_parser().parse_args(argv)
+
+    depot = None
+    if args.depot:
+        if not os.path.isdir(args.depot):
+            print(f"fatal: --depot {args.depot!r} is not a directory",
+                  file=sys.stderr)
+            return EXIT_FATAL
+        from repro.core.depot import TemplateDepot
+        depot = TemplateDepot(args.depot)
+
+    findings: List[Finding] = []
+    actions = {}
+    for target in args.targets:
+        if os.path.isdir(target):
+            fs, acts = check_depot(target, gc_orphans=args.gc_orphans,
+                                   deep=args.deep)
+            findings += fs
+            for k, v in acts.items():
+                actions[k] = actions.get(k, 0) + v
+        elif os.path.isfile(target):
+            findings += check_archive_file(target, depot, deep=args.deep,
+                                           ir=args.ir)
+        else:
+            print(f"fatal: no such file or directory: {target}",
+                  file=sys.stderr)
+            return EXIT_FATAL
+
+    if args.json:
+        print(json.dumps(findings_to_json(findings, actions), indent=1))
+    else:
+        for f in findings:
+            print(f.render())
+        s = summarize(findings)
+        gc = (f", gc removed {actions['gc_removed_blobs']} blob(s) "
+              f"({actions['gc_freed_bytes']} bytes)"
+              if actions.get("gc_removed_blobs") else "")
+        print(f"foundry-check: {len(args.targets)} target(s): "
+              f"{s['error']} error(s), {s['warning']} warning(s), "
+              f"{s['info']} info{gc}")
+    return exit_code(findings)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

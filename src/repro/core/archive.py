@@ -99,7 +99,9 @@ class _FileSource:
     def read(self, offset: int, length: int) -> bytes:
         with self._lock:
             if self._f is None:
-                self._f = open(self._path, "rb")
+                # held for the Archive's lifetime (positioned reads), not a
+                # with-block scope
+                self._f = open(self._path, "rb")  # noqa: SIM115
             if not hasattr(os, "pread"):  # no positioned read: serialize
                 self._f.seek(self._base + offset)
                 return self._f.read(length)

@@ -94,11 +94,24 @@ class TemplateDepot:
         return {"version": _INDEX_VERSION, "blobs": {}, "archives": {}}
 
     def _flush(self) -> None:
-        tmp = self._index_path + ".tmp"
-        with open(tmp, "w") as f:
-            json.dump(self._index, f, indent=1, sort_keys=True)
-            f.write("\n")
-        os.replace(tmp, self._index_path)  # atomic
+        # Unique temp per writer (pid + thread), fsync'd before the rename:
+        # two processes flushing one depot must not interleave writes into a
+        # shared ".tmp", and a crash between write and rename must leave the
+        # published index either old or new, never torn. The fsck pass
+        # (repro.analysis.checker.check_depot) flags a torn index.json as
+        # "depot-index"; tests/test_checker.py regression-tests both cases.
+        tmp = (f"{self._index_path}.tmp.{os.getpid()}"
+               f".{threading.get_ident()}")
+        try:
+            with open(tmp, "w") as f:
+                json.dump(self._index, f, indent=1, sort_keys=True)
+                f.write("\n")
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, self._index_path)  # atomic publish
+        finally:
+            if os.path.exists(tmp):
+                os.remove(tmp)
 
     # -- blob plane ------------------------------------------------------
     def ensure_blob(self, h: str, data_fn: Callable[[], bytes],
@@ -234,6 +247,13 @@ class TemplateDepot:
                 freed += meta["comp_len"]
             self._flush()
         return {"deleted_blobs": deleted, "freed_comp_bytes": freed}
+
+    def fsck(self, *, gc_orphans: bool = False, deep: bool = False):
+        """Static consistency check of this depot (index vs disk, refcounts,
+        thin manifests; ``repro.analysis.checker.check_depot``). Returns
+        ``(findings, actions)``; read-only unless ``gc_orphans``."""
+        from repro.analysis.checker import check_depot
+        return check_depot(self.root, gc_orphans=gc_orphans, deep=deep)
 
     # -- accounting ------------------------------------------------------
     def stats(self) -> Dict[str, Any]:

@@ -79,8 +79,10 @@ class LoadReport:
     Fields:
         phases            phase name -> seconds. Keys not prefixed
                           "background" are on the cold-start critical path
-                          (parse_s, prealloc_s, kernel_load_s, rank_delta_s,
-                          templates_s); background_spawn_s only covers thread
+                          (parse_s, verify_s, prealloc_s, kernel_load_s,
+                          rank_delta_s, templates_s — verify_s is the strict
+                          pre-flight of repro.analysis.checker, metadata-only
+                          and negligible); background_spawn_s only covers thread
                           spawn, not the background compiles themselves.
                           templates_s is the caller-thread wall time of the
                           install stage — fetch/deserialize work hidden under
@@ -172,6 +174,7 @@ class _TemplateJob:
     blob: Optional[bytes] = None  # stage 1 -> 2
     exe: Any = None               # stage 2 -> 3
     error: Optional[BaseException] = None
+    error_stage: Optional[str] = None  # "fetch" | "deserialize" | "stamp"
 
 
 _DONE = object()
@@ -230,7 +233,7 @@ class _TemplatePipeline:
                 if job.blob_hash is not None:
                     job.blob = self.archive.get_blob(job.blob_hash)
             except BaseException as e:
-                job.error = e
+                job.error, job.error_stage = e, "fetch"
             self.busy["fetch_s"] += time.perf_counter() - t0
             if not self._put(self._fetched, job):
                 return
@@ -252,7 +255,7 @@ class _TemplatePipeline:
                 try:
                     job.exe = _deserialize_template(job.blob)
                 except BaseException as e:
-                    job.error = e
+                    job.error, job.error_stage = e, "deserialize"
             job.blob = None  # stage 2 owns the last reference to the bytes
             self.busy["deserialize_s"] += time.perf_counter() - t0
             if not self._put(self._ready, job):
@@ -277,6 +280,7 @@ def foundry_load(archive: Archive, mesh, *,
                  pipeline_depth: int = 4,
                  warm: bool = False,
                  reuse_templates: bool = True,
+                 strict: bool = True,
                  verbose: bool = False) -> tuple[Dict[str, ProgramSet], LoadReport, Optional[MemoryPlan]]:
     """Restore executables from an archive. Returns
     ({spec_name: ProgramSet}, report, load_side_memory_plan).
@@ -293,11 +297,31 @@ def foundry_load(archive: Archive, mesh, *,
     for verification). ``reuse_templates`` (default on) consults the
     archive's deserialized-template cache so repeat LOADs of one shared
     Archive — fleet scale-out, reshard — skip fetch + deserialize for
-    templates an earlier LOAD already realized."""
+    templates an earlier LOAD already realized.
+
+    ``strict`` (default on) runs the static pre-flight verification of
+    ``repro.analysis.checker.verify_for_load`` over the manifest before any
+    restore work: a structurally-bad archive raises
+    ``ArchiveVerificationError`` with the findings instead of silently
+    degrading into per-template fallback compiles, and a blob whose bytes
+    fail content verification during the fetch stage raises instead of
+    fallback-compiling that template. The pre-flight is metadata-only (no
+    blob fetches, no IR deserialization) so its cost — recorded as
+    ``phases["verify_s"]`` — is negligible next to the LOAD critical path
+    (the fig13 --quick gate asserts < 5%)."""
     rep = LoadReport(warm=warm)
     t0 = time.perf_counter()
     manifest = archive.manifest
     rep.phases["parse_s"] = time.perf_counter() - t0
+
+    if strict:
+        from repro.analysis.checker import (ArchiveVerificationError, errors,
+                                            verify_for_load)
+        t0 = time.perf_counter()
+        findings = verify_for_load(archive)
+        rep.phases["verify_s"] = time.perf_counter() - t0
+        if errors(findings):
+            raise ArchiveVerificationError(findings, rep)
 
     # --- mesh-rebind decision (module docstring: exact/stamped/fallback) --
     capture_identity = manifest.get("mesh") or {"axes": [], "shape": []}
@@ -385,9 +409,25 @@ def foundry_load(archive: Archive, mesh, *,
                                              job.donate)
                         rep.rank_stamped += len(rank_deltas)
                     except Exception as e:
-                        job.error, exe = e, None  # degrade to fallback below
+                        job.error, job.error_stage = e, "stamp"
+                        exe = None  # degrade to fallback below
                 if exe is None:
-                    # fallback decision, fetch/deserialize/stamp failure, or
+                    if strict and job.error_stage == "fetch":
+                        # a fetch failure is the archive lying about its own
+                        # contents (hash mismatch, truncated section, missing
+                        # depot blob) — strict LOAD refuses it rather than
+                        # hiding the corruption behind a fallback compile.
+                        # Deserialize/stamp failures still degrade: they are
+                        # environment-side (capture devices unavailable).
+                        from repro.analysis.checker import (
+                            ArchiveVerificationError, Finding)
+                        raise ArchiveVerificationError([Finding(
+                            "blob-integrity", "error",
+                            f"blob/{(job.blob_hash or '?')[:12]}",
+                            f"template blob for group {g.key[:12]} failed to "
+                            f"fetch: {type(job.error).__name__}: {job.error}",
+                            "the archive is corrupt; re-run SAVE")], rep)
+                    # fallback decision, deserialize/stamp failure, or
                     # capture devices unavailable: last-resort rebind via
                     # compile-from-StableHLO (the blob is already cache-hot
                     # when the fetch stage prefetched it)

@@ -149,7 +149,25 @@ def main():
                     help="requests per hot-model phase")
     ap.add_argument("--zoo-idle-ticks", type=int, default=20,
                     help="idle ticks before a model scales to zero")
+    ap.add_argument("--check", action="store_true",
+                    help="run the static verifier (repro.analysis.check) "
+                         "over --load/--depot before serving; refuse to "
+                         "serve artifacts with error findings")
     args = ap.parse_args()
+
+    if args.check:
+        from repro.analysis.check import main as check_main
+        targets = [t for t in (args.load, args.depot) if t]
+        if not targets:
+            ap.error("--check needs --load and/or --depot")
+        code = check_main(targets + (["--depot", args.depot]
+                                     if args.depot and args.load else []))
+        if code >= 2:
+            raise SystemExit(f"refusing to serve: static verification "
+                             f"found errors (exit {code}); see findings "
+                             f"above")
+        print(f"[check] static verification passed ({len(targets)} "
+              f"target(s))")
 
     if args.models:
         if not args.depot:

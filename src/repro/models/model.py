@@ -648,7 +648,7 @@ class Model:
         return ctx.constrain(out, "batch", None), k_cache, v_cache
 
     def _batch_axes(self, B):
-        axes = [a for a in self.ctx.data_axes]
+        axes = list(self.ctx.data_axes)
         import math as _m
         while axes and B % _m.prod(self.ctx.mesh.shape[a] for a in axes):
             axes.pop(0)

@@ -57,6 +57,41 @@ from repro.serving.kvcache import KVCachePool, RowBundle
 from repro.serving.scheduler import ReqState, Request, Scheduler
 
 
+#: The supported-convention matrix: every ``CaptureSpec.tags`` key this
+#: engine can serve, with its legal value domain (a tuple enumerates the
+#: values; ``"int+"`` means a positive int). Tags version the captured
+#: calling convention — the archived programs bake in the decode loop and
+#: KV layout, so a key or value outside this matrix means the archive
+#: speaks a convention this engine does not, and serving it anyway risks
+#: silent token corruption rather than a graceful fallback.
+#: ``repro.analysis.checker`` validates archives against this matrix
+#: statically (the ``tags-schema`` pass).
+TAG_CONVENTIONS: Dict[str, Any] = {
+    "decode_loop": ("host", "device"),
+    "fused_sampling": (False, True),
+    "kv_layout": ("slot", "paged"),
+    "kv_block_size": "int+",
+    "kv_blocks": "int+",
+}
+
+
+def validate_tags(tags: Dict[str, Any]) -> List[str]:
+    """Problems (empty = clean) with a tag dict vs ``TAG_CONVENTIONS``."""
+    problems = []
+    for k, v in tags.items():
+        domain = TAG_CONVENTIONS.get(k)
+        if domain is None:
+            problems.append(f"unknown tag key {k!r} (engine speaks: "
+                            f"{sorted(TAG_CONVENTIONS)})")
+        elif domain == "int+":
+            if not isinstance(v, int) or isinstance(v, bool) or v < 1:
+                problems.append(f"tag {k}={v!r} must be a positive int")
+        elif v not in domain or isinstance(v, bool) != any(
+                isinstance(d, bool) for d in domain):
+            problems.append(f"tag {k}={v!r} not in supported domain {domain}")
+    return problems
+
+
 @dataclass
 class ColdStartReport:
     """How this engine became servable and what it cost.
@@ -276,6 +311,7 @@ class ServingEngine:
                            background_exact: bool = True,
                            allow_stamping: bool = True,
                            warm: bool = False,
+                           strict: bool = True,
                            verbose: bool = False) -> ColdStartReport:
         """LOAD ``archive`` and become servable. The report's mode is
         "foundry" when the archive was captured on this engine's topology
@@ -295,6 +331,18 @@ class ServingEngine:
         deserialized by an earlier LOAD of the same archive are reused."""
         spec_m = archive.manifest.get("specs", {}).get("decode", {})
         tags = spec_m.get("tags") or {}
+        if strict:
+            # validate BEFORE adopting: a tag outside the convention matrix
+            # would otherwise mutate engine state (loop/pool selection) into
+            # a convention SAVE never captured — token corruption, not a
+            # fallback. foundry_load(strict=True) re-checks the full
+            # manifest; this guards the two fields adopted pre-LOAD.
+            problems = validate_tags(tags)
+            if problems:
+                raise ValueError(
+                    f"archive capture tags fail the engine convention "
+                    f"matrix: {'; '.join(problems)} (run `python -m "
+                    f"repro.analysis.check` on the archive)")
         archived_loop = tags.get("decode_loop", "host")
         if archived_loop != self.decode_loop and verbose:
             print(f"[LOAD] archive captured for decode_loop="
@@ -309,7 +357,8 @@ class ServingEngine:
         progs, load_rep, plan = foundry_load(
             archive, self.ctx.mesh,
             background_exact=background_exact,
-            allow_stamping=allow_stamping, warm=warm, verbose=verbose)
+            allow_stamping=allow_stamping, warm=warm, strict=strict,
+            verbose=verbose)
         mode = ("foundry-stamped" if load_rep.restore_path == "stamped"
                 else "foundry")
         rep = ColdStartReport(mode, n_buckets=len(self.buckets),

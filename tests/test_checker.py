@@ -1,0 +1,609 @@
+"""foundry-check: the static verifier (repro.analysis.checker + check CLI).
+
+Fast tests exercise each pass family on synthetic-but-valid artifacts and
+their seeded corruptions (no jax compile, no execution). The slow
+subprocess test runs the real cycle the CI analysis gate also runs: a
+foundry_save archive verifies clean end-to-end (deep + IR passes), then
+each of the four corruption classes is caught by its named pass AND makes
+``foundry_load(strict=True)`` raise with zero fallback compiles attempted.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.analysis import checker
+from repro.analysis.check import main as check_main
+from repro.analysis.checker import (ArchiveVerificationError, Finding,
+                                    check_container_bytes, check_depot,
+                                    check_manifest_schema, check_memory_plan,
+                                    check_rank_delta_section, check_tags,
+                                    exit_code, summarize, verify_for_load)
+from repro.core import Archive, MemoryPlan, TemplateDepot
+from repro.core.archive import MAGIC2
+from repro.core.rank_stamp import build_rank_deltas
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def make_plan() -> MemoryPlan:
+    p = MemoryPlan()
+    p.alloc("weights", 1000)
+    p.alloc("kv_pool", 4096, scope="per_rank")
+    p.set_phase("capture")
+    p.alloc("capture_tmp", 64)
+    return p
+
+
+def make_archive() -> Archive:
+    """Synthetic archive whose manifest satisfies every metadata-level pass
+    (blobs are opaque bytes, so only deep/IR passes are out of scope)."""
+    ar = Archive()
+    h_exe = ar.add_blob(b"template-executable" * 20)
+    h_e1 = ar.add_blob(b"export-bucket-1" * 20)
+    h_e2 = ar.add_blob(b"export-bucket-2" * 20)
+    plan = make_plan()
+    ident = {"axes": ["data", "model"], "shape": [1, 2]}
+    ar.manifest = {
+        "version": 2, "mesh": ident, "meta": {},
+        "specs": {"decode": {
+            "buckets": [1, 2], "donate_argnums": [1],
+            "tags": {"decode_loop": "host", "fused_sampling": False,
+                     "kv_layout": "slot"},
+            "groups": [{"key": "k1", "buckets": [1, 2],
+                        "template_bucket": 2, "executable_blob": h_exe,
+                        "bucket_export_blobs": {"1": h_e1, "2": h_e2},
+                        "bucket_executable_blobs": {}}],
+        }},
+        "memory_plan": plan.to_manifest(),
+        "kernel_catalog": None,
+        "rank_delta": {
+            "capture_ranks": [d.to_manifest()
+                              for d in build_rank_deltas(ident, plan)],
+            "rank_dependent_fields": ["mesh"],
+        },
+    }
+    return ar
+
+
+def ids(findings):
+    return sorted({f.pass_id for f in findings})
+
+
+# ---------------------------------------------------------------------------
+# findings / severity / exit-code contract
+# ---------------------------------------------------------------------------
+class TestFindingContract:
+    def test_every_pass_id_documented(self):
+        assert set(checker.PASSES) >= {
+            "container-structure", "manifest-schema", "blob-index",
+            "blob-integrity", "tags-schema", "ir-parse",
+            "donation-aliasing", "ir-determinism", "rank-delta-coverage",
+            "memory-plan-overlap", "memory-plan-alignment",
+            "memory-plan-extent", "memory-plan-leak", "memory-plan-scope",
+            "capture-window-order", "depot-index", "depot-orphan-blob"}
+
+    def test_unknown_pass_id_rejected(self):
+        with pytest.raises(AssertionError):
+            Finding("no-such-pass", "error", "x", "y")
+
+    def test_exit_codes(self):
+        e = Finding("blob-integrity", "error", "a", "m")
+        w = Finding("depot-orphan-blob", "warning", "a", "m")
+        i = Finding("depot-orphan-blob", "info", "a", "m")
+        assert exit_code([]) == 0
+        assert exit_code([i]) == 0
+        assert exit_code([i, w]) == 1
+        assert exit_code([i, w, e]) == 2
+        assert summarize([i, w, e]) == {"info": 1, "warning": 1, "error": 1}
+
+    def test_render_includes_fix_hint(self):
+        f = Finding("blob-index", "error", "a.fndry:x", "gone",
+                    fix_hint="re-run SAVE")
+        assert "re-run SAVE" in f.render() and "blob-index" in f.render()
+
+
+# ---------------------------------------------------------------------------
+# pass 1: container / manifest / blob index / tags
+# ---------------------------------------------------------------------------
+class TestContainerPass:
+    def test_clean_v2(self):
+        fs, info = check_container_bytes(make_archive().to_bytes(), "t")
+        assert fs == [] and info.version == 2 and len(info.index) == 3
+
+    def test_bad_magic(self):
+        fs, _ = check_container_bytes(b"not an archive at all", "t")
+        assert ids(fs) == ["container-structure"]
+
+    def test_truncated_header(self):
+        raw = make_archive().to_bytes()
+        fs, _ = check_container_bytes(raw[:len(MAGIC2) + 4], "t")
+        assert [(f.pass_id, f.severity) for f in fs] == \
+            [("container-structure", "error")]
+        fs, _ = check_container_bytes(raw[:len(MAGIC2) + 12], "t")
+        assert ids(fs) == ["container-structure"]
+
+    def test_truncated_blob_section(self):
+        raw = make_archive().to_bytes()
+        fs, _ = check_container_bytes(raw[:-10], "t")
+        assert "blob-index" in ids(fs)
+
+    def test_bit_flip_caught_by_deep_pass(self, tmp_path):
+        ar = make_archive()
+        path = str(tmp_path / "a.fndry")
+        ar.save(path)
+        raw = bytearray(open(path, "rb").read())
+        _, info = check_container_bytes(bytes(raw), "t")
+        h = ar.manifest["specs"]["decode"]["groups"][0]["executable_blob"]
+        off, comp_len, _ = info.index[h]
+        raw[info.blob_base + off + comp_len // 2] ^= 0xFF
+        open(path, "wb").write(bytes(raw))
+        fs = checker.check_archive_file(path, ir=False)
+        assert "blob-integrity" in ids(fs)
+        assert exit_code(fs) == 2
+
+
+class TestManifestPass:
+    def test_clean(self):
+        assert verify_for_load(make_archive()) == []
+
+    def test_missing_version_and_specs(self):
+        ar = make_archive()
+        del ar.manifest["version"]
+        ar.manifest["specs"] = {}
+        assert ids(verify_for_load(ar)) == ["manifest-schema"]
+
+    def test_buckets_must_increase(self):
+        ar = make_archive()
+        ar.manifest["specs"]["decode"]["buckets"] = [2, 1]
+        assert "manifest-schema" in ids(verify_for_load(ar))
+
+    def test_template_bucket_must_be_group_max(self):
+        ar = make_archive()
+        ar.manifest["specs"]["decode"]["groups"][0]["template_bucket"] = 1
+        fs = verify_for_load(ar)
+        assert any(f.pass_id == "manifest-schema" and f.severity == "error"
+                   and "pad-served" in f.message for f in fs)
+
+    def test_bucket_covered_twice(self):
+        ar = make_archive()
+        g = dict(ar.manifest["specs"]["decode"]["groups"][0],
+                 key="k2", buckets=[2], template_bucket=2)
+        ar.manifest["specs"]["decode"]["groups"].append(g)
+        assert "manifest-schema" in ids(verify_for_load(ar))
+
+    def test_dangling_blob_reference(self):
+        ar = make_archive()
+        ar.manifest["specs"]["decode"]["groups"][0]["executable_blob"] = \
+            "f" * 32
+        fs = verify_for_load(ar)
+        assert ids(fs) == ["blob-index"]
+        assert all(f.severity == "error" for f in fs)
+
+    def test_missing_export_is_warning(self):
+        ar = make_archive()
+        del ar.manifest["specs"]["decode"]["groups"][0][
+            "bucket_export_blobs"]["1"]
+        fs = verify_for_load(ar)
+        assert ids(fs) == ["blob-index"]
+        assert all(f.severity == "warning" for f in fs)
+        assert exit_code(fs) == 1
+
+    def test_manifest_schema_standalone(self):
+        fs = check_manifest_schema("not-a-dict", "t")
+        assert ids(fs) == ["manifest-schema"]
+
+
+class TestTagsPass:
+    def test_engine_capture_tags_are_clean(self):
+        # the convention matrix must accept what the engine itself emits
+        for loop in ("host", "device"):
+            tags = {"decode_loop": loop, "fused_sampling": loop == "device",
+                    "kv_layout": "paged", "kv_block_size": 16, "kv_blocks": 9}
+            assert check_tags(tags, "t") == []
+
+    def test_unknown_key(self):
+        fs = check_tags({"decode_loop": "host", "fused_sampling": False,
+                         "kv_teleport": True}, "t")
+        assert ids(fs) == ["tags-schema"]
+        assert "kv_teleport" in fs[0].message
+
+    def test_bad_value_domains(self):
+        assert ids(check_tags({"decode_loop": "gpu"}, "t")) == ["tags-schema"]
+        assert ids(check_tags({"kv_layout": "ring"}, "t")) == ["tags-schema"]
+        assert ids(check_tags({"kv_block_size": 0}, "t")) == ["tags-schema"]
+        assert ids(check_tags({"kv_blocks": True}, "t")) == ["tags-schema"]
+
+    def test_fused_sampling_cross_field(self):
+        fs = check_tags({"decode_loop": "host", "fused_sampling": True}, "t")
+        assert ids(fs) == ["tags-schema"]
+
+
+# ---------------------------------------------------------------------------
+# pass 3: memory plan
+# ---------------------------------------------------------------------------
+class TestMemoryPlanPass:
+    def test_clean(self):
+        assert check_memory_plan(make_plan().to_manifest(), "t") == []
+        assert check_memory_plan(None, "t") == []
+
+    def _mut(self, i, **kw):
+        m = make_plan().to_manifest()
+        m["allocations"][i] = dict(m["allocations"][i], **kw)
+        return m
+
+    def test_overlap(self):
+        fs = check_memory_plan(self._mut(1, offset=512), "t")
+        assert "memory-plan-overlap" in ids(fs)
+
+    def test_misaligned(self):
+        fs = check_memory_plan(self._mut(2, offset=5200), "t")
+        assert "memory-plan-alignment" in ids(fs)
+
+    def test_gap_is_leak_warning(self):
+        m = make_plan().to_manifest()
+        m["allocations"][2] = dict(m["allocations"][2], offset=512 * 20)
+        m["extent"] = 512 * 21
+        fs = check_memory_plan(m, "t")
+        assert ids(fs) == ["memory-plan-leak"]
+        assert all(f.severity == "warning" for f in fs)
+
+    def test_short_extent(self):
+        m = make_plan().to_manifest()
+        m["extent"] = 8
+        assert ids(check_memory_plan(m, "t")) == ["memory-plan-extent"]
+
+    def test_init_after_capture_window(self):
+        m = make_plan().to_manifest()
+        m["allocations"].append(dict(m["allocations"][0], name="late",
+                                     offset=m["extent"], phase="init"))
+        m["extent"] += 1024
+        fs = check_memory_plan(m, "t")
+        assert "capture-window-order" in ids(fs)
+
+    def test_unknown_scope(self):
+        fs = check_memory_plan(self._mut(1, scope="per_host"), "t")
+        assert "memory-plan-scope" in ids(fs)
+
+
+# ---------------------------------------------------------------------------
+# passes 2/3 joint: rank-delta section
+# ---------------------------------------------------------------------------
+class TestRankDeltaPass:
+    def _man(self):
+        return make_archive().manifest
+
+    def test_clean(self):
+        assert check_rank_delta_section(self._man(), "t") == []
+
+    def test_missing_section_is_warning(self):
+        m = self._man()
+        del m["rank_delta"]
+        fs = check_rank_delta_section(m, "t")
+        assert ids(fs) == ["rank-delta-coverage"]
+        assert all(f.severity == "warning" for f in fs)
+
+    def test_missing_rank(self):
+        m = self._man()
+        m["rank_delta"]["capture_ranks"].pop()
+        fs = check_rank_delta_section(m, "t")
+        assert any(f.pass_id == "rank-delta-coverage"
+                   and f.severity == "error" for f in fs)
+
+    def test_missing_peer_axis(self):
+        m = self._man()
+        del m["rank_delta"]["capture_ranks"][1]["peer_groups"]["model"]
+        fs = check_rank_delta_section(m, "t")
+        assert any("peer table" in f.message for f in fs)
+        assert ids(fs) == ["rank-delta-coverage"]
+
+    def test_wrong_peer_membership(self):
+        m = self._man()
+        m["rank_delta"]["capture_ranks"][0]["peer_groups"]["model"] = [0, 7]
+        fs = check_rank_delta_section(m, "t")
+        assert ids(fs) == ["rank-delta-coverage"]
+
+    def test_wrong_coords(self):
+        m = self._man()
+        m["rank_delta"]["capture_ranks"][1]["coords"] = [5, 5]
+        assert ids(check_rank_delta_section(m, "t")) == \
+            ["rank-delta-coverage"]
+
+    def test_comm_buffer_drift_vs_plan(self):
+        m = self._man()
+        m["rank_delta"]["capture_ranks"][0]["comm_buffers"][0]["size"] += 8
+        fs = check_rank_delta_section(m, "t")
+        assert ids(fs) == ["memory-plan-scope"]
+
+
+# ---------------------------------------------------------------------------
+# strict LOAD wiring (metadata level; the full cycle is in the slow test)
+# ---------------------------------------------------------------------------
+class TestStrictLoadPreflight:
+    def test_verification_error_carries_findings_and_report(self):
+        fs = [Finding("tags-schema", "error", "a", "bad tag")]
+        err = ArchiveVerificationError(fs, report="REP")
+        assert err.findings == fs and err.report == "REP"
+        assert isinstance(err, ValueError)
+        assert "tags-schema" in str(err)
+
+    def test_foundry_load_strict_rejects_bad_tags(self):
+        from repro.core import foundry_load
+        ar = make_archive()
+        ar.manifest["specs"]["decode"]["tags"]["kv_teleport"] = True
+        with pytest.raises(ArchiveVerificationError) as ei:
+            foundry_load(ar, None)
+        assert "tags-schema" in {f.pass_id for f in ei.value.findings}
+        assert ei.value.report.fallback_compiles == 0
+        assert "verify_s" in ei.value.report.phases
+
+    def test_foundry_load_strict_false_skips_preflight(self):
+        from repro.core import foundry_load
+        ar = make_archive()
+        ar.manifest["specs"]["decode"]["tags"]["kv_teleport"] = True
+        # non-strict: pre-flight skipped; the fake exe blob then degrades to
+        # a fallback compile attempt that fails on fake export bytes — which
+        # is exactly the silent-degradation mode strict LOAD exists to stop
+        with pytest.raises(Exception) as ei:
+            foundry_load(ar, None, strict=False)
+        assert not isinstance(ei.value, ArchiveVerificationError)
+
+
+# ---------------------------------------------------------------------------
+# pass 4: depot fsck (+ the atomic index.json regression)
+# ---------------------------------------------------------------------------
+class TestDepotFsck:
+    def _depot(self, tmp_path):
+        depot = TemplateDepot(str(tmp_path / "depot"))
+        depot.put_archive("m1", make_archive())
+        ar2 = make_archive()
+        ar2.add_blob(b"unique-to-m2" * 30)
+        depot.put_archive("m2", ar2)
+        return depot
+
+    def test_clean_depot(self, tmp_path):
+        depot = self._depot(tmp_path)
+        fs, acts = check_depot(depot.root)
+        assert fs == [] and acts["gc_removed_blobs"] == 0
+        fs, _ = depot.fsck(deep=True)  # deep re-hash also clean
+        assert fs == []
+
+    def test_torn_index_write(self, tmp_path):
+        depot = self._depot(tmp_path)
+        with open(os.path.join(depot.root, "index.json"), "w") as f:
+            f.write('{"version": 1, "blobs": {"tru')  # torn mid-write
+        fs, _ = check_depot(depot.root)
+        assert any(f.pass_id == "depot-index" and f.severity == "error"
+                   and "torn" in f.message for f in fs)
+
+    def test_flush_is_atomic_and_tmp_free(self, tmp_path):
+        depot = self._depot(tmp_path)
+        for _ in range(5):
+            depot.register_ref("ref-a", [])
+            depot.release_ref("ref-a")
+        names = os.listdir(depot.root)
+        assert not [n for n in names if ".tmp" in n], names
+        with open(os.path.join(depot.root, "index.json")) as f:
+            assert json.load(f)["version"] == 1
+        assert check_depot(depot.root)[0] == []
+
+    def test_missing_blob_file(self, tmp_path):
+        depot = self._depot(tmp_path)
+        victim = sorted(os.listdir(depot.blob_dir))[0]
+        os.remove(os.path.join(depot.blob_dir, victim))
+        fs, _ = check_depot(depot.root)
+        assert "depot-missing-blob" in ids(fs)
+
+    def test_blob_size_mismatch(self, tmp_path):
+        depot = self._depot(tmp_path)
+        victim = sorted(os.listdir(depot.blob_dir))[0]
+        with open(os.path.join(depot.blob_dir, victim), "ab") as f:
+            f.write(b"xx")
+        fs, _ = check_depot(depot.root)
+        assert "depot-blob-size" in ids(fs)
+
+    def test_orphan_blob_and_gc(self, tmp_path):
+        depot = self._depot(tmp_path)
+        orphan = os.path.join(depot.blob_dir, "deadbeef" * 4)
+        open(orphan, "wb").write(b"crash residue")
+        fs, _ = check_depot(depot.root)
+        assert "depot-orphan-blob" in ids(fs)
+        assert exit_code(fs) == 1  # warning only
+        fs, acts = check_depot(depot.root, gc_orphans=True)
+        assert acts["gc_removed_blobs"] == 1
+        assert not os.path.exists(orphan)
+        assert check_depot(depot.root)[0] == []
+
+    def test_dangling_ref(self, tmp_path):
+        depot = self._depot(tmp_path)
+        depot.register_ref("/nowhere/stale.fndry",
+                           list(depot._index["blobs"]))
+        fs, _ = check_depot(depot.root)
+        assert "depot-dangling-ref" in ids(fs)
+        depot.release_ref("/nowhere/stale.fndry")
+        assert check_depot(depot.root)[0] == []
+
+    def test_unheld_reference_refcount(self, tmp_path):
+        depot = self._depot(tmp_path)
+        entry = depot._index["archives"]["m1"]
+        me = os.path.abspath(os.path.join(depot.root, entry["file"]))
+        depot.release_ref(me)  # archive alive, refs dropped: gc would eat it
+        fs, _ = check_depot(depot.root)
+        assert "depot-refcount" in ids(fs)
+
+    def test_orphan_manifest(self, tmp_path):
+        depot = self._depot(tmp_path)
+        open(os.path.join(depot.manifest_dir, "ghost.fndry"), "wb").write(
+            make_archive().to_bytes())
+        fs, _ = check_depot(depot.root)
+        assert "depot-orphan-manifest" in ids(fs)
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+class TestCLI:
+    def test_clean_archive_exit_0(self, tmp_path):
+        path = str(tmp_path / "a.fndry")
+        make_archive().save(path)
+        assert check_main([path, "--no-ir", "--no-deep"]) == 0
+
+    def test_warning_exit_1(self, tmp_path):
+        ar = make_archive()
+        del ar.manifest["rank_delta"]
+        path = str(tmp_path / "a.fndry")
+        ar.save(path)
+        assert check_main([path, "--no-ir", "--no-deep"]) == 1
+
+    def test_error_exit_2_and_json(self, tmp_path, capsys):
+        ar = make_archive()
+        ar.manifest["specs"]["decode"]["tags"]["bogus"] = 1
+        path = str(tmp_path / "a.fndry")
+        ar.save(path)
+        assert check_main([path, "--no-ir", "--no-deep", "--json"]) == 2
+        doc = json.loads(capsys.readouterr().out)
+        assert doc["summary"]["error"] >= 1
+        assert {f["pass_id"] for f in doc["findings"]} == {"tags-schema"}
+
+    def test_missing_target_exit_3(self):
+        assert check_main(["/no/such/file.fndry"]) == 3
+
+    def test_bad_usage_exit_3(self):
+        with pytest.raises(SystemExit) as ei:
+            check_main([])
+        assert ei.value.code == 3
+
+    def test_depot_target_and_thin_without_depot(self, tmp_path):
+        depot = TemplateDepot(str(tmp_path / "depot"))
+        depot.put_archive("m1", make_archive())
+        assert check_main([depot.root]) == 0
+        thin = os.path.join(depot.manifest_dir, "m1.fndry")
+        # thin archive without --depot: warning (blobs unverifiable)
+        assert check_main([thin, "--no-ir"]) == 1
+        # with --depot: fully verifiable, clean
+        assert check_main([thin, "--no-ir", "--depot", depot.root]) == 0
+
+    def test_module_entrypoint_subprocess(self, tmp_path):
+        path = str(tmp_path / "a.fndry")
+        make_archive().save(path)
+        env = dict(os.environ,
+                   PYTHONPATH=SRC + os.pathsep + os.environ.get(
+                       "PYTHONPATH", ""))
+        r = subprocess.run(
+            [sys.executable, "-m", "repro.analysis.check", path,
+             "--no-ir", "--no-deep"],
+            capture_output=True, text=True, env=env, timeout=120)
+        assert r.returncode == 0, r.stdout + r.stderr
+        assert "0 error(s)" in r.stdout
+
+
+# ---------------------------------------------------------------------------
+# the real cycle: SAVE -> verify clean -> corrupt -> named pass + strict
+# LOAD raises with fallback_compiles == 0 (subprocess: capture topology)
+# ---------------------------------------------------------------------------
+CORRUPTION_SCRIPT = r"""
+import struct
+import jax, jax.numpy as jnp
+from repro.configs.registry import get_arch
+from repro.core import Archive, CaptureSpec, MemoryPlan, foundry_save, foundry_load
+from repro.core.archive import MAGIC2
+from repro.launch.mesh import ShardCtx, make_mesh
+from repro.models.model import Model
+from repro.analysis.checker import (ArchiveVerificationError,
+                                    check_archive_file, check_container_bytes,
+                                    verify_for_load)
+
+mesh = make_mesh((2,), ("model",))
+ctx = ShardCtx(mesh=mesh)
+m = Model(get_arch("smollm-360m").reduced(), ctx)
+S = 32
+
+def make_args(b):
+    return (m.param_specs(), m.cache_specs(b, S),
+            jax.ShapeDtypeStruct((b,), jnp.int32,
+                                 sharding=ctx.sharding(("batch",), (b,))))
+
+plan = MemoryPlan()
+plan.alloc("params", 4096)
+plan.alloc("kv", 8192, scope="per_rank")
+plan.set_phase("capture")
+plan.alloc("tmp", 64)
+spec = CaptureSpec("decode", lambda p, c, t: m.decode_step(p, c, t),
+                   make_args, [1, 2], donate_argnums=(1,),
+                   tags={"decode_loop": "host", "fused_sampling": False,
+                         "kv_layout": "slot"})
+with mesh:
+    ar, _ = foundry_save([spec], mesh, memory_plan=plan)
+ar.save("/tmp/checker_e2e.fndry")
+raw = open("/tmp/checker_e2e.fndry", "rb").read()
+
+# clean: full pass set (deep + IR) finds nothing
+fs = check_archive_file("/tmp/checker_e2e.fndry", deep=True, ir=True)
+assert fs == [], [f.render() for f in fs]
+print("CLEAN_OK")
+
+def strict_raises(archive, want_pass):
+    try:
+        with mesh:
+            foundry_load(archive, mesh)
+    except ArchiveVerificationError as e:
+        assert e.report.fallback_compiles == 0, "fallback attempted"
+        assert want_pass in {f.pass_id for f in e.findings}, e.findings
+        return
+    raise AssertionError(f"strict LOAD did not raise for {want_pass}")
+
+# 1. truncated v2 header -> container-structure
+open("/tmp/c1.fndry", "wb").write(raw[:12])
+fs = check_archive_file("/tmp/c1.fndry")
+assert {f.pass_id for f in fs} == {"container-structure"}
+print("TRUNC_OK")
+
+# 2. bit-flipped template executable blob -> blob-integrity (deep pass AND
+#    the strict fetch stage)
+_, info = check_container_bytes(raw, "t")
+exe_hash = ar.manifest["specs"]["decode"]["groups"][0]["executable_blob"]
+off, comp_len, _r = info.index[exe_hash]
+bad = bytearray(raw)
+bad[info.blob_base + off + comp_len // 2] ^= 0xFF
+open("/tmp/c2.fndry", "wb").write(bytes(bad))
+fs = check_archive_file("/tmp/c2.fndry", ir=False)
+assert "blob-integrity" in {f.pass_id for f in fs}
+strict_raises(Archive.load("/tmp/c2.fndry"), "blob-integrity")
+print("BITFLIP_OK")
+
+# 3. unknown tags key -> tags-schema
+a3 = Archive.load("/tmp/checker_e2e.fndry")
+a3.manifest["specs"]["decode"]["tags"]["kv_teleport"] = True
+assert {f.pass_id for f in verify_for_load(a3)} == {"tags-schema"}
+strict_raises(a3, "tags-schema")
+print("TAGS_OK")
+
+# 4. RankDelta missing peer entry -> rank-delta-coverage
+a4 = Archive.load("/tmp/checker_e2e.fndry")
+a4.manifest["rank_delta"]["capture_ranks"][1]["peer_groups"].pop("model")
+assert {f.pass_id for f in verify_for_load(a4)} == {"rank-delta-coverage"}
+strict_raises(a4, "rank-delta-coverage")
+print("RANKDELTA_OK")
+
+# the clean archive still strict-LOADs with zero fallbacks + verify_s timed
+with mesh:
+    _, rep, _ = foundry_load(Archive.load("/tmp/checker_e2e.fndry"), mesh)
+assert rep.fallback_compiles == 0
+assert 0 < rep.phases["verify_s"] < rep.critical_path_s
+from repro.core import wait_for_background
+wait_for_background(rep)
+print("STRICT_CLEAN_OK")
+"""
+
+
+@pytest.mark.slow
+def test_corruption_classes_end_to_end():
+    from repro.core.collective_stub import run_in_capture_process
+    r = run_in_capture_process(CORRUPTION_SCRIPT, 2, timeout=900,
+                               pythonpath=SRC)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    for marker in ("CLEAN_OK", "TRUNC_OK", "BITFLIP_OK", "TAGS_OK",
+                   "RANKDELTA_OK", "STRICT_CLEAN_OK"):
+        assert marker in r.stdout
