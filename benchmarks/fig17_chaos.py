@@ -1,0 +1,211 @@
+"""[Fig 17] Supervised fleet under chaos: crash recovery with KV salvage.
+
+A two-replica fleet serves steady traffic while a chaos schedule kills
+decode steps out from under it (``serving/faults.py``: one-shot
+``engine.decode_step`` faults targeted at specific replicas via their
+``fault_tag``). Three crashes minimum, one of them landing in the middle of
+a live TP1->TP2 reshard's DUAL window. The supervisor
+(``Fleet._on_replica_crash``) must contain every one: the crashed replica's
+in-flight KV rows migrate into survivors' pools (same ``export_inflight`` /
+``adopt_inflight`` path the reshard cutover uses), overflow requeues from
+kept prefixes, and a replacement respawns from the shared archive at
+warm-LOAD speed.
+
+Hard assertions, not just prints (the ISSUE acceptance criteria):
+
+  * zero lost requests — every submitted request resolves DONE, none FAILED;
+  * token streams byte-identical to a never-crashed vanilla engine,
+    including requests whose KV rows were salvaged mid-decode;
+  * the fleet returns to its target replica count within a bounded number
+    of ticks after each crash (recovery-to-full-capacity);
+  * ``fallback_compiles == 0`` — the happy respawn path is a warm foundry
+    LOAD, never a recompile;
+  * the mid-reshard crash neither aborts the switch nor drops requests.
+
+Needs 2 placeholder ranks for the TP2 leg, so everything runs in a
+subprocess with ``--xla_force_host_platform_device_count`` (same harness as
+fig15; core/collective_stub.py).
+
+CLI: ``python -m benchmarks.fig17_chaos [--quick]``. ``--quick`` is the CI
+smoke mode (wired into the test-fast job): fewer requests, same hard
+assertions — a regression exits nonzero.
+"""
+from __future__ import annotations
+
+_INNER = r"""
+import itertools
+import time
+
+import jax
+from repro.configs.registry import get_arch
+from repro.core import Archive
+from repro.launch.mesh import ShardCtx, make_capture_mesh, make_tp_mesh
+from repro.models.model import Model
+from repro.serving.engine import ServingEngine
+from repro.serving.faults import FaultPlan, FaultSpec, deactivate_all
+from repro.serving.fleet import AutoscalePolicy, Fleet
+
+QUICK = __QUICK__
+CFG = get_arch("smollm-360m").reduced()
+PROMPTS = [[5, 9, 2], [11, 3], [7, 7, 7, 1], [2], [13, 4, 9]]
+N_NEW = 5 if QUICK else 8
+N_REQS = 10 if QUICK else 24
+MAX_INFLIGHT = 6                 # arrival gate: keeps salvage overflow small
+RECOVERY_TICK_BUDGET = 8000      # ticks allowed to get back to full capacity
+POLICY = dict(min_replicas=2, max_replicas=2,
+              target_inflight_per_replica=64,
+              max_crashes_in_window=10, crash_window_s=600.0)
+
+def build(mesh):
+    eng = ServingEngine(Model(CFG, ShardCtx(mesh=mesh)), max_batch=4,
+                        max_seq=32, bucket_mode="pow2")
+    eng.load_weights(rng=jax.random.PRNGKey(0))
+    return eng
+
+# offline SAVE: one single-device capture serves both topologies
+mesh_cap = make_capture_mesh()
+with mesh_cap:
+    archive_bytes = build(mesh_cap).save_archive()[0].to_bytes()
+
+# reference token streams from a never-crashed vanilla engine
+ref_eng = build(None)
+ref_eng.cold_start_vanilla()
+reference = {}
+for p in PROMPTS:
+    r = ref_eng.submit(p, N_NEW)
+    ref_eng.run_until_drained()
+    reference[tuple(p)] = tuple(r.generated)
+
+jax.clear_caches()
+ar = Archive.from_bytes(archive_bytes, lazy=True)
+tp1, tp2 = make_tp_mesh(1), make_tp_mesh(2)
+fleet = Fleet(factory_for_mesh=build, mode="foundry", archive=ar,
+              policy=AutoscalePolicy(**POLICY), mesh=tp1)
+plan = FaultPlan().activate()
+
+reqs = []
+cycle = itertools.cycle(PROMPTS)
+# phase the arrivals: hold half the trace back for the reshard window so
+# the mid-reshard kill lands on a generation with real in-flight work
+N_PRE = max(6, N_REQS // 2)
+cap = [N_PRE]
+
+def pump():
+    if len(reqs) < cap[0] and fleet.inflight() < MAX_INFLIGHT:
+        reqs.append(fleet.submit(next(cycle), N_NEW))
+
+def arm_kill(exclude=()):
+    # kill the busiest READY replica not in `exclude`: the salvage then has
+    # real in-flight KV rows to migrate, not an idle scheduler
+    cands = [r for r in fleet._ready() if r.stats.replica_id not in exclude]
+    tgt = max(cands, key=lambda r: r.load)
+    rid = tgt.stats.replica_id
+    plan.add(FaultSpec(site="engine.decode_step", tag=f"replica{rid}",
+                       times=1, message=f"chaos kill replica {rid}"))
+    return rid
+
+def tick_until(cond, what, budget=RECOVERY_TICK_BUDGET):
+    for k in range(budget):
+        if cond():
+            return k
+        pump()
+        if fleet.tick() == 0:
+            time.sleep(0.001)
+    raise AssertionError(f"{what}: not reached in {budget} ticks")
+
+# -- warm up to full capacity, put traffic in flight ---------------------
+fleet.start()
+tick_until(lambda: len(fleet._ready()) >= 2, "initial provision")
+tick_until(lambda: fleet.inflight() > 0 or len(reqs) >= cap[0], "traffic")
+
+recovery_ticks = []
+for kill in range(2):
+    # -- steady-state crash: salvage + respawn back to the floor ---------
+    arm_kill()
+    c0 = fleet.crashes
+    tick_until(lambda: fleet.crashes > c0, f"crash #{kill + 1}")
+    t = tick_until(lambda: len(fleet._ready()) >= 2,
+                   f"recovery #{kill + 1} to full capacity")
+    recovery_ticks.append(t)
+
+# -- crash #3: mid-reshard, against the old generation -------------------
+c0 = fleet.crashes
+cap[0] = N_REQS  # release the held-back arrivals into the switch window
+rep = fleet.reshard(tp2)
+armed = mid_reshard_crash = False
+while fleet._reshard is not None:
+    old_ready = [r for r in fleet._reshard.old
+                 if r in fleet._ready()]
+    if not armed and len(old_ready) >= 2 and any(r.load for r in old_ready):
+        arm_kill(exclude={r.stats.replica_id for r in fleet._reshard.new})
+        armed = True
+    if armed and fleet.crashes > c0:
+        mid_reshard_crash = True
+    pump()
+    if fleet.tick() == 0:
+        time.sleep(0.001)
+assert armed, "chaos schedule never armed the mid-reshard kill"
+assert mid_reshard_crash, "mid-reshard kill never fired inside the DUAL window"
+assert rep.aborted is None, f"mid-reshard crash aborted the switch: {rep.aborted}"
+
+# -- drain the remaining traffic on the new topology ---------------------
+tick_until(lambda: len(reqs) >= N_REQS and fleet._unresolved() == 0, "drain")
+fleet.drain_background()
+frep = fleet.report()
+s = frep.summary()
+
+# -- hard invariants (the ISSUE acceptance criteria) ---------------------
+assert len(reqs) == N_REQS
+assert frep.n_failed == 0 and frep.n_done == N_REQS, \
+    f"lost requests: {frep.n_failed} failed, {frep.n_done}/{N_REQS} done"
+for q in reqs:
+    assert tuple(q.generated) == reference[tuple(q.prompt)], \
+        f"req {q.req_id} tokens diverged across crash recovery"
+assert frep.crashes >= 3, f"chaos schedule only landed {frep.crashes} crashes"
+assert frep.respawns >= 2, f"supervisor respawned only {frep.respawns}"
+assert frep.salvaged_requests + frep.crash_requeued_requests > 0, \
+    "no in-flight requests were recovered from any crash"
+assert s["fallback_compiles"] == 0, "respawn path compiled instead of LOADing"
+assert s["background_errors"] == 0, "background failures"
+assert s["shed_requests"] == 0, "load shed despite available respawn budget"
+assert len(fleet._ready()) >= POLICY["min_replicas"], \
+    "fleet did not return to full capacity"
+deactivate_all()
+
+print(f"ROW,fig17.crashes,{frep.crashes},"
+      f"salvaged={frep.salvaged_requests};requeued={frep.crash_requeued_requests}")
+print(f"ROW,fig17.respawns,{frep.respawns},warm_load_respawn")
+print(f"ROW,fig17.recovery_ticks_max,{max(recovery_ticks)},"
+      f"budget={RECOVERY_TICK_BUDGET}")
+print(f"ROW,fig17.served,{frep.n_done},zero_lost_identity_asserted")
+print(f"ROW,fig17.mid_reshard_crash,1,"
+      f"migrated={rep.migrated_requests};requeued={rep.requeued_requests}")
+print(f"ROW,fig17.fallback_compiles,{s['fallback_compiles']},asserted_zero")
+"""
+
+
+def run(quick: bool = False):
+    from repro.core.collective_stub import run_in_capture_process
+    inner = _INNER.replace("__QUICK__", repr(bool(quick)))
+    r = run_in_capture_process(inner, 2, timeout=1800)
+    if r.returncode != 0:
+        raise RuntimeError(f"fig17 subprocess failed:\n{r.stdout}\n{r.stderr}")
+    rows = []
+    for line in r.stdout.splitlines():
+        if line.startswith("ROW,"):
+            _, name, us, derived = line.split(",", 3)
+            rows.append((name, float(us), derived))
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+
+    from benchmarks.common import emit
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: fewer requests, same zero-lost / "
+                         "identity / bounded-recovery / zero-compile "
+                         "assertions")
+    args = ap.parse_args()
+    emit(run(quick=args.quick), figure="fig17_chaos")

@@ -16,8 +16,8 @@ import traceback
 MODULES = [
     "fig7_coldstart", "fig8_breakdown", "fig9_tpot", "fig10_pergraph",
     "fig11_templates", "fig12_rank_stamp", "fig13_autoscale",
-    "fig14_modelzoo", "fig15_reshard", "fig16_prefix_cache", "tab1_storage",
-    "tab2_contention",
+    "fig14_modelzoo", "fig15_reshard", "fig16_prefix_cache", "fig17_chaos",
+    "tab1_storage", "tab2_contention",
 ]
 
 

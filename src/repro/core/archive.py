@@ -35,11 +35,14 @@ import json
 import os
 import struct
 import threading
+import time
 import zlib
 from dataclasses import dataclass, field
 from typing import Any, Dict, Iterator, Optional
 
 import msgpack
+
+from repro.serving.faults import fault_point
 
 try:
     import zstandard
@@ -49,6 +52,24 @@ except ImportError:  # archives remain readable/writable via stdlib zlib
 MAGIC = b"FNDRYJX1"
 MAGIC2 = b"FNDRYJX2"
 _ZSTD_FRAME_MAGIC = b"\x28\xb5\x2f\xfd"
+
+
+def io_retries(fn, what: str, *, attempts: int = 3,
+               base_delay_s: float = 0.005, retry_on=(OSError,)):
+    """Bounded exponential-backoff retry for transient IO (flaky NFS mount,
+    depot blob mid-replication, torn read). Retries ``fn()`` on ``retry_on``
+    up to ``attempts`` total tries with 1x/2x/4x... ``base_delay_s`` sleeps
+    between them, then re-raises the last failure — bounded, so a genuinely
+    dead backing store still fails fast enough for the caller's own
+    degradation (strict-LOAD refusal, replica FAILED) to engage."""
+    for k in range(attempts):
+        try:
+            return fn()
+        except retry_on:
+            if k + 1 >= attempts:
+                raise
+            time.sleep(base_delay_s * (2 ** k))
+    raise AssertionError(f"unreachable: io_retries({what})")
 
 
 def _compress(payload: bytes, level: int) -> bytes:
@@ -155,16 +176,31 @@ class BlobStore:
                 event.wait()
                 continue  # cached now — or the fetcher failed and we retry
             try:
-                if hasattr(self._source, "read_hash"):
-                    # content-addressed backing (core/depot.py): the hash IS
-                    # the address; (offset, comp_len) are bookkeeping only
-                    comp = self._source.read_hash(h)
-                else:
-                    offset, comp_len, _ = entry
-                    comp = self._source.read(offset, comp_len)
-                data = _decompress(comp)
-                if content_hash(data) != h:
-                    raise ValueError(f"archive blob {h} corrupt")
+                def _fetch():
+                    if hasattr(self._source, "read_hash"):
+                        # content-addressed backing (core/depot.py): the hash
+                        # IS the address; (offset, comp_len) are bookkeeping
+                        comp = self._source.read_hash(h)
+                    else:
+                        offset, comp_len, _ = entry
+                        comp = self._source.read(offset, comp_len)
+                    comp = fault_point("depot.fetch", payload=comp, tag=h)
+                    try:
+                        data = _decompress(comp)
+                    except ValueError:
+                        raise  # zstd-missing diagnostic: not a torn read
+                    except Exception as e:
+                        raise ValueError(
+                            f"archive blob {h} corrupt "
+                            f"(undecompressable: {type(e).__name__})") from e
+                    if content_hash(data) != h:
+                        raise ValueError(f"archive blob {h} corrupt")
+                    return data
+                # transient IO (OSError) and torn/bit-rotted reads
+                # (ValueError: the re-read may verify) retry with bounded
+                # backoff; a persistently corrupt blob still fails loudly
+                data = io_retries(_fetch, f"blob {h}",
+                                  retry_on=(OSError, ValueError))
                 with self._lock:
                     self._data[h] = data
                     self._verified.add(h)
@@ -357,7 +393,12 @@ class Archive:
         equivalent) depot, or opening fails. The returned Archive's blob
         store IS the depot store, so blobs shared across models are fetched
         at most once depot-wide."""
-        with open(path, "rb") as f:
+        # archive open is the first IO of every cold start: transient
+        # failures (archive still replicating onto this host) retry with
+        # bounded backoff before the replica is declared FAILED
+        f = io_retries(lambda: open(path, "rb"),  # noqa: SIM115
+                       f"archive {path}")
+        with f:
             magic = f.read(len(MAGIC2))
             if magic == MAGIC2:
                 (hlen,) = struct.unpack("<Q", f.read(8))

@@ -39,7 +39,8 @@ import os
 import threading
 from typing import Any, Callable, Dict, List
 
-from repro.core.archive import Archive, BlobStore, _compress, content_hash
+from repro.core.archive import (Archive, BlobStore, _compress, content_hash,
+                                io_retries)
 
 _INDEX_VERSION = 1
 
@@ -52,8 +53,13 @@ class _DepotSource:
         self._dir = blob_dir
 
     def read_hash(self, h: str) -> bytes:
-        with open(os.path.join(self._dir, h), "rb") as f:
-            return f.read()
+        # the depot's network-storage analogue: a blob mid-replication (or a
+        # flaky mount) reads again with bounded backoff before the failure
+        # surfaces to the (also retrying) BlobStore fetch
+        def _read():
+            with open(os.path.join(self._dir, h), "rb") as f:
+                return f.read()
+        return io_retries(_read, f"depot blob {h}")
 
 
 class TemplateDepot:

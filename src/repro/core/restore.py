@@ -70,6 +70,7 @@ from repro.core.memory_plan import MemoryPlan
 from repro.core.rank_stamp import (ReshardingExecutable, deployment_deltas,
                                    stamp_template)
 from repro.core.templates import ProgramSet, TopologyGroup
+from repro.serving.faults import fault_point
 
 
 @dataclass
@@ -139,6 +140,7 @@ class LoadReport:
 
 def _deserialize_template(blob: bytes):
     from jax.experimental import serialize_executable as se
+    fault_point("archive.deserialize")
     payload = pickle.loads(blob)
     if isinstance(payload, tuple):
         return se.deserialize_and_load(*payload)
@@ -397,6 +399,7 @@ def foundry_load(archive: Archive, mesh, *,
         t0 = time.perf_counter()
         for job in pipe:
             g, exe = job.group, job.exe
+            fault_point("restore.install", tag=g.key)
             if g.executable_blob:
                 if (reuse_templates and job.deserialize and exe is not None
                         and g.executable_blob not in tcache):

@@ -69,7 +69,22 @@ def run_fleet(args):
                   policy=AutoscalePolicy(min_replicas=args.min_replicas,
                                          max_replicas=args.max_replicas),
                   verbose=True)
-    fleet.run_trace(trace, seed=0)
+    if args.chaos > 0:
+        # supervised-fleet demo: kill N decode steps spread over the trace
+        # and watch the fleet salvage + respawn (serving/faults.py)
+        from repro.serving.faults import FaultPlan, FaultSpec
+        span = max(1, (len(trace) * 2) // (args.chaos + 1))
+        plan = FaultPlan(*[
+            FaultSpec(site="engine.decode_step", nth=span * (k + 1), times=1,
+                      message=f"chaos kill #{k + 1}")
+            for k in range(args.chaos)])
+        plan.activate()
+        print(f"[fleet] chaos: {args.chaos} decode-step faults armed")
+    try:
+        fleet.run_trace(trace, seed=0)
+    finally:
+        if args.chaos > 0:
+            plan.deactivate()
     fleet.drain_background()  # then re-report to pick up background_errors
     rep = fleet.report()
     print(json.dumps(rep.summary(), indent=1, default=str))
@@ -136,6 +151,10 @@ def main():
     ap.add_argument("--max-replicas", type=int, default=4)
     ap.add_argument("--trace", default="10:25:30:1:6",
                     help="warm:spike:cool:base_rate:spike_rate ticks")
+    ap.add_argument("--chaos", type=int, default=0,
+                    help="with --fleet: inject N decode-step crashes spread "
+                         "over the trace (supervision demo; replicas are "
+                         "salvaged and respawned from the shared archive)")
     ap.add_argument("--models", default=None,
                     help="comma-separated model names: multi-model gateway "
                          "with per-model scale-to-zero (needs --depot)")

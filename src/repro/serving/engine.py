@@ -53,6 +53,7 @@ from repro.core.templates import TopologyGroup
 from repro.launch.mesh import ShardCtx
 from repro.models.model import Model
 from repro.serving.blockpool import PagedKVCachePool
+from repro.serving.faults import fault_point
 from repro.serving.kvcache import KVCachePool, RowBundle
 from repro.serving.scheduler import ReqState, Request, Scheduler
 
@@ -180,6 +181,10 @@ class ServingEngine:
         # transfer accounting; tests cross-check it with patched transports)
         self.transfer_stats = {"h2d_bytes": 0, "d2h_bytes": 0,
                                "token_rebuilds": 0}
+        # fault-injection identity (serving/faults.py): the owning fleet
+        # stamps this with the replica id so chaos plans can target one
+        # replica's decode steps / KV imports; None outside a fleet
+        self.fault_tag: Optional[str] = None
 
     def _auto_kv_layout(self) -> str:
         if (self.cfg.family in ("dense", "vlm", "moe")
@@ -617,6 +622,10 @@ class ServingEngine:
     def step(self) -> int:
         """One engine iteration: admit + decode one token for all running.
         Returns number of active requests served."""
+        # injected BEFORE any scheduler/pool mutation: a crash here leaves
+        # the engine coherent, so the fleet's salvage path (export_inflight)
+        # can migrate the in-flight KV rows instead of re-prefilling
+        fault_point("engine.decode_step", tag=self.fault_tag)
         sched, pool = self.scheduler, self.pool
         self._admit(self.max_batch - pool.n_active)
         if self.kv_layout == "paged":
@@ -736,6 +745,10 @@ class ServingEngine:
         n_fit = min(len(reqs), self.max_batch - self.pool.n_active)
         if n_fit <= 0:
             return 0
+        # before the pool import touches anything: a poisoned import raises
+        # with the target pool unmutated, so the caller (cutover/salvage)
+        # can exclude this engine and route the requests elsewhere
+        fault_point("kv.import_rows", tag=self.fault_tag)
         take = reqs[:n_fit]
         slots = self.pool.import_rows(bundle.select(range(n_fit)),
                                       [r.req_id for r in take])

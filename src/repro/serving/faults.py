@@ -1,0 +1,208 @@
+"""Deterministic fault injection for the serving plane.
+
+The chaos literature the fleet's supervision answers (HydraServe, ParaServe,
+"Breaking the Ice" — PAPERS.md) treats worker death as routine; to test that
+without flaky monkeypatching, production code calls ``fault_point("site")``
+at a handful of REGISTERED sites and tests/benchmarks activate a
+``FaultPlan`` describing what should go wrong there. With no plan active the
+hook is one global read and a return — zero-cost on the serving fast path.
+
+Sites (the registry ``FAULT_SITES`` is the source of truth; a lint-guard
+test asserts the code's ``fault_point`` calls and this table stay in sync):
+
+    depot.fetch         blob fetch in core/archive.py BlobStore (covers file,
+                        bytes and depot-backed sources); payload = comp bytes
+    archive.deserialize template executable deserialization (core/restore.py)
+    restore.install     per-group install step of foundry_load
+    engine.decode_step  top of ServingEngine.step (tag = replica fault_tag)
+    kv.import_rows      ServingEngine.adopt_inflight before the pool import
+    reshard.cutover     top of Fleet._cutover, before any mutation
+
+Fault kinds:
+
+    raise    raise ``spec.exc(message)`` (default ``InjectedFault``; use
+             ``InjectedIOError`` to exercise the OSError retry paths)
+    corrupt  flip bytes of the site's payload (sites without a payload fall
+             back to raising — there is nothing to corrupt)
+    hang     sleep ``hang_s`` then continue; the call-site's deadline
+             (``AutoscalePolicy.provision_deadline_s``, reshard
+             ``wait_timeout_s``) is what turns a hang into a FAILED replica
+
+Triggers (evaluated per matching call, under the plan lock, so counts are
+deterministic even with concurrent provisioning threads):
+
+    nth      fire on the nth matching call (1-based)
+    tag      only calls carrying this tag (e.g. ``replica3``) match
+    p/seed   seeded per-call probability (``random.Random(seed)``)
+    times    stop firing after this many hits (None = unlimited)
+
+Plans are process-global but explicitly scoped: ``with fault_plan(plan):``
+or ``plan.activate()`` / ``deactivate_all()``. Nothing in this module
+imports the rest of the package, so core/ and serving/ can both call
+``fault_point`` without import cycles.
+"""
+from __future__ import annotations
+
+import random
+import threading
+import time
+from contextlib import contextmanager
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+FAULT_SITES: Dict[str, str] = {
+    "depot.fetch": "blob fetch from the archive/depot backing store",
+    "archive.deserialize": "template executable deserialization",
+    "restore.install": "per-group template install during foundry_load",
+    "engine.decode_step": "one serving decode step",
+    "kv.import_rows": "KV row import during adopt_inflight",
+    "reshard.cutover": "fleet reshard cutover",
+}
+
+
+class InjectedFault(RuntimeError):
+    """Raised by a ``kind='raise'`` fault (and by ``corrupt`` at a site
+    with no payload)."""
+
+
+class InjectedIOError(InjectedFault, OSError):
+    """An injected fault that IS an OSError: exercises the bounded
+    exponential-backoff retry paths (core/archive.py ``io_retries``)."""
+
+
+@dataclass
+class FaultSpec:
+    """One 'what goes wrong where' entry of a FaultPlan (module docstring)."""
+    site: str
+    kind: str = "raise"            # "raise" | "corrupt" | "hang"
+    nth: Optional[int] = None      # fire on the nth matching call (1-based)
+    tag: Optional[str] = None      # only calls with this tag match (None=any)
+    p: float = 0.0                 # seeded per-call probability (nth=None)
+    seed: int = 0
+    times: Optional[int] = 1       # max firings; None = unlimited
+    hang_s: float = 0.05
+    message: str = "injected fault"
+    exc: type = InjectedFault
+    # runtime counters (owned by the plan lock)
+    calls: int = 0
+    fired: int = 0
+    _rng: Optional[random.Random] = field(default=None, repr=False)
+
+    def __post_init__(self):
+        if self.site not in FAULT_SITES:
+            raise ValueError(f"unknown fault site {self.site!r} "
+                             f"(registered: {sorted(FAULT_SITES)})")
+        if self.kind not in ("raise", "corrupt", "hang"):
+            raise ValueError(f"unknown fault kind {self.kind!r}")
+
+    def _should_fire(self) -> bool:
+        """Trigger decision for one matching call (plan lock held)."""
+        self.calls += 1
+        if self.times is not None and self.fired >= self.times:
+            return False
+        if self.nth is not None:
+            return self.calls == self.nth
+        if self.p > 0.0:
+            if self._rng is None:
+                self._rng = random.Random(self.seed)
+            return self._rng.random() < self.p
+        return True  # no trigger spec: every matching call (bounded by times)
+
+
+def _corrupt_bytes(payload: bytes) -> bytes:
+    """Flip the leading bytes: breaks codec sniffing / content hashes while
+    keeping the length (a torn or bit-rotted read, not a truncation)."""
+    head = bytes(b ^ 0xFF for b in payload[:64])
+    return head + payload[64:]
+
+
+class FaultPlan:
+    """A set of FaultSpecs plus firing accounting. Thread-safe: trigger
+    evaluation runs under one lock so nth-call counting is deterministic
+    across provisioning threads."""
+
+    def __init__(self, *specs: FaultSpec):
+        self.specs: List[FaultSpec] = list(specs)
+        self._lock = threading.Lock()
+
+    def add(self, spec: FaultSpec) -> FaultSpec:
+        """Arm another spec (chaos schedules add faults mid-run)."""
+        with self._lock:
+            self.specs.append(spec)
+        return spec
+
+    def fired(self, site: Optional[str] = None) -> int:
+        with self._lock:
+            return sum(s.fired for s in self.specs
+                       if site is None or s.site == site)
+
+    def calls(self, site: Optional[str] = None) -> int:
+        with self._lock:
+            return sum(s.calls for s in self.specs
+                       if site is None or s.site == site)
+
+    # -- hook plumbing ---------------------------------------------------
+    def _hit(self, site: str, payload, tag):
+        fired = None
+        with self._lock:
+            for spec in self.specs:
+                if spec.site != site:
+                    continue
+                if spec.tag is not None and spec.tag != tag:
+                    continue
+                if spec._should_fire():
+                    spec.fired += 1
+                    fired = spec
+                    break
+        if fired is None:
+            return payload
+        if fired.kind == "hang":
+            time.sleep(fired.hang_s)
+            return payload
+        if fired.kind == "corrupt" and isinstance(payload, (bytes, bytearray)):
+            return _corrupt_bytes(bytes(payload))
+        raise fired.exc(f"[fault:{site}] {fired.message}")
+
+    def activate(self) -> "FaultPlan":
+        global _ACTIVE
+        _ACTIVE = self
+        return self
+
+    def deactivate(self) -> None:
+        global _ACTIVE
+        if _ACTIVE is self:
+            _ACTIVE = None
+
+
+_ACTIVE: Optional[FaultPlan] = None
+
+
+def deactivate_all() -> None:
+    global _ACTIVE
+    _ACTIVE = None
+
+
+def active_plan() -> Optional[FaultPlan]:
+    return _ACTIVE
+
+
+@contextmanager
+def fault_plan(plan: FaultPlan):
+    """Scope a plan to a with-block (tests): always deactivated on exit."""
+    plan.activate()
+    try:
+        yield plan
+    finally:
+        plan.deactivate()
+
+
+def fault_point(site: str, payload=None, tag: Optional[str] = None):
+    """Production-side injection hook. Returns ``payload`` (possibly
+    corrupted), raises, or hangs per the active plan; with no plan active it
+    is a single global read + return."""
+    plan = _ACTIVE
+    if plan is None:
+        return payload
+    if site not in FAULT_SITES:  # only checked when a plan is live
+        raise ValueError(f"fault_point at unregistered site {site!r}")
+    return plan._hit(site, payload, tag)

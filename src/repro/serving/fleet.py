@@ -51,6 +51,7 @@ the backlog stalls while the new topology provisions.
 from __future__ import annotations
 
 import itertools
+import logging
 import math
 import random
 import threading
@@ -59,19 +60,23 @@ from collections import deque
 from contextlib import nullcontext
 from dataclasses import dataclass, field
 from enum import Enum
-from typing import Callable, Deque, Dict, List, Optional, Sequence
+from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
 
 from repro.core import Archive, wait_for_background
 from repro.launch.mesh import describe_mesh, resolve_mesh
 from repro.serving.engine import ServingEngine
-from repro.serving.scheduler import Request, ReqState
+from repro.serving.faults import fault_point
+from repro.serving.scheduler import Request, ReqState, Scheduler
+
+log = logging.getLogger("repro.serving.fleet")
 
 
 class ReplicaState(Enum):
     PROVISIONING = "provisioning"   # cold-start thread running
     READY = "ready"                 # serving
     STOPPED = "stopped"             # scaled down
-    FAILED = "failed"               # cold start raised
+    FAILED = "failed"               # cold start raised / provision timed out
+    CRASHED = "crashed"             # died MID-SERVING; salvaged + replaced
 
 
 @dataclass
@@ -112,7 +117,8 @@ class Replica:
     """
 
     def __init__(self, rid: int, engine_factory: Callable[[], ServingEngine],
-                 cold_start: Callable[[ServingEngine], object], mesh=None):
+                 cold_start: Callable[[ServingEngine], object], mesh=None,
+                 deadline_s: Optional[float] = None):
         self.stats = ReplicaStats(rid, spawned_t=time.perf_counter())
         self.state = ReplicaState.PROVISIONING
         self.engine: Optional[ServingEngine] = None
@@ -125,6 +131,7 @@ class Replica:
         self._engine_factory = engine_factory
         self._cold_start = cold_start
         self._mesh = mesh
+        self._deadline_s = deadline_s
         self._error: Optional[str] = None
         self._thread = threading.Thread(target=self._provision, daemon=True)
         self._thread.start()
@@ -148,9 +155,21 @@ class Replica:
             self._error = f"{type(e).__name__}: {e}"
 
     def poll(self) -> ReplicaState:
-        """Advance PROVISIONING -> READY/FAILED when the thread finishes."""
+        """Advance PROVISIONING -> READY/FAILED when the thread finishes.
+        A provision past its deadline (hung IO, wedged compile) is FAILED
+        in place — the caller can respawn — and its engine, should the
+        thread eventually attach one, is reaped like an aborted reshard's."""
         if self.discard_engine and self.engine is not None:
-            self.engine = None  # late attach after an aborted reshard
+            self.engine = None  # late attach after abort/timeout/crash
+        if self.state is ReplicaState.PROVISIONING and self._thread.is_alive():
+            if (self._deadline_s is not None
+                    and time.perf_counter() - self.stats.spawned_t
+                    > self._deadline_s):
+                self.state = ReplicaState.FAILED
+                self.stats.error = (f"provision deadline exceeded "
+                                    f"({self._deadline_s:.1f}s; thread "
+                                    f"still running)")
+                self.discard_engine = True
         if self.state is ReplicaState.PROVISIONING and not self._thread.is_alive():
             if self._error is not None or self.engine is None:
                 self.state = ReplicaState.FAILED
@@ -158,6 +177,9 @@ class Replica:
             else:
                 self.state = ReplicaState.READY
                 self.stats.ready_t = time.perf_counter()
+                # stamp the fault-injection identity so chaos plans can
+                # target this replica (serving/faults.py)
+                self.engine.fault_tag = f"replica{self.stats.replica_id}"
         return self.state
 
     @property
@@ -193,12 +215,32 @@ class Replica:
         self.state = ReplicaState.STOPPED
         self.stats.stopped_t = time.perf_counter()
 
+    def crash(self, reason: str):
+        """Mark this replica dead MID-SERVING (Fleet supervision): distinct
+        from FAILED (never came up) so reports can tell a cold-start problem
+        from a serving-time one. The fleet salvages the engine's in-flight
+        population before releasing it."""
+        self.state = ReplicaState.CRASHED
+        self.stats.error = reason
+        self.stats.stopped_t = time.perf_counter()
+
     def join_provision(self, timeout: float = 120.0) -> ReplicaState:
         """Wait for an in-flight provision to finish and resolve the state.
         Stopping a PROVISIONING replica without this races the daemon
         thread, which would re-attach the freshly built engine (and its KV
-        pool) to the stopped replica after the caller released it."""
+        pool) to the stopped replica after the caller released it.
+
+        A thread STILL alive after ``timeout`` resolves to FAILED with a
+        distinct timeout error (callers respawn on it) instead of leaving
+        the replica looking PROVISIONING forever; the wedged thread's
+        eventual engine attach is reaped by ``poll()``."""
         self._thread.join(timeout)
+        if self._thread.is_alive() and self.state is ReplicaState.PROVISIONING:
+            self.state = ReplicaState.FAILED
+            self.stats.error = (f"provision join timed out after "
+                                f"{timeout:.1f}s (thread still running)")
+            self.discard_engine = True
+            return self.state
         return self.poll()
 
     def drain_background(self, timeout: float = 300.0):
@@ -222,6 +264,16 @@ class AutoscalePolicy:
     # systematically failing cold start — bad archive, broken factory —
     # must fail fast, not spawn replicas forever)
     max_spawn_failures: int = 3
+    # mid-serving crash budget, the serving-time analogue of
+    # max_spawn_failures: more than this many CRASHED replicas inside a
+    # sliding crash_window_s means the fleet is crash-looping (poisoned
+    # archive, broken kernel) and must stop respawning and degrade
+    max_crashes_in_window: int = 5
+    crash_window_s: float = 60.0
+    # wall-clock deadline for one replica provision (None: wait forever —
+    # the pre-supervision behavior); a hung cold start past it is FAILED by
+    # poll() so the autoscaler/supervisor can respawn instead of blocking
+    provision_deadline_s: Optional[float] = None
 
 
 @dataclass
@@ -296,6 +348,15 @@ class FleetReport:
     n_done: int = 0
     n_failed: int = 0
     reshards: List[Dict[str, object]] = field(default_factory=list)
+    # supervision accounting (mid-serving failures; docs §12)
+    crashes: int = 0
+    respawns: int = 0
+    salvaged_requests: int = 0        # KV rows migrated off crashed replicas
+    crash_requeued_requests: int = 0  # retried from kept prefixes instead
+    shed_requests: int = 0            # rejected at admission while degraded
+    verify_degraded_loads: int = 0    # respawns that fell back to non-strict
+    degraded: bool = False            # currently below min_replicas
+    degraded_ticks: int = 0           # ticks spent below the floor
 
     @staticmethod
     def _pct(xs: List[float], q: float) -> Optional[float]:
@@ -326,6 +387,14 @@ class FleetReport:
             "background_errors": sum(r.background_errors
                                      for r in self.replicas),
             "reshards": list(self.reshards),
+            "crashes": self.crashes,
+            "respawns": self.respawns,
+            "salvaged_requests": self.salvaged_requests,
+            "crash_requeued_requests": self.crash_requeued_requests,
+            "shed_requests": self.shed_requests,
+            "verify_degraded_loads": self.verify_degraded_loads,
+            "degraded": self.degraded,
+            "degraded_ticks": self.degraded_ticks,
         }
 
 
@@ -384,10 +453,28 @@ class Fleet:
         self.suppress_scale_out = False
         self.reshard_reports: List[ReshardReport] = []
         self._reshard: Optional[_ReshardOp] = None
+        # supervision state (docs/architecture.md §12): crash accounting,
+        # the sliding-window crash budget, and the admission-shed scheduler
+        # (reuses Scheduler.reject for terminal bookkeeping — no KV touched)
+        self.crashes = 0
+        self.respawns = 0
+        self.salvaged_requests = 0
+        self.crash_requeued_requests = 0
+        self.verify_degraded_loads = 0
+        self.degraded_ticks = 0
+        self.crash_budget_exhausted = False
+        self._crash_times: Deque[float] = deque()
+        self._was_at_floor = False  # degradation = DROPPING below the floor
+        self._shed = Scheduler()
         self._ids = itertools.count()
         self._rids = itertools.count()
         self._tick = 0
         self._t0: Optional[float] = None
+        if verbose and not logging.getLogger().handlers:
+            # CLI convenience (launch/serve.py --fleet): surface the fleet's
+            # INFO events without requiring callers to configure logging
+            logging.basicConfig(level=logging.INFO,
+                                format="[%(name)s] %(message)s")
 
     # -- lifecycle -------------------------------------------------------
     def _cold_start(self, eng: ServingEngine, warm: bool = False):
@@ -420,16 +507,55 @@ class Fleet:
         for _ in range(n):
             mesh = self.mesh
             r = Replica(next(self._rids), self._factory_for(mesh),
-                        self._cold_start, mesh=mesh)
+                        self._cold_start, mesh=mesh,
+                        deadline_s=self.policy.provision_deadline_s)
             self.replicas.append(r)
             out.append(r)
-            if self.verbose:
-                print(f"[fleet] +replica {r.stats.replica_id} "
-                      f"({self.mode}, tick {self._tick})")
+            log.info("+replica %d (%s, tick %d)",
+                     r.stats.replica_id, self.mode, self._tick)
         return out
 
     def _can_spawn(self) -> bool:
-        return self.spawn_failures < self.policy.max_spawn_failures
+        return (self.spawn_failures < self.policy.max_spawn_failures
+                and not self.crash_budget_exhausted)
+
+    def _respawn(self, n: int = 1) -> List[Replica]:
+        """Replace crashed capacity: same path as ``scale_up`` but the cold
+        start is warm for foundry fleets — the shared archive's blobs are
+        already fetched and ``_template_cache`` is hot, so the replacement
+        comes up at warm-LOAD speed (the paper's pitch applied to crash
+        recovery, not just scale-out)."""
+        out = []
+        for _ in range(n):
+            mesh = self.mesh
+            cold = (self._respawn_cold_start if self.mode == "foundry"
+                    else self._cold_start)
+            r = Replica(next(self._rids), self._factory_for(mesh),
+                        cold, mesh=mesh,
+                        deadline_s=self.policy.provision_deadline_s)
+            self.replicas.append(r)
+            out.append(r)
+            self.respawns += 1
+            log.info("+replica %d (respawn after crash, tick %d)",
+                     r.stats.replica_id, self._tick)
+        return out
+
+    def _respawn_cold_start(self, eng: ServingEngine):
+        """Warm foundry LOAD with a verify-degrade rung: if the strict
+        pre-flight verify rejects the archive on respawn (a blob rotted
+        since the original LOAD), degrade THIS load to non-strict fallback
+        compilation instead of failing the replacement — one slow replica
+        beats a supervisor stuck in a FAILED loop (docs §12 ladder)."""
+        from repro.analysis.checker import ArchiveVerificationError
+        try:
+            return self._cold_start(eng, warm=True)
+        except ArchiveVerificationError as e:
+            self.verify_degraded_loads += 1
+            log.warning("respawn LOAD failed strict verify (%s); degrading "
+                        "to fallback compile", e)
+            return eng.cold_start_foundry(
+                self.archive, background_exact=self.background_exact,
+                allow_stamping=self.allow_stamping, warm=True, strict=False)
 
     def start(self) -> "Fleet":
         """Spawn the floor of the policy (idempotent)."""
@@ -440,13 +566,40 @@ class Fleet:
             self.scale_up(missing)
         return self
 
+    # -- degradation ladder (docs/architecture.md §12) -------------------
+    @property
+    def degraded(self) -> bool:
+        """Below the autoscale floor after having reached it once: fewer
+        READY replicas than ``policy.min_replicas``. (The initial
+        provisioning ramp is not degradation — nothing was lost.)"""
+        return (self._was_at_floor
+                and len(self._ready()) < self.policy.min_replicas)
+
+    def _sheds_load(self) -> bool:
+        """Terminal incapacity: degraded, nothing provisioning, and the
+        spawn/crash budgets forbid respawning — capacity is NOT coming back,
+        so new load is shed cheaply at admission instead of queueing
+        forever. A degraded fleet with a respawn in flight keeps queueing
+        (recovery is ~a warm LOAD away — the whole point of foundry)."""
+        return (self.degraded and not self._can_spawn()
+                and not any(r.state is ReplicaState.PROVISIONING
+                            for r in self.replicas))
+
     # -- traffic ---------------------------------------------------------
     def submit(self, prompt: Sequence[int], max_new_tokens: int) -> Request:
         """Enqueue on the fleet-wide queue; arrival time is fleet arrival,
-        so TTFT includes queueing AND any cold start it had to wait for."""
+        so TTFT includes queueing AND any cold start it had to wait for.
+        A fleet in terminal degradation (``_sheds_load``) rejects at
+        admission — ``Scheduler.reject`` bookkeeping, no KV, no dispatch."""
         r = Request(next(self._ids), list(prompt), max_new_tokens)
-        self.backlog.append(r)
         self.requests.append(r)
+        if self._sheds_load():
+            self._shed.reject(
+                r, f"fleet degraded: {len(self._ready())} READY < "
+                   f"min_replicas={self.policy.min_replicas} and the "
+                   f"respawn budget is exhausted; shed at admission")
+            return r
+        self.backlog.append(r)
         return r
 
     def _dispatch(self):
@@ -489,10 +642,123 @@ class Fleet:
             for r in self._ready():
                 if r.load == 0 and r.idle_ticks >= pol.scale_down_idle_ticks:
                     r.stop()
-                    if self.verbose:
-                        print(f"[fleet] -replica {r.stats.replica_id} "
-                              f"(idle {r.idle_ticks} ticks)")
+                    log.info("-replica %d (idle %d ticks)",
+                             r.stats.replica_id, r.idle_ticks)
                     break
+
+    # -- supervision (docs/architecture.md §12) --------------------------
+    def _on_replica_crash(self, r: Replica, exc: Exception):
+        """A decode step raised: contain it. The replica transitions to
+        CRASHED (tick keeps serving everyone else), its in-flight requests
+        are salvaged — KV rows migrated to surviving replicas when the
+        engine is still coherent, requeued from kept prefixes otherwise —
+        and a replacement is respawned from the shared archive unless the
+        sliding-window crash budget says the fleet is crash-looping."""
+        self.crashes += 1
+        now = time.perf_counter()
+        self._crash_times.append(now)
+        while (self._crash_times
+               and now - self._crash_times[0] > self.policy.crash_window_s):
+            self._crash_times.popleft()
+        r.crash(f"{type(exc).__name__}: {exc}")
+        migrated, requeued, failed = self._salvage(r)
+        self.salvaged_requests += migrated
+        self.crash_requeued_requests += requeued
+        log.warning("replica %d CRASHED (%s): salvaged %d, requeued %d, "
+                    "failed %d", r.stats.replica_id, r.stats.error,
+                    migrated, requeued, failed)
+        r.engine = None  # release weights + KV pool
+        if len(self._crash_times) > self.policy.max_crashes_in_window:
+            self.crash_budget_exhausted = True
+            log.error("crash budget exhausted (%d crashes inside %.0fs > "
+                      "%d): fleet stops respawning and degrades",
+                      len(self._crash_times), self.policy.crash_window_s,
+                      self.policy.max_crashes_in_window)
+            return
+        if (self._reshard is None and self._can_spawn()
+                and len(self._alive()) < self.policy.max_replicas):
+            self._respawn(1)
+
+    def _salvage_targets(self, crashed: Replica) -> List[Replica]:
+        """READY replicas whose pools can adopt the crashed replica's KV
+        rows. During a live reshard's DUAL phase the pending new generation
+        is excluded for the same reason ``_dispatch`` skips it: it must
+        stand empty until cutover."""
+        out = [t for t in self._ready()
+               if t is not crashed and t.engine is not None]
+        if self._reshard is not None and self._reshard.strategy == "live":
+            pending_new = {id(t) for t in self._reshard.new}
+            out = [t for t in out if id(t) not in pending_new]
+        return out
+
+    def _salvage(self, r: Replica) -> Tuple[int, int, int]:
+        """Recover a crashed replica's in-flight population. Returns
+        ``(migrated, requeued, failed)``.
+
+        Fast path — the crash left the engine coherent (decode-step faults
+        fire before any mutation): ``export_inflight`` pulls every running
+        request's KV rows and they migrate into surviving replicas' pools
+        exactly like a reshard cutover; overflow requeues with its prefix
+        kept. Slow path — export itself raises (pool corrupt): every
+        running request retries from its kept prefix through
+        ``Scheduler.requeue_on_failure``, which charges one retry and
+        terminally FAILs requests past ``max_retries``."""
+        if r.engine is None:
+            return 0, 0, 0
+        eng = r.engine
+        try:
+            with r._ctx():
+                reqs, bundle, queued = eng.export_inflight()
+        except Exception as e:
+            log.warning("export_inflight failed on crashed replica %d "
+                        "(%s: %s); requeueing from kept prefixes",
+                        r.stats.replica_id, type(e).__name__, e)
+            return self._requeue_crashed(eng)
+        for q in reversed(queued):
+            self.backlog.appendleft(q)
+        migrated = requeued = 0
+        targets = self._salvage_targets(r)
+        while reqs:
+            cands = [t for t in targets
+                     if t.engine.max_batch - t.engine.pool.n_active > 0]
+            if not cands:
+                for q in reversed(reqs):
+                    self.backlog.appendleft(q)
+                requeued += len(reqs)
+                break
+            tgt = min(cands, key=lambda t: t.load)
+            try:
+                with tgt._ctx():
+                    k = tgt.engine.adopt_inflight(reqs, bundle)
+            except Exception as e:
+                log.warning("adopt_inflight into replica %d failed during "
+                            "salvage (%s: %s); excluding it",
+                            tgt.stats.replica_id, type(e).__name__, e)
+                targets = [t for t in targets if t is not tgt]
+                continue
+            migrated += k
+            reqs = reqs[k:]
+            bundle = bundle.select(range(k, bundle.n)) if reqs else None
+        return migrated, requeued, 0
+
+    def _requeue_crashed(self, eng: ServingEngine) -> Tuple[int, int, int]:
+        """Incoherent-engine salvage: no KV leaves the wreck. Running
+        requests go through ``Scheduler.requeue_on_failure`` (kept prefix,
+        one retry charged, terminal FAILED past the budget); the engine's
+        local queue drains back onto the fleet backlog untouched."""
+        sched = eng.scheduler
+        n_failed0 = len(sched.failed)
+        requeued = 0
+        for q in list(sched.running.values()):
+            sched.requeue_on_failure(q)
+        # requeue_on_failure pushes survivors onto the ENGINE queue; move
+        # the whole local queue (survivors + never-started) to the fleet
+        for q in reversed(list(sched.queue)):
+            self.backlog.appendleft(q)
+            requeued += 1
+        sched.queue.clear()
+        failed = len(sched.failed) - n_failed0
+        return 0, requeued, failed
 
     # -- live reshard (module docstring; docs/architecture.md §8) --------
     def reshard(self, new_mesh, *, factory: Optional[Callable[[], ServingEngine]] = None,
@@ -544,9 +810,8 @@ class Fleet:
         op = _ReshardOp(new_mesh=new_mesh, factory=factory,
                         strategy=strategy, report=report,
                         old=list(self._alive()))
-        if self.verbose:
-            print(f"[fleet] reshard[{strategy}] {report.from_mesh} -> "
-                  f"{report.to_mesh} ({n} replicas, tick {self._tick})")
+        log.info("reshard[%s] %s -> %s (%d replicas, tick %d)",
+                 strategy, report.from_mesh, report.to_mesh, n, self._tick)
         if strategy == "restart":
             # baseline: tear the old topology down before the new one exists
             for old in op.old:
@@ -606,12 +871,12 @@ class Fleet:
                 else self._cold_start)
         out = []
         for _ in range(n):
-            r = Replica(next(self._rids), op.factory, cold, mesh=op.new_mesh)
+            r = Replica(next(self._rids), op.factory, cold, mesh=op.new_mesh,
+                        deadline_s=self.policy.provision_deadline_s)
             self.replicas.append(r)
             out.append(r)
-            if self.verbose:
-                print(f"[fleet] +replica {r.stats.replica_id} "
-                      f"(reshard -> {op.report.to_mesh}, tick {self._tick})")
+            log.info("+replica %d (reshard -> %s, tick %d)",
+                     r.stats.replica_id, op.report.to_mesh, self._tick)
         return out
 
     def _retire_replica(self, r: Replica):
@@ -682,26 +947,51 @@ class Fleet:
             if pending and not running:
                 op.deferrals += 1
                 return
-        self._cutover(op, ready_new)
+        try:
+            self._cutover(op, ready_new)
+        except Exception as e:
+            # the cutover's own failure paths (torn export, refused adopt)
+            # are contained per replica; anything that still escapes — the
+            # reshard.cutover fault site fires before any mutation — aborts
+            # the switch, and the old generation keeps serving
+            log.warning("cutover to %s raised (%s: %s); aborting reshard",
+                        op.report.to_mesh, type(e).__name__, e)
+            self.abort_reshard(f"cutover failed: {type(e).__name__}: {e}")
 
     def _cutover(self, op: _ReshardOp, targets: List[Replica]):
         """CUTOVER -> DRAINED, atomically between decode steps: migrate
         every old replica's in-flight KV rows into the new generation's
         pools, flip the fleet's identity to the new topology, release the
         old replicas."""
+        # chaos hook BEFORE any mutation: a fault here unwinds into
+        # _advance_reshard's abort and the old generation keeps serving
+        fault_point("reshard.cutover")
         rep = op.report
         rep.cutover_t = time.perf_counter()
         for old in op.old:
             if old.state is ReplicaState.PROVISIONING:
                 old.join_provision()
             if old.state is ReplicaState.READY and old.engine is not None:
-                with old._ctx():
-                    reqs, bundle, queued = old.engine.export_inflight()
+                try:
+                    with old._ctx():
+                        reqs, bundle, queued = old.engine.export_inflight()
+                except Exception as e:
+                    # torn export on ONE old replica must not strand the
+                    # others: its requests retry from kept prefixes
+                    log.warning("export_inflight failed on replica %d "
+                                "during cutover (%s: %s); requeueing",
+                                old.stats.replica_id, type(e).__name__, e)
+                    _, rq, _ = self._requeue_crashed(old.engine)
+                    rep.requeued_requests += rq
+                    self._retire_replica(old)
+                    rep.released_replicas += 1
+                    continue
                 for q in reversed(queued):
                     self.backlog.appendleft(q)
                 while reqs:
                     cands = [t for t in targets
-                             if t.engine.max_batch - t.engine.pool.n_active > 0]
+                             if t.engine is not None
+                             and t.engine.max_batch - t.engine.pool.n_active > 0]
                     if not cands:
                         # no capacity anywhere on the new mesh: the tail
                         # requeues with its prefix kept (still zero drops)
@@ -710,8 +1000,15 @@ class Fleet:
                         rep.requeued_requests += len(reqs)
                         break
                     tgt = min(cands, key=lambda t: t.load)
-                    with tgt._ctx():
-                        k = tgt.engine.adopt_inflight(reqs, bundle)
+                    try:
+                        with tgt._ctx():
+                            k = tgt.engine.adopt_inflight(reqs, bundle)
+                    except Exception as e:
+                        log.warning("adopt_inflight into replica %d failed "
+                                    "during cutover (%s: %s); excluding it",
+                                    tgt.stats.replica_id, type(e).__name__, e)
+                        targets = [t for t in targets if t is not tgt]
+                        continue
                     rep.migrated_requests += k
                     reqs = reqs[k:]
                     bundle = (bundle.select(range(k, bundle.n))
@@ -726,20 +1023,27 @@ class Fleet:
     def _finish_reshard(self, op: _ReshardOp):
         self.reshard_reports.append(op.report)
         self._reshard = None
-        if self.verbose or op.report.aborted:
-            s = op.report
-            print(f"[fleet] reshard[{s.strategy}] {s.from_mesh} -> "
-                  f"{s.to_mesh}: "
-                  + (f"ABORTED ({s.aborted})" if s.aborted else
-                     f"done in {s.time_to_new_topology_s * 1e3:.1f} ms "
-                     f"(migrated {s.migrated_requests}, requeued "
-                     f"{s.requeued_requests}, dual {s.dual_ticks} ticks)"))
+        s = op.report
+        if s.aborted:
+            log.warning("reshard[%s] %s -> %s: ABORTED (%s)",
+                        s.strategy, s.from_mesh, s.to_mesh, s.aborted)
+        else:
+            log.info("reshard[%s] %s -> %s: done in %.1f ms (migrated %d, "
+                     "requeued %d, dual %d ticks)",
+                     s.strategy, s.from_mesh, s.to_mesh,
+                     s.time_to_new_topology_s * 1e3, s.migrated_requests,
+                     s.requeued_requests, s.dual_ticks)
 
     # -- serving loop ----------------------------------------------------
     def tick(self) -> int:
         """One fleet iteration: poll provisioning, advance any in-flight
         reshard, dispatch, autoscale, one decode step per READY replica.
-        Returns requests actively served."""
+        Returns requests actively served.
+
+        Decode steps are supervised: a replica whose ``step()`` raises
+        transitions to CRASHED and is salvaged + replaced
+        (``_on_replica_crash``) WITHOUT unwinding the tick — one bad
+        replica must not take the fleet's serving loop down with it."""
         if self._t0 is None:
             self.start()
         self._tick += 1
@@ -748,10 +1052,10 @@ class Fleet:
             if (r.poll() is ReplicaState.FAILED
                     and was is ReplicaState.PROVISIONING):
                 self.spawn_failures += 1
-                print(f"[fleet] replica {r.stats.replica_id} FAILED to "
-                      f"provision ({self.spawn_failures}/"
-                      f"{self.policy.max_spawn_failures} before giving up): "
-                      f"{r.stats.error}")
+                log.warning("replica %d FAILED to provision (%d/%d before "
+                            "giving up): %s", r.stats.replica_id,
+                            self.spawn_failures,
+                            self.policy.max_spawn_failures, r.stats.error)
         if self._reshard is not None:
             self._advance_reshard()
         self._dispatch()
@@ -761,7 +1065,23 @@ class Fleet:
             self._autoscale()
         served = 0
         for r in self._ready():
-            served += r.step()
+            try:
+                served += r.step()
+            except Exception as e:
+                self._on_replica_crash(r, e)
+        if self._sheds_load() and not self._ready() and self.backlog:
+            # terminal incapacity with zero serving capacity: what already
+            # queued will never run either — shed it with the same terminal
+            # bookkeeping admission uses, so callers see FAILED, not a hang
+            while self.backlog:
+                self._shed.reject(
+                    self.backlog.popleft(),
+                    "fleet degraded with no READY replicas and the respawn "
+                    "budget exhausted; backlog shed")
+        if len(self._ready()) >= self.policy.min_replicas:
+            self._was_at_floor = True
+        elif self._was_at_floor:
+            self.degraded_ticks += 1
         self.peak_alive = max(self.peak_alive, len(self._alive()))
         return served
 
@@ -808,7 +1128,13 @@ class Fleet:
             mode=self.mode, ticks=self._tick,
             wall_s=(time.perf_counter() - self._t0) if self._t0 else 0.0,
             peak_alive=self.peak_alive,
-            reshards=[r.summary() for r in self.reshard_reports])
+            reshards=[r.summary() for r in self.reshard_reports],
+            crashes=self.crashes, respawns=self.respawns,
+            salvaged_requests=self.salvaged_requests,
+            crash_requeued_requests=self.crash_requeued_requests,
+            shed_requests=len(self._shed.failed),
+            verify_degraded_loads=self.verify_degraded_loads,
+            degraded=self.degraded, degraded_ticks=self.degraded_ticks)
         for r in self.replicas:
             lr = (None if r.discard_engine
                   else getattr(r.engine, "_load_report", None))

@@ -108,6 +108,13 @@ class ModelStats:
     # summaries, in order), and the mesh level the model currently serves at
     reshards: List[Dict[str, Any]] = field(default_factory=list)
     mesh_level: str = "low"
+    # supervision accounting (fleet crash recovery; docs §12): mid-serving
+    # crashes absorbed, replacements respawned, requests shed at admission
+    # while degraded, and whether the live fleet is degraded right now
+    crashes: int = 0
+    respawns: int = 0
+    shed_requests: int = 0
+    degraded: bool = False
 
     def summary(self, requests: Sequence[Request]) -> Dict[str, Any]:
         ttfts = [r.ttft for r in requests
@@ -131,6 +138,10 @@ class ModelStats:
             "replicas_spawned": self.replicas_spawned,
             "reshards": list(self.reshards),
             "mesh_level": self.mesh_level,
+            "crashes": self.crashes,
+            "respawns": self.respawns,
+            "shed_requests": self.shed_requests,
+            "degraded": self.degraded,
         }
 
 
@@ -191,6 +202,9 @@ class RouterReport:
                                      for m in self.models.values()),
             "n_done": sum(m["n_done"] for m in self.models.values()),
             "n_failed": sum(m["n_failed"] for m in self.models.values()),
+            "crashes": sum(m["crashes"] for m in self.models.values()),
+            "shed_requests": sum(m["shed_requests"]
+                                 for m in self.models.values()),
         }
 
 
@@ -324,6 +338,9 @@ class ModelRouter:
                                          for r in rep.replicas)
         e.stats.replicas_spawned += len(rep.replicas)
         e.stats.reshards = e.stats.reshards + list(rep.reshards)
+        e.stats.crashes += rep.crashes
+        e.stats.respawns += rep.respawns
+        e.stats.shed_requests += rep.shed_requests
         for r in fleet.replicas:
             if r.state in (ReplicaState.PROVISIONING, ReplicaState.READY):
                 r.stop()
@@ -534,6 +551,10 @@ class ModelRouter:
                 # rebind, don't append: the list object is shared with
                 # e.stats and this fold must stay non-destructive
                 stats.reshards = stats.reshards + list(frep.reshards)
+                stats.crashes += frep.crashes
+                stats.respawns += frep.respawns
+                stats.shed_requests += frep.shed_requests
+                stats.degraded = stats.degraded or frep.degraded
             entry = stats.summary(e.requests)
             entry["state"] = e.state.value
             rep.models[name] = entry

@@ -1,0 +1,377 @@
+"""Fault injection + fleet supervision (serving/faults.py; fleet crash
+recovery, KV salvage, graceful degradation — docs/architecture.md §12).
+
+Includes the ISSUE acceptance regression test: a decode-step exception must
+NOT propagate out of ``Fleet.tick()`` — the crashed replica is salvaged and
+respawned while the others keep serving.
+"""
+import glob
+import os
+import re
+import time
+
+import jax
+import pytest
+
+from repro.configs.registry import get_arch
+from repro.core import Archive
+from repro.models.model import Model
+from repro.serving import faults
+from repro.serving.engine import ServingEngine
+from repro.serving.faults import (FAULT_SITES, FaultPlan, FaultSpec,
+                                  InjectedFault, InjectedIOError, fault_plan,
+                                  fault_point)
+from repro.serving.fleet import AutoscalePolicy, Fleet, ReplicaState
+from repro.serving.scheduler import ReqState, Scheduler
+
+CFG = get_arch("smollm-360m").reduced()
+PROMPTS = [[5, 9, 2], [11, 3], [7, 7, 7, 1], [2], [13, 4, 9], [6, 2, 8]]
+N_NEW = 6
+
+
+def factory():
+    eng = ServingEngine(Model(CFG), max_batch=4, max_seq=64,
+                        bucket_mode="pow2")
+    eng.load_weights(rng=jax.random.PRNGKey(7))
+    return eng
+
+
+@pytest.fixture(autouse=True)
+def _no_plan_leaks():
+    """A plan leaking out of one test would chaos-inject every later test."""
+    faults.deactivate_all()
+    yield
+    faults.deactivate_all()
+
+
+@pytest.fixture(scope="module")
+def archive_path(tmp_path_factory):
+    path = str(tmp_path_factory.mktemp("faults") / "faults.fndry")
+    factory().save_archive(path)
+    return path
+
+
+@pytest.fixture(scope="module")
+def reference(archive_path):
+    """Token streams from a never-crashed engine, one request at a time."""
+    eng = factory()
+    eng.cold_start_foundry(Archive.load(archive_path))
+    out = {}
+    for p in PROMPTS:
+        r = eng.submit(p, N_NEW)
+        eng.run_until_drained()
+        out[tuple(p)] = tuple(r.generated)
+    return out
+
+
+def small_policy(**kw):
+    base = dict(min_replicas=1, max_replicas=3,
+                target_inflight_per_replica=64, scale_down_idle_ticks=500)
+    base.update(kw)
+    return AutoscalePolicy(**base)
+
+
+def _tick_until(fleet, cond, what, budget=8000):
+    for k in range(budget):
+        if cond():
+            return k
+        if fleet.tick() == 0:
+            time.sleep(0.001)
+    raise AssertionError(f"{what}: not reached in {budget} ticks")
+
+
+# -- the hook and its triggers ------------------------------------------
+def test_fault_point_is_passthrough_without_plan():
+    payload = b"untouched"
+    assert fault_point("depot.fetch", payload=payload) is payload
+    assert fault_point("engine.decode_step") is None
+    # unregistered sites are only validated when a plan is live (the hook
+    # must stay zero-cost in production), and rejected when one is
+    assert fault_point("not.a.site", payload=1) == 1
+    with fault_plan(FaultPlan()):
+        with pytest.raises(ValueError, match="unregistered site"):
+            fault_point("not.a.site")
+
+
+def test_unknown_site_and_kind_rejected_at_spec_time():
+    with pytest.raises(ValueError, match="unknown fault site"):
+        FaultSpec(site="depot.fetchh")
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultSpec(site="depot.fetch", kind="explode")
+
+
+def test_nth_tag_times_triggers():
+    spec = FaultSpec(site="engine.decode_step", nth=3, times=1,
+                     tag="replica1")
+    with fault_plan(FaultPlan(spec)) as plan:
+        # wrong tag never matches, right tag fires exactly on its 3rd call
+        for _ in range(5):
+            fault_point("engine.decode_step", tag="replica0")
+        fault_point("engine.decode_step", tag="replica1")
+        fault_point("engine.decode_step", tag="replica1")
+        with pytest.raises(InjectedFault, match=r"\[fault:engine.decode_step\]"):
+            fault_point("engine.decode_step", tag="replica1")
+        # times=1: exhausted, later matching calls pass through
+        fault_point("engine.decode_step", tag="replica1")
+        assert plan.fired() == 1
+        # only tag-matching calls count toward the spec's nth counter
+        assert plan.calls("engine.decode_step") == 4
+
+
+def test_seeded_probability_is_deterministic():
+    def run():
+        spec = FaultSpec(site="depot.fetch", p=0.3, seed=11, times=None)
+        fired = []
+        with fault_plan(FaultPlan(spec)):
+            for k in range(50):
+                try:
+                    fault_point("depot.fetch", payload=b"x")
+                except InjectedFault:
+                    fired.append(k)
+        return fired
+    a, b = run(), run()
+    assert a == b and 0 < len(a) < 50
+
+
+def test_corrupt_and_hang_kinds():
+    payload = bytes(range(100))
+    with fault_plan(FaultPlan(FaultSpec(site="depot.fetch", kind="corrupt"))):
+        out = fault_point("depot.fetch", payload=payload)
+    assert len(out) == len(payload) and out != payload
+    assert out[64:] == payload[64:]  # a flipped head, not a truncation
+    # corrupt at a payload-less site degenerates to raising
+    with fault_plan(FaultPlan(FaultSpec(site="reshard.cutover",
+                                        kind="corrupt"))):
+        with pytest.raises(InjectedFault):
+            fault_point("reshard.cutover")
+    with fault_plan(FaultPlan(FaultSpec(site="restore.install", kind="hang",
+                                        hang_s=0.05))):
+        t0 = time.perf_counter()
+        fault_point("restore.install")
+        assert time.perf_counter() - t0 >= 0.05
+
+
+def test_fault_sites_registry_matches_code():
+    """Lint guard: every ``fault_point("site")`` call in src/ names a
+    registered site, and every registered site has at least one call."""
+    root = os.path.join(os.path.dirname(__file__), "..", "src")
+    in_code = set()
+    for path in glob.glob(os.path.join(root, "**", "*.py"), recursive=True):
+        if path.endswith(os.path.join("serving", "faults.py")):
+            continue
+        with open(path) as f:
+            in_code |= set(re.findall(r'fault_point\(\s*"([^"]+)"', f.read()))
+    assert in_code == set(FAULT_SITES), (
+        f"fault_point sites and FAULT_SITES diverged: "
+        f"unregistered={sorted(in_code - set(FAULT_SITES))}, "
+        f"uncalled={sorted(set(FAULT_SITES) - in_code)}")
+
+
+# -- retries around storage IO ------------------------------------------
+def test_transient_fetch_fault_healed_by_retry(archive_path):
+    ar = Archive.load(archive_path)  # fresh store: nothing fetched yet
+    h = next(iter(ar.blobs))
+    clean = Archive.load(archive_path).blobs[h]
+    plan = FaultPlan(
+        FaultSpec(site="depot.fetch", nth=1, times=1, exc=InjectedIOError,
+                  message="flaky mount"))
+    with fault_plan(plan):
+        assert ar.blobs[h] == clean  # retried + verified, caller never sees it
+    assert plan.fired() == 1
+    assert plan.calls() >= 2  # the retry re-entered the fault point
+
+
+def test_corrupted_fetch_healed_by_retry(archive_path):
+    """A torn/bit-rotted read fails content verification and is re-read."""
+    ar = Archive.load(archive_path)
+    h = next(iter(ar.blobs))
+    clean = Archive.load(archive_path).blobs[h]
+    plan = FaultPlan(FaultSpec(site="depot.fetch", kind="corrupt", nth=1,
+                               times=1))
+    with fault_plan(plan):
+        assert ar.blobs[h] == clean
+    assert plan.fired() == 1
+
+
+def test_persistent_corruption_surfaces_after_retries(archive_path):
+    ar = Archive.load(archive_path)
+    h = next(iter(ar.blobs))
+    with fault_plan(FaultPlan(FaultSpec(site="depot.fetch", kind="corrupt",
+                                        times=None))):
+        with pytest.raises(ValueError, match="corrupt"):
+            ar.blobs[h]
+
+
+# -- LOAD-side faults ----------------------------------------------------
+def test_deserialize_fault_degrades_to_fallback_compile(archive_path):
+    eng = factory()
+    with fault_plan(FaultPlan(FaultSpec(site="archive.deserialize",
+                                        times=1))) as plan:
+        rep = eng.cold_start_foundry(Archive.load(archive_path),
+                                     background_exact=False)
+        assert plan.fired() == 1
+    assert rep.fallback_compiles >= 1  # degraded, not dead
+    r = eng.submit(PROMPTS[0], 4)
+    eng.run_until_drained()
+    assert r.state is ReqState.DONE
+
+
+def test_install_fault_fails_the_cold_start(archive_path):
+    eng = factory()
+    with fault_plan(FaultPlan(FaultSpec(site="restore.install", times=1))):
+        with pytest.raises(InjectedFault):
+            eng.cold_start_foundry(Archive.load(archive_path),
+                                   background_exact=False)
+
+
+# -- fleet supervision (THE acceptance regression test) ------------------
+def test_decode_crash_is_supervised_not_fatal(archive_path, reference):
+    """A decode-step exception must not unwind ``Fleet.tick()``: the
+    crashed replica is salvaged (KV rows migrated / prefixes requeued) and
+    respawned while the surviving replica keeps serving; every request
+    completes with byte-identical tokens."""
+    fleet = Fleet(factory, mode="foundry", archive=Archive.load(archive_path),
+                  policy=small_policy(min_replicas=2, max_replicas=2))
+    fleet.start()
+    _tick_until(fleet, lambda: len(fleet._ready()) == 2, "provision")
+    reqs = [fleet.submit(p, N_NEW) for p in PROMPTS]
+    for _ in range(2):
+        fleet.tick()  # put work in flight on both replicas
+    tgt = max(fleet._ready(), key=lambda r: r.load)
+    assert tgt.load > 0
+    spec = FaultSpec(site="engine.decode_step",
+                     tag=f"replica{tgt.stats.replica_id}", times=1,
+                     message="chaos kill")
+    with fault_plan(FaultPlan(spec)):
+        _tick_until(fleet, lambda: fleet.crashes > 0, "crash", budget=200)
+    assert tgt.state is ReplicaState.CRASHED
+    assert tgt.engine is None, "crashed replica's engine not released"
+    assert "chaos kill" in tgt.stats.error
+    # the survivor serves while the replacement provisions
+    survivors_served = 0
+    for _ in range(10):
+        survivors_served += fleet.tick()
+    assert survivors_served > 0, "fleet stopped serving during recovery"
+    _tick_until(fleet, lambda: len(fleet._ready()) == 2, "respawn")
+    _tick_until(fleet, lambda: fleet._unresolved() == 0, "drain")
+    fleet.drain_background()
+    rep = fleet.report()
+    assert rep.n_failed == 0 and rep.n_done == len(reqs)
+    assert rep.crashes == 1 and rep.respawns == 1
+    assert rep.salvaged_requests + rep.crash_requeued_requests > 0
+    assert rep.summary()["fallback_compiles"] == 0  # respawn = warm LOAD
+    for q in reqs:
+        assert tuple(q.generated) == reference[tuple(q.prompt)], \
+            f"req {q.req_id} diverged across crash recovery"
+
+
+def test_kv_import_fault_falls_back_to_requeue(archive_path, reference):
+    """Salvage whose ``adopt_inflight`` raises excludes that target and
+    requeues from kept prefixes — still zero lost requests."""
+    fleet = Fleet(factory, mode="foundry", archive=Archive.load(archive_path),
+                  policy=small_policy(min_replicas=2, max_replicas=2))
+    fleet.start()
+    _tick_until(fleet, lambda: len(fleet._ready()) == 2, "provision")
+    reqs = [fleet.submit(p, N_NEW) for p in PROMPTS[:4]]
+    for _ in range(2):
+        fleet.tick()
+    tgt = max(fleet._ready(), key=lambda r: r.load)
+    assert tgt.load > 0
+    plan = FaultPlan(
+        FaultSpec(site="engine.decode_step",
+                  tag=f"replica{tgt.stats.replica_id}", times=1),
+        FaultSpec(site="kv.import_rows", times=None))  # every adopt refused
+    with fault_plan(plan):
+        _tick_until(fleet, lambda: fleet.crashes > 0, "crash", budget=200)
+    assert fleet.salvaged_requests == 0
+    assert fleet.crash_requeued_requests > 0
+    _tick_until(fleet, lambda: fleet._unresolved() == 0, "drain")
+    rep = fleet.report()
+    assert rep.n_failed == 0 and rep.n_done == len(reqs)
+    for q in reqs:
+        assert tuple(q.generated) == reference[tuple(q.prompt)]
+
+
+def test_crash_budget_exhaustion_degrades_and_sheds(archive_path):
+    """Crash-looping fleet: the sliding-window budget stops the respawn
+    churn, the fleet degrades, and load sheds cheaply at admission (and
+    off the backlog) via ``Scheduler.reject`` — no KV touched, callers see
+    terminal FAILED instead of a hang."""
+    fleet = Fleet(factory, mode="foundry", archive=Archive.load(archive_path),
+                  policy=small_policy(min_replicas=1, max_replicas=1,
+                                      max_crashes_in_window=1,
+                                      crash_window_s=600.0))
+    fleet.start()
+    _tick_until(fleet, lambda: len(fleet._ready()) == 1, "provision")
+    stuck = fleet.submit(PROMPTS[0], 4)
+    with fault_plan(FaultPlan(FaultSpec(site="engine.decode_step",
+                                        times=None))):  # every step dies
+        _tick_until(fleet,
+                    lambda: fleet.crash_budget_exhausted
+                    and not fleet._alive(), "budget exhaustion")
+    assert fleet.crashes == 2 and fleet.respawns == 1
+    assert fleet.degraded and not fleet._can_spawn()
+    fleet.tick()  # backlog shed happens on the tick after terminal incapacity
+    assert stuck.state is ReqState.FAILED
+    assert "degraded" in stuck.fail_reason
+    late = fleet.submit(PROMPTS[1], 4)  # shed at admission, never queued
+    assert late.state is ReqState.FAILED and "degraded" in late.fail_reason
+    assert late not in fleet.backlog
+    rep = fleet.report()
+    assert rep.degraded and rep.shed_requests == 2
+    assert rep.degraded_ticks > 0
+    assert rep.n_failed == 2 and rep.n_done == 0
+
+
+def test_verify_failure_on_respawn_degrades_to_nonstrict(archive_path,
+                                                         monkeypatch,
+                                                         reference):
+    """Strict pre-flight verify failing on a RESPAWN falls back to a
+    non-strict LOAD (one degraded replica beats a dead supervisor)."""
+    import repro.analysis.checker as checker
+
+    fleet = Fleet(factory, mode="foundry", archive=Archive.load(archive_path),
+                  policy=small_policy(min_replicas=1, max_replicas=1))
+    fleet.start()
+    _tick_until(fleet, lambda: len(fleet._ready()) == 1, "provision")
+    reqs = [fleet.submit(p, N_NEW) for p in PROMPTS[:3]]
+    fleet.tick()
+    monkeypatch.setattr(
+        checker, "verify_for_load",
+        lambda archive, loc="archive": [checker.Finding(
+            "manifest-schema", "error", "test:injected",
+            "injected verify failure for the respawn-degrade test")])
+    with fault_plan(FaultPlan(FaultSpec(site="engine.decode_step",
+                                        times=1))):
+        _tick_until(fleet, lambda: fleet.crashes > 0, "crash", budget=200)
+    _tick_until(fleet, lambda: len(fleet._ready()) == 1, "degraded respawn")
+    _tick_until(fleet, lambda: fleet._unresolved() == 0, "drain")
+    rep = fleet.report()
+    assert fleet.verify_degraded_loads == 1
+    assert rep.summary()["verify_degraded_loads"] == 1
+    assert rep.n_failed == 0 and rep.n_done == len(reqs)
+    assert rep.respawns == 1
+    for q in reqs:
+        assert tuple(q.generated) == reference[tuple(q.prompt)]
+
+
+# -- scheduler retry accounting (satellite) ------------------------------
+def test_requeue_on_failure_retry_accounting():
+    sched = Scheduler(max_retries=2)
+    req = sched.submit([4, 5, 6], 8)
+    sched.admissions(1)
+    req.generated = [7, 8]  # mid-decode prefix that must survive requeues
+    for k in range(2):  # exactly max_retries requeues survive
+        sched.requeue_on_failure(req)
+        assert req.state is ReqState.WAITING
+        assert req.retries == k + 1
+        assert req.generated == [7, 8]
+        assert sched.queue[0] is req and not sched.failed
+        sched.admissions(1)
+    sched.requeue_on_failure(req)  # retries > max_retries: terminal
+    assert req.state is ReqState.FAILED
+    assert req.retries == 3
+    assert "retries exhausted" in req.fail_reason
+    assert req.done_t is not None
+    assert sched.failed == [req] and req.req_id not in sched.running
+    assert req.generated == [7, 8]

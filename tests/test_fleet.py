@@ -10,8 +10,8 @@ from repro.configs.registry import get_arch
 from repro.core import Archive
 from repro.models.model import Model
 from repro.serving.engine import ServingEngine
-from repro.serving.fleet import (AutoscalePolicy, Fleet, ReplicaState,
-                                 spike_trace)
+from repro.serving.fleet import (AutoscalePolicy, Fleet, Replica,
+                                 ReplicaState, spike_trace)
 
 CFG = get_arch("smollm-360m").reduced()
 
@@ -169,6 +169,50 @@ def test_fleet_fails_fast_on_broken_cold_start():
     assert all("boom" in r.stats.error for r in fleet.replicas)
     assert req.state.value == "waiting"  # never dispatched, never wedged
     assert rep.n_done == 0 and rep.n_failed == 0
+
+
+def test_join_provision_timeout_resolves_to_failed():
+    """A provisioning thread still alive after the join timeout must leave
+    the replica FAILED with a distinct timeout error — not PROVISIONING
+    forever — and its eventual late engine attach must be reaped."""
+    import threading
+    gate = threading.Event()
+    sentinel = object()
+
+    def gated_factory():
+        gate.wait(30.0)  # wedged provision (hung IO / stuck compile)
+        return sentinel
+
+    r = Replica(0, gated_factory, lambda eng: None)
+    out = r.join_provision(timeout=0.05)
+    assert out is ReplicaState.FAILED
+    assert "timed out" in r.stats.error
+    assert r.discard_engine
+    # the thread eventually finishes and attaches its engine; poll() reaps
+    # it instead of reviving the replica
+    gate.set()
+    r._thread.join(30.0)
+    assert r.poll() is ReplicaState.FAILED
+    assert r.engine is None, "late engine attach must be discarded"
+
+
+def test_provision_deadline_fails_wedged_replica():
+    """AutoscalePolicy.provision_deadline_s: a hung provision past the
+    deadline resolves to FAILED on poll() so the supervisor can respawn."""
+    import threading
+    gate = threading.Event()
+
+    def gated_factory():
+        gate.wait(30.0)
+        return object()
+
+    r = Replica(1, gated_factory, lambda eng: None, deadline_s=0.05)
+    assert r.poll() is ReplicaState.PROVISIONING
+    time.sleep(0.08)
+    assert r.poll() is ReplicaState.FAILED
+    assert "deadline exceeded" in r.stats.error
+    assert r.discard_engine
+    gate.set()
 
 
 def test_fleet_foundry_tokens_match_single_engine(archive):

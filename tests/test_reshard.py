@@ -223,6 +223,51 @@ def test_abort_reshard_recovers_the_fleet(archive, reference):
     assert dead and all(r not in fleet._ready() for r in dead)
 
 
+def test_cutover_fault_aborts_switch_and_keeps_serving(archive, reference):
+    """An exception at the cutover boundary (injected at the
+    ``reshard.cutover`` fault site, which fires BEFORE any KV migration)
+    must abort the switch through ``abort_reshard``: the old generation
+    keeps serving, nothing is dropped, and a later switch succeeds."""
+    from repro.serving.faults import FaultPlan, FaultSpec, fault_plan
+
+    fleet = Fleet(factory_for_mesh=build, mode="foundry", archive=archive,
+                  policy=policy(), mesh=None)
+    fleet.start()
+    cycle = itertools.cycle(PROMPTS)
+    reqs = [fleet.submit(next(cycle), N_NEW) for _ in range(4)]
+    while not fleet._ready():
+        fleet.tick()
+        time.sleep(0.001)
+    for _ in range(3):
+        fleet.tick()  # requests are mid-stream when the switch starts
+    with fault_plan(FaultPlan(FaultSpec(site="reshard.cutover", times=1,
+                                        message="cutover chaos"))) as plan:
+        rep = fleet.reshard(make_host_mesh())
+        drive_through_switch(fleet, reqs, cycle)
+        assert plan.fired("reshard.cutover") == 1
+    assert rep.aborted is not None and "cutover failed" in rep.aborted
+    assert "cutover chaos" in rep.aborted
+    assert fleet._reshard is None
+    assert fleet.mesh is None, "aborted cutover must keep the old mesh"
+    assert rep.migrated_requests == 0, "fault fires before any migration"
+    # old generation serves every request to completion, tokens identical
+    fleet.run_trace([], seed=0)
+    fleet.drain_background()
+    frep = fleet.report()
+    assert frep.n_failed == 0 and frep.n_done == len(reqs)
+    for r in reqs:
+        assert tuple(r.generated) == reference[tuple(r.prompt)]
+    assert frep.summary()["fallback_compiles"] == 0
+    # the fleet is not wedged: the next switch (no fault armed) completes
+    rep2 = fleet.reshard(make_host_mesh())
+    drive_through_switch(fleet, reqs, cycle)
+    assert rep2.aborted is None and rep2.done
+    assert fleet.mesh is not None
+    fleet.run_trace([], seed=0)
+    frep = fleet.report()
+    assert frep.n_failed == 0 and frep.n_done == len(reqs)
+
+
 # ---------------------------------------------------------------------------
 # router policy: a load spike triggers reshard instead of scale-out
 # ---------------------------------------------------------------------------
