@@ -131,6 +131,34 @@ try:
     a.save(p)
     gate("RankDelta missing peer exits 2",
          check_main([p, "--no-ir", "--no-deep"]) == 2)
+
+    # ---- telemetry gates: a real LOAD under full observability ----------
+    # the exposition must lint clean, the trace must schema-check, and the
+    # pipelined LOAD must have emitted its stage spans
+    from repro.core import foundry_load, wait_for_background  # noqa: E402
+    from repro.obs import metrics as obs_metrics  # noqa: E402
+    from repro.obs import trace as obs_trace  # noqa: E402
+    from repro.obs import lint_exposition, validate_trace  # noqa: E402
+    import json  # noqa: E402
+
+    obs_metrics.enable()
+    trace_p = os.path.join(tmp, "load_trace.json")
+    _, lrep, _ = foundry_load(Archive.load(exact_path), None,
+                              trace_path=trace_p)
+    wait_for_background(lrep)
+    obs_metrics.disable()
+
+    lint = lint_exposition(obs_metrics.render())
+    gate("prometheus exposition lints clean", lint == [],
+         f"{lint[:2]}" if lint else "")
+    doc = json.load(open(trace_p))
+    schema = validate_trace(doc)
+    gate("chrome trace schema-checks clean", schema == [],
+         f"{schema[:2]}" if schema else "")
+    for span_name in ("load.fetch", "load.deserialize", "load.install"):
+        gate(f"trace has {span_name} spans",
+             bool(obs_trace.spans_named(doc, span_name)))
+    obs_metrics.reset()
 finally:
     shutil.rmtree(tmp, ignore_errors=True)
 

@@ -1,0 +1,303 @@
+"""[Fig 18] Unified telemetry: registry overhead, trace timelines, chaos.
+
+Three legs, all in-process (unmeshed, so no placeholder-rank subprocess):
+
+  A. **Overhead gate.** The same engine serves the same decode workload
+     with telemetry off and on, interleaved (off/on/off/on...) so drift
+     hits both arms equally. Hard gate: median TPOT with the registry +
+     tracer live must stay within 5% (plus a fixed epsilon for µs-scale
+     steps) of the disabled path — the one-global-read discipline
+     (``obs/metrics.py``) is a perf claim, so it is asserted, not eyeballed.
+
+  B. **Cold-start timeline.** A multi-spec archive is LOADed with tracing
+     on; the emitted Chrome/Perfetto trace must show the pipelined LOAD:
+     ``load.fetch`` / ``load.deserialize`` spans on their own stage
+     threads, at least one of them overlapping an install-thread span.
+     The registry's pipeline busy-seconds must equal ``LoadReport``'s to
+     the float — both are fed from the same ``span`` measurement.
+
+  C. **Fleet lifecycle + chaos.** A two-replica fleet serves traffic,
+     survives one chaos kill (salvage + respawn), then live-reshards
+     unmeshed -> (1,1). Registry counters must match ``FleetReport``
+     (crashes, respawns, salvaged, reshard outcome), the report summary
+     must carry the new ``queue_wait_p50_s``/``queue_wait_p95_s`` keys,
+     and the saved trace must validate and contain the
+     ``replica.provision`` / ``reshard.dual`` / ``reshard.cutover``
+     windows.
+
+Every leg also feeds the shared exposition gate: ``lint_exposition`` over
+the final ``render()`` must come back clean, and every trace document must
+pass ``validate_trace``.
+
+CLI: ``python -m benchmarks.fig18_observability [--quick]``. ``--quick``
+is the CI smoke mode: fewer requests and fewer overhead rounds, same hard
+gates — a telemetry perf or well-formedness regression exits nonzero.
+"""
+from __future__ import annotations
+
+import argparse
+import itertools
+import json
+import os
+import statistics
+import tempfile
+import time
+
+import jax
+
+from repro.configs.registry import get_arch
+from repro.core import (Archive, CaptureSpec, foundry_load, foundry_save,
+                        wait_for_background)
+from repro.launch.mesh import ShardCtx, make_host_mesh, resolve_mesh
+from repro.models.model import Model
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+from repro.obs import lint_exposition, validate_trace
+from repro.serving.engine import ServingEngine
+from repro.serving.faults import FaultPlan, FaultSpec, deactivate_all
+from repro.serving.fleet import AutoscalePolicy, Fleet
+
+CFG = get_arch("smollm-360m").reduced()
+PROMPTS = [[5, 9, 2], [11, 3], [7, 7, 7, 1], [2], [13, 4, 9]]
+
+# Leg A gate: 5% relative plus a fixed floor — reduced-config CPU decode
+# steps are tens of µs, where one scheduler hiccup exceeds any relative
+# bound. The epsilon is far below anything a real lock/allocation on the
+# step path would cost.
+TPOT_REL_BUDGET = 1.05
+TPOT_ABS_EPS_S = 25e-6
+
+
+def build(mesh=None):
+    eng = ServingEngine(Model(CFG, ShardCtx(mesh=resolve_mesh(mesh))),
+                        max_batch=4, max_seq=32, bucket_mode="pow2")
+    eng.load_weights(rng=jax.random.PRNGKey(7))
+    return eng
+
+
+# ---------------------------------------------------------------------------
+# leg A: overhead gate
+# ---------------------------------------------------------------------------
+def measure_tpot(eng, n_steps):
+    """Median seconds/step over a drained batch of short requests."""
+    cycle = itertools.cycle(PROMPTS)
+    for _ in range(4):
+        eng.submit(next(cycle), n_steps)
+    times = []
+    while eng.scheduler.pending:
+        t0 = time.perf_counter()
+        n = eng.step()
+        if n:
+            times.append((time.perf_counter() - t0) / 1)
+    return statistics.median(times)
+
+
+def leg_overhead(quick):
+    eng = build(None)
+    eng.cold_start_vanilla()
+    measure_tpot(eng, 8)  # warm every bucket before either arm times it
+    rounds, n_steps = (3, 8) if quick else (6, 16)
+    off, on = [], []
+    obs_trace.start()
+    obs_trace.stop()  # collector exists; arms below toggle recording only
+    for _ in range(rounds):  # interleave: drift lands on both arms
+        obs_metrics.disable()
+        off.append(measure_tpot(eng, n_steps))
+        obs_metrics.enable()
+        obs_trace.start(fresh=False)
+        on.append(measure_tpot(eng, n_steps))
+        obs_trace.stop()
+    obs_metrics.disable()
+    tpot_off, tpot_on = statistics.median(off), statistics.median(on)
+    budget = tpot_off * TPOT_REL_BUDGET + TPOT_ABS_EPS_S
+    assert tpot_on <= budget, (
+        f"telemetry overhead gate: TPOT {tpot_on * 1e6:.1f}us with obs on "
+        f"vs {tpot_off * 1e6:.1f}us off (budget {budget * 1e6:.1f}us)")
+    return [
+        ("fig18.tpot_obs_off", tpot_off * 1e6, "median_us_per_step"),
+        ("fig18.tpot_obs_on", tpot_on * 1e6,
+         f"gate=off*{TPOT_REL_BUDGET}+{TPOT_ABS_EPS_S * 1e6:.0f}us"),
+        ("fig18.tpot_overhead_pct",
+         max(0.0, (tpot_on / tpot_off - 1.0)) * 100.0, "asserted_lt_5pct"),
+    ]
+
+
+# ---------------------------------------------------------------------------
+# leg B: cold-start timeline
+# ---------------------------------------------------------------------------
+def _multi_spec_archive():
+    """An archive with several topology groups so the LOAD stage graph has
+    a real pipeline to overlap (a single-template archive degenerates to
+    fetch -> deserialize -> install in sequence)."""
+    m = Model(CFG, ShardCtx(mesh=None))
+    specs = []
+    for name, seq in (("decode_s32", 32), ("decode_s48", 48),
+                      ("decode_s64", 64)):
+        def make_args(bucket, seq=seq):
+            import jax.numpy as jnp
+            return (m.param_specs(), m.cache_specs(bucket, seq),
+                    jax.ShapeDtypeStruct((bucket,), jnp.int32))
+        specs.append(CaptureSpec(name, m.decode_step, make_args, [1, 2, 4],
+                                 donate_argnums=(1,)))
+    ar, _ = foundry_save(specs, None, meta={"arch": CFG.name})
+    return Archive.from_bytes(ar.to_bytes(), lazy=True)
+
+
+def leg_coldstart_trace(tmpdir):
+    ar = _multi_spec_archive()
+    trace_path = os.path.join(tmpdir, "coldstart_trace.json")
+    obs_metrics.enable()
+    _, rep, _ = foundry_load(ar, None, trace_path=trace_path)
+    wait_for_background(rep)
+    obs_metrics.disable()
+
+    doc = json.load(open(trace_path))
+    problems = validate_trace(doc)
+    assert problems == [], f"cold-start trace invalid: {problems[:3]}"
+    fetch = obs_trace.spans_named(doc, "load.fetch")
+    deser = obs_trace.spans_named(doc, "load.deserialize")
+    install = obs_trace.spans_named(doc, "load.install")
+    assert fetch and deser and install, "missing LOAD pipeline spans"
+    stage_tids = ({e["tid"] for e in fetch} | {e["tid"] for e in deser}
+                  | {e["tid"] for e in install})
+    assert len(stage_tids) >= 2, "LOAD stages all ran on one thread"
+    overlaps = sum(1 for a in fetch + deser for b in install
+                   if a["tid"] != b["tid"] and obs_trace.overlapping(a, b))
+    assert overlaps > 0, \
+        "no fetch/deserialize span overlapped an install span"
+
+    # one measurement, two consumers: registry == LoadReport to the float
+    busy = obs_metrics.REGISTRY.get("foundry_load_pipeline_busy_seconds_total")
+    for stage in ("fetch", "deserialize", "install"):
+        got, want = busy.value(stage=stage), rep.pipeline[f"{stage}_s"]
+        assert abs(got - want) < 1e-9, \
+            f"registry {stage} busy {got} != LoadReport {want}"
+    return [
+        ("fig18.load_pipeline_spans", float(len(fetch) + len(deser)
+                                            + len(install)),
+         f"threads={len(stage_tids)}"),
+        ("fig18.load_stage_overlaps", float(overlaps),
+         "fetch_or_deser_x_install"),
+    ]
+
+
+# ---------------------------------------------------------------------------
+# leg C: fleet lifecycle + chaos under full telemetry
+# ---------------------------------------------------------------------------
+def leg_fleet_chaos(tmpdir, quick):
+    ar, _ = build(None).save_archive()
+    ar = Archive.from_bytes(ar.to_bytes(), lazy=True)
+    trace_path = os.path.join(tmpdir, "fleet_trace.json")
+    n_reqs = 8 if quick else 16
+    obs_metrics.enable()
+    fleet = Fleet(factory_for_mesh=build, mode="foundry", archive=ar,
+                  policy=AutoscalePolicy(min_replicas=2, max_replicas=2,
+                                         target_inflight_per_replica=64,
+                                         scale_down_idle_ticks=10_000),
+                  mesh=None, name="fig18", trace_path=trace_path)
+    plan = FaultPlan().activate()
+    try:
+        fleet.start()
+        cycle = itertools.cycle(PROMPTS)
+        reqs = []
+
+        def tick_until(cond, what, budget=8000):
+            for _ in range(budget):
+                if cond():
+                    return
+                if len(reqs) < n_reqs:
+                    reqs.append(fleet.submit(next(cycle), 5))
+                if fleet.tick() == 0:
+                    time.sleep(0.001)
+            raise AssertionError(f"fig18: {what} not reached")
+
+        tick_until(lambda: len(fleet._ready()) >= 2, "initial provision")
+        tick_until(lambda: fleet.inflight() > 0, "traffic in flight")
+
+        # chaos: kill the busiest replica, expect salvage + respawn
+        tgt = max(fleet._ready(), key=lambda r: r.load)
+        plan.add(FaultSpec(site="engine.decode_step",
+                           tag=f"replica{tgt.stats.replica_id}", times=1,
+                           message="fig18 chaos kill"))
+        tick_until(lambda: fleet.crashes >= 1, "chaos kill")
+        tick_until(lambda: len(fleet._ready()) >= 2, "respawn recovery")
+
+        # live reshard to the (1,1) mesh with traffic still flowing
+        rrep = fleet.reshard(make_host_mesh())
+        tick_until(lambda: fleet._reshard is None, "reshard completion")
+        assert rrep.done and rrep.aborted is None
+
+        tick_until(lambda: len(reqs) >= n_reqs
+                   and fleet._unresolved() == 0, "drain")
+        fleet.drain_background()
+        frep = fleet.report()
+    finally:
+        deactivate_all()
+    obs_metrics.disable()
+
+    s = frep.summary()
+    assert frep.n_failed == 0, f"lost requests: {frep.n_failed}"
+    # the new queue-wait measurement is populated and ordered below TTFT
+    assert s["queue_wait_p50_s"] is not None
+    assert s["queue_wait_p95_s"] is not None
+    assert s["queue_wait_p50_s"] <= s["ttft_p50_s"] + 1e-9
+
+    # registry == FleetReport, fed at the same code points
+    v = obs_metrics.value
+    assert v("fleet_crashes_total") == float(frep.crashes)
+    assert v("fleet_respawns_total") == float(frep.respawns)
+    assert v("fleet_salvaged_requests_total") == float(
+        frep.salvaged_requests)
+    assert v("fleet_crash_requeued_requests_total") == float(
+        frep.crash_requeued_requests)
+    assert v("fleet_reshard_total", {"outcome": "completed"}) == 1.0
+
+    doc = json.load(open(trace_path))
+    problems = validate_trace(doc)
+    assert problems == [], f"fleet trace invalid: {problems[:3]}"
+    for name in ("replica.provision", "reshard.dual", "reshard.cutover"):
+        assert obs_trace.spans_named(doc, name), f"missing {name} span"
+    dual = obs_trace.spans_named(doc, "reshard.dual")[0]
+    cut = obs_trace.spans_named(doc, "reshard.cutover")[0]
+    assert dual["ts"] + dual["dur"] <= cut["ts"] + 1, \
+        "DUAL window must end where CUTOVER begins"
+    return [
+        ("fig18.fleet_crash_contained", float(frep.crashes),
+         f"salvaged={frep.salvaged_requests};"
+         f"requeued={frep.crash_requeued_requests}"),
+        ("fig18.fleet_queue_wait_p95_us", s["queue_wait_p95_s"] * 1e6,
+         "separate_from_ttft"),
+        ("fig18.fleet_trace_events", float(len(doc["traceEvents"])),
+         "validated_chrome_trace"),
+    ]
+
+
+def run(quick: bool = False):
+    obs_metrics.reset()
+    rows = []
+    with tempfile.TemporaryDirectory() as tmpdir:
+        rows += leg_overhead(quick)
+        rows += leg_coldstart_trace(tmpdir)
+        rows += leg_fleet_chaos(tmpdir, quick)
+    # the accumulated exposition from all three legs must parse clean
+    obs_metrics.enable()
+    text = obs_metrics.render()
+    obs_metrics.disable()
+    problems = lint_exposition(text)
+    assert problems == [], f"exposition lint: {problems[:3]}"
+    rows.append(("fig18.exposition_series",
+                 float(sum(1 for ln in text.splitlines()
+                           if ln and not ln.startswith("#"))),
+                 "lint_clean"))
+    obs_metrics.reset()
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: fewer requests/rounds, same overhead "
+                         "and well-formedness gates")
+    args = ap.parse_args()
+    emit(run(quick=args.quick), figure="fig18_observability")

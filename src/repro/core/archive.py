@@ -42,6 +42,7 @@ from typing import Any, Dict, Iterator, Optional
 
 import msgpack
 
+from repro.obs import metrics as obs_metrics
 from repro.serving.faults import fault_point
 
 try:
@@ -52,6 +53,13 @@ except ImportError:  # archives remain readable/writable via stdlib zlib
 MAGIC = b"FNDRYJX1"
 MAGIC2 = b"FNDRYJX2"
 _ZSTD_FRAME_MAGIC = b"\x28\xb5\x2f\xfd"
+
+# docs/architecture.md §13 has the full metric catalog
+_M_BLOB_FETCH = obs_metrics.counter(
+    "depot_blob_fetch_total",
+    "BlobStore reads by result: hit = served from the in-memory cache, "
+    "miss = read + decompressed + verified from the backing source.",
+    ("result",))
 
 
 def io_retries(fn, what: str, *, attempts: int = 3,
@@ -161,6 +169,7 @@ class BlobStore:
         while True:
             with self._lock:
                 if h in self._data:
+                    _M_BLOB_FETCH.inc(result="hit")
                     return self._data[h]
                 if h not in self._index:
                     raise KeyError(h)
@@ -204,6 +213,7 @@ class BlobStore:
                 with self._lock:
                     self._data[h] = data
                     self._verified.add(h)
+                _M_BLOB_FETCH.inc(result="miss")
                 return data
             finally:
                 with self._lock:

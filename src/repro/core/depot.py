@@ -41,8 +41,21 @@ from typing import Any, Callable, Dict, List
 
 from repro.core.archive import (Archive, BlobStore, _compress, content_hash,
                                 io_retries)
+from repro.obs import metrics as obs_metrics
 
 _INDEX_VERSION = 1
+
+# docs/architecture.md §13 has the full metric catalog
+_M_DEDUP_HITS = obs_metrics.counter(
+    "depot_dedup_hits_total",
+    "ensure_blob calls satisfied by an already-deposited blob "
+    "(data_fn never called, nothing written).")
+_M_DEPOSITS = obs_metrics.counter(
+    "depot_blobs_written_total",
+    "Blobs compressed and deposited into the content-addressed store.")
+_M_DEDUP_RATIO = obs_metrics.gauge(
+    "depot_dedup_ratio",
+    "Logical raw bytes over physical raw bytes (refreshed by stats()).")
 
 
 class _DepotSource:
@@ -128,6 +141,7 @@ class TemplateDepot:
         with self._lock:
             meta = self._index["blobs"].get(h)
             if meta is not None:
+                _M_DEDUP_HITS.inc()
                 return meta["comp_len"], meta["raw_len"]
         data = data_fn()
         if content_hash(data) != h:
@@ -146,6 +160,7 @@ class TemplateDepot:
                 h, {"comp_len": len(comp), "raw_len": len(data), "refs": []})
             meta = self._index["blobs"][h]
             self.store.register(h, (0, meta["comp_len"], meta["raw_len"]))
+            _M_DEPOSITS.inc()
             return meta["comp_len"], meta["raw_len"]
 
     def has_blob(self, h: str) -> bool:
@@ -281,6 +296,8 @@ class TemplateDepot:
                     "raw_bytes": entry["logical_raw_bytes"],
                     "manifest_bytes": entry["manifest_bytes"],
                 }
+            _M_DEDUP_RATIO.set(logical_raw / physical_raw
+                               if physical_raw else 1.0)
             return {
                 "archives": len(per_archive),
                 "blobs": len(blobs),

@@ -24,6 +24,7 @@ Phase timings are recorded for the paper's Figure 8 breakdown.
 from __future__ import annotations
 
 import dataclasses
+import logging
 import pickle
 import time
 from dataclasses import dataclass, field
@@ -37,6 +38,8 @@ from repro.core.memory_plan import MemoryPlan
 from repro.core.rank_stamp import build_rank_deltas
 from repro.core.templates import TopologyGroup, group_buckets
 from repro.core.topology import topology_key
+
+log = logging.getLogger("repro.core.materialize")
 
 
 @dataclass
@@ -168,10 +171,13 @@ def foundry_save(specs: Sequence[CaptureSpec], mesh, *,
         }
         report["specs"][spec.name] = srep
         if verbose:
-            print(f"[SAVE:{spec.name}] {len(spec.buckets)} buckets -> "
-                  f"{len(groups)} templates "
-                  f"(trace {srep['trace_s']:.2f}s export {srep['export_s']:.2f}s "
-                  f"compile+ser {srep['compile_serialize_s']:.2f}s)")
+            from repro.obs import configure_logging
+            configure_logging()
+            log.info("[SAVE:%s] %d buckets -> %d templates "
+                     "(trace %.2fs export %.2fs compile+ser %.2fs)",
+                     spec.name, len(spec.buckets), len(groups),
+                     srep["trace_s"], srep["export_s"],
+                     srep["compile_serialize_s"])
 
     capture_identity = _mesh_identity(mesh)
     ar.manifest = {

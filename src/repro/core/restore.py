@@ -53,6 +53,7 @@ three-way decision (docs/architecture.md has the full diagram):
 """
 from __future__ import annotations
 
+import logging
 import pickle
 import queue
 import threading
@@ -70,7 +71,38 @@ from repro.core.memory_plan import MemoryPlan
 from repro.core.rank_stamp import (ReshardingExecutable, deployment_deltas,
                                    stamp_template)
 from repro.core.templates import ProgramSet, TopologyGroup
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+from repro.obs.trace import span
 from repro.serving.faults import fault_point
+
+log = logging.getLogger("repro.core.restore")
+
+# docs/architecture.md §13 has the full metric catalog
+_M_LOADS = obs_metrics.counter(
+    "foundry_load_total", "Completed LOADs by mesh-rebind decision.",
+    ("rebind",))
+_M_PHASE = obs_metrics.histogram(
+    "foundry_load_phase_seconds",
+    "Critical-path LOAD phase durations (same measurement as "
+    "LoadReport.phases).", ("phase",))
+_M_PIPE_BUSY = obs_metrics.counter(
+    "foundry_load_pipeline_busy_seconds_total",
+    "Busy seconds per LOAD template stage-graph stage.", ("stage",))
+_M_FALLBACK = obs_metrics.counter(
+    "foundry_load_fallback_compiles_total",
+    "Critical-path compile-from-StableHLO events (template economics lost).")
+_M_STAMPED = obs_metrics.counter(
+    "foundry_load_rank_stamped_total",
+    "Template x deployment-rank stampings on the stamped rebind path.")
+_M_BG_ERRORS = obs_metrics.counter(
+    "foundry_load_background_errors_total",
+    "Background exact-bucket realizations that failed (bucket stays "
+    "pad-served).")
+_M_TEMPLATES_REUSED = obs_metrics.counter(
+    "foundry_load_templates_reused_total",
+    "Templates served from the archive's deserialized-template cache "
+    "(no fetch, no deserialize).")
 
 
 @dataclass
@@ -227,21 +259,24 @@ class _TemplatePipeline:
         return False
 
     def _fetch_stage(self):
+        obs_trace.set_thread_name("load.fetch")
         for job in self.jobs:
             if self._aborted:
                 return
-            t0 = time.perf_counter()
-            try:
-                if job.blob_hash is not None:
-                    job.blob = self.archive.get_blob(job.blob_hash)
-            except BaseException as e:
-                job.error, job.error_stage = e, "fetch"
-            self.busy["fetch_s"] += time.perf_counter() - t0
+            with span("load.fetch", cat="load",
+                      group=job.group.key[:12]) as sp:
+                try:
+                    if job.blob_hash is not None:
+                        job.blob = self.archive.get_blob(job.blob_hash)
+                except BaseException as e:
+                    job.error, job.error_stage = e, "fetch"
+            self.busy["fetch_s"] += sp.seconds
             if not self._put(self._fetched, job):
                 return
         self._put(self._fetched, _DONE)
 
     def _deserialize_stage(self):
+        obs_trace.set_thread_name("load.deserialize")
         while True:
             try:
                 job = self._fetched.get(timeout=0.05)
@@ -252,14 +287,16 @@ class _TemplatePipeline:
             if job is _DONE:
                 self._put(self._ready, _DONE)
                 return
-            t0 = time.perf_counter()
-            if job.error is None and job.deserialize and job.blob is not None:
-                try:
-                    job.exe = _deserialize_template(job.blob)
-                except BaseException as e:
-                    job.error, job.error_stage = e, "deserialize"
-            job.blob = None  # stage 2 owns the last reference to the bytes
-            self.busy["deserialize_s"] += time.perf_counter() - t0
+            with span("load.deserialize", cat="load",
+                      group=job.group.key[:12]) as sp:
+                if job.error is None and job.deserialize and \
+                        job.blob is not None:
+                    try:
+                        job.exe = _deserialize_template(job.blob)
+                    except BaseException as e:
+                        job.error, job.error_stage = e, "deserialize"
+                job.blob = None  # stage 2 owns the last ref to the bytes
+            self.busy["deserialize_s"] += sp.seconds
             if not self._put(self._ready, job):
                 return
 
@@ -283,7 +320,8 @@ def foundry_load(archive: Archive, mesh, *,
                  warm: bool = False,
                  reuse_templates: bool = True,
                  strict: bool = True,
-                 verbose: bool = False) -> tuple[Dict[str, ProgramSet], LoadReport, Optional[MemoryPlan]]:
+                 verbose: bool = False,
+                 trace_path: Optional[str] = None) -> tuple[Dict[str, ProgramSet], LoadReport, Optional[MemoryPlan]]:
     """Restore executables from an archive. Returns
     ({spec_name: ProgramSet}, report, load_side_memory_plan).
 
@@ -310,18 +348,50 @@ def foundry_load(archive: Archive, mesh, *,
     fallback-compiling that template. The pre-flight is metadata-only (no
     blob fetches, no IR deserialization) so its cost — recorded as
     ``phases["verify_s"]`` — is negligible next to the LOAD critical path
-    (the fig13 --quick gate asserts < 5%)."""
+    (the fig13 --quick gate asserts < 5%).
+
+    ``trace_path`` writes a Chrome/Perfetto trace-event JSON file of this
+    LOAD on return (starting tracing for the call if it was not already
+    active); load it at https://ui.perfetto.dev to see the fetch /
+    deserialize / install stages overlap on their threads."""
+    if verbose:
+        from repro.obs import configure_logging
+        configure_logging()
+    trace_started_here = False
+    if trace_path is not None and not obs_trace.active():
+        obs_trace.start()
+        trace_started_here = True
+    try:
+        return _foundry_load(
+            archive, mesh, make_args=make_args, spec_names=spec_names,
+            background_exact=background_exact,
+            background_threads=background_threads,
+            kernel_catalog=kernel_catalog, allow_stamping=allow_stamping,
+            pipeline_depth=pipeline_depth, warm=warm,
+            reuse_templates=reuse_templates, strict=strict)
+    finally:
+        if trace_path is not None:
+            obs_trace.save(trace_path)
+        if trace_started_here:
+            obs_trace.stop()
+
+
+def _foundry_load(archive: Archive, mesh, *, make_args, spec_names,
+                  background_exact, background_threads, kernel_catalog,
+                  allow_stamping, pipeline_depth, warm, reuse_templates,
+                  strict):
     rep = LoadReport(warm=warm)
-    t0 = time.perf_counter()
-    manifest = archive.manifest
-    rep.phases["parse_s"] = time.perf_counter() - t0
+    obs_trace.set_thread_name("load.install+main")
+    with span("load.parse", cat="load") as sp:
+        manifest = archive.manifest
+    rep.phases["parse_s"] = sp.seconds
 
     if strict:
         from repro.analysis.checker import (ArchiveVerificationError, errors,
                                             verify_for_load)
-        t0 = time.perf_counter()
-        findings = verify_for_load(archive)
-        rep.phases["verify_s"] = time.perf_counter() - t0
+        with span("load.verify", cat="load") as sp:
+            findings = verify_for_load(archive)
+        rep.phases["verify_s"] = sp.seconds
         if errors(findings):
             raise ArchiveVerificationError(findings, rep)
 
@@ -336,9 +406,9 @@ def foundry_load(archive: Archive, mesh, *,
 
     rank_deltas = None
     if rep.restore_path == "stamped":
-        t0 = time.perf_counter()
-        rank_deltas = deployment_deltas(mesh, manifest)
-        rep.phases["rank_delta_s"] = time.perf_counter() - t0
+        with span("load.rank_delta", cat="load") as sp:
+            rank_deltas = deployment_deltas(mesh, manifest)
+        rep.phases["rank_delta_s"] = sp.seconds
 
     # --- enumerate template jobs and start the stage graph ----------------
     # (fetch + deserialize overlap the prealloc / kernel-prime phases below)
@@ -379,80 +449,89 @@ def foundry_load(archive: Archive, mesh, *,
 
     try:
         # --- memory plan: preallocate + capture-window replay -------------
-        t0 = time.perf_counter()
-        plan = None
-        if manifest.get("memory_plan"):
-            plan = MemoryPlan.for_load(manifest["memory_plan"])
-            if not warm:
-                # a warm process (live reshard) already has the recorded
-                # extent mapped; re-preallocating would double the footprint
-                plan.preallocate()
-        rep.phases["prealloc_s"] = time.perf_counter() - t0
+        with span("load.prealloc", cat="load") as sp:
+            plan = None
+            if manifest.get("memory_plan"):
+                plan = MemoryPlan.for_load(manifest["memory_plan"])
+                if not warm:
+                    # a warm process (live reshard) already has the recorded
+                    # extent mapped; re-preallocating would double the
+                    # footprint
+                    plan.preallocate()
+        rep.phases["prealloc_s"] = sp.seconds
 
         # --- kernel catalog prime -----------------------------------------
-        t0 = time.perf_counter()
-        if kernel_catalog is not None and manifest.get("kernel_catalog"):
-            kernel_catalog.prime(manifest["kernel_catalog"], archive)
-        rep.phases["kernel_load_s"] = time.perf_counter() - t0
+        with span("load.kernel_load", cat="load") as sp:
+            if kernel_catalog is not None and manifest.get("kernel_catalog"):
+                kernel_catalog.prime(manifest["kernel_catalog"], archive)
+        rep.phases["kernel_load_s"] = sp.seconds
 
         # --- install stage: stamp + hot-swap as groups leave the pipe -----
         t0 = time.perf_counter()
         for job in pipe:
             g, exe = job.group, job.exe
-            fault_point("restore.install", tag=g.key)
-            if g.executable_blob:
-                if (reuse_templates and job.deserialize and exe is not None
-                        and g.executable_blob not in tcache):
-                    tcache[g.executable_blob] = exe  # unwrapped: wrappers
-                    # below are per-LOAD (donation ownership is per engine)
-                if exe is not None and rep.restore_path == "stamped":
-                    try:
-                        exe = stamp_template(exe, rank_deltas,
-                                             capture_identity, mesh,
-                                             job.donate)
-                        rep.rank_stamped += len(rank_deltas)
-                    except Exception as e:
-                        job.error, job.error_stage = e, "stamp"
-                        exe = None  # degrade to fallback below
-                if exe is None:
-                    if strict and job.error_stage == "fetch":
-                        # a fetch failure is the archive lying about its own
-                        # contents (hash mismatch, truncated section, missing
-                        # depot blob) — strict LOAD refuses it rather than
-                        # hiding the corruption behind a fallback compile.
-                        # Deserialize/stamp failures still degrade: they are
-                        # environment-side (capture devices unavailable).
-                        from repro.analysis.checker import (
-                            ArchiveVerificationError, Finding)
-                        raise ArchiveVerificationError([Finding(
-                            "blob-integrity", "error",
-                            f"blob/{(job.blob_hash or '?')[:12]}",
-                            f"template blob for group {g.key[:12]} failed to "
-                            f"fetch: {type(job.error).__name__}: {job.error}",
-                            "the archive is corrupt; re-run SAVE")], rep)
-                    # fallback decision, deserialize/stamp failure, or
-                    # capture devices unavailable: last-resort rebind via
-                    # compile-from-StableHLO (the blob is already cache-hot
-                    # when the fetch stage prefetched it)
-                    if job.error is not None and verbose:
-                        print(f"[LOAD] template for group {g.key[:12]} "
-                              f"unusable ({type(job.error).__name__}: "
-                              f"{job.error}); falling back to compile")
-                    rep.fallback_compiles += 1
-                    exe = ReshardingExecutable(_compile_from_export(
-                        archive, g.bucket_export_blobs[g.template_bucket],
-                        mesh, capture_identity, donate_argnums=job.donate),
-                        job.donate)
-                elif not isinstance(exe, ReshardingExecutable):
-                    # exact path: a DESERIALIZED template must never donate a
-                    # caller buffer produced by device_put (XLA-CPU crash;
-                    # rank_stamp.ReshardingExecutable docstring). The wrapper
-                    # copies host-touched donated leaves once and passes its
-                    # own fed-back outputs through untouched, so the donated
-                    # KV cache of steady-state decode stays zero-copy.
-                    exe = ReshardingExecutable(exe, job.donate)
-                job.ps.set_template(g.key, exe)
-            rep.n_templates += 1
+            with span("load.install", cat="load", group=g.key[:12]):
+                fault_point("restore.install", tag=g.key)
+                if g.executable_blob:
+                    if (reuse_templates and job.deserialize
+                            and exe is not None
+                            and g.executable_blob not in tcache):
+                        tcache[g.executable_blob] = exe  # unwrapped: wrappers
+                        # below are per-LOAD (donation ownership per engine)
+                    if exe is not None and rep.restore_path == "stamped":
+                        try:
+                            exe = stamp_template(exe, rank_deltas,
+                                                 capture_identity, mesh,
+                                                 job.donate)
+                            rep.rank_stamped += len(rank_deltas)
+                        except Exception as e:
+                            job.error, job.error_stage = e, "stamp"
+                            exe = None  # degrade to fallback below
+                    if exe is None:
+                        if strict and job.error_stage == "fetch":
+                            # a fetch failure is the archive lying about its
+                            # own contents (hash mismatch, truncated section,
+                            # missing depot blob) — strict LOAD refuses it
+                            # rather than hiding the corruption behind a
+                            # fallback compile. Deserialize/stamp failures
+                            # still degrade: they are environment-side
+                            # (capture devices unavailable).
+                            from repro.analysis.checker import (
+                                ArchiveVerificationError, Finding)
+                            raise ArchiveVerificationError([Finding(
+                                "blob-integrity", "error",
+                                f"blob/{(job.blob_hash or '?')[:12]}",
+                                f"template blob for group {g.key[:12]} "
+                                f"failed to fetch: "
+                                f"{type(job.error).__name__}: {job.error}",
+                                "the archive is corrupt; re-run SAVE")], rep)
+                        # fallback decision, deserialize/stamp failure, or
+                        # capture devices unavailable: last-resort rebind via
+                        # compile-from-StableHLO (the blob is already
+                        # cache-hot when the fetch stage prefetched it)
+                        if job.error is not None:
+                            log.warning(
+                                "template for group %s unusable (%s: %s); "
+                                "falling back to compile", g.key[:12],
+                                type(job.error).__name__, job.error)
+                        rep.fallback_compiles += 1
+                        _M_FALLBACK.inc()
+                        exe = ReshardingExecutable(_compile_from_export(
+                            archive,
+                            g.bucket_export_blobs[g.template_bucket],
+                            mesh, capture_identity,
+                            donate_argnums=job.donate), job.donate)
+                    elif not isinstance(exe, ReshardingExecutable):
+                        # exact path: a DESERIALIZED template must never
+                        # donate a caller buffer produced by device_put
+                        # (XLA-CPU crash; rank_stamp.ReshardingExecutable
+                        # docstring). The wrapper copies host-touched donated
+                        # leaves once and passes its own fed-back outputs
+                        # through untouched, so the donated KV cache of
+                        # steady-state decode stays zero-copy.
+                        exe = ReshardingExecutable(exe, job.donate)
+                    job.ps.set_template(g.key, exe)
+                rep.n_templates += 1
         rep.phases["templates_s"] = time.perf_counter() - t0
     except BaseException:
         pipe.abort()  # unblock stage threads; they exit, dropping blobs
@@ -466,6 +545,7 @@ def foundry_load(archive: Archive, mesh, *,
         err_lock = threading.Lock()
 
         def worker(chunk):
+            obs_trace.set_thread_name("load.background")
             for ps, g, b, donate in chunk:
                 try:
                     exe = _compile_from_export(
@@ -484,9 +564,9 @@ def foundry_load(archive: Archive, mesh, *,
                         if rep.background_first_error is None:
                             rep.background_first_error = (
                                 f"bucket {b}: {type(e).__name__}: {e}")
-                    if verbose:
-                        print(f"[LOAD] background exact realization FAILED "
-                              f"for bucket {b}: {type(e).__name__}: {e}")
+                    _M_BG_ERRORS.inc()
+                    log.warning("background exact realization FAILED for "
+                                "bucket %s: %s: %s", b, type(e).__name__, e)
 
         chunks = [pending_exact[i::background_threads]
                   for i in range(background_threads)]
@@ -497,15 +577,26 @@ def foundry_load(archive: Archive, mesh, *,
         rep._bg_threads = threads  # joinable by callers/tests
         rep.phases["background_spawn_s"] = time.perf_counter() - t_bg
 
-    if verbose:
-        print(f"[LOAD:{rep.restore_path}] {rep.n_templates} templates over "
-              f"{rep.n_buckets} buckets in {rep.critical_path_s * 1e3:.1f} ms "
-              f"(parse {rep.phases['parse_s']*1e3:.1f} ms, install "
-              f"{rep.phases['templates_s']*1e3:.1f} ms, pipeline fetch "
-              f"{rep.pipeline['fetch_s']*1e3:.1f} ms / deserialize "
-              f"{rep.pipeline['deserialize_s']*1e3:.1f} ms, "
-              f"rank_stamped={rep.rank_stamped}, "
-              f"fallback_compiles={rep.fallback_compiles})")
+    # --- registry feed: same measurements the report just recorded --------
+    if obs_metrics.enabled():
+        _M_LOADS.inc(rebind="stamped" if rep.rank_stamped else "compatible")
+        for k, v in rep.phases.items():
+            _M_PHASE.observe(v, phase=k[:-2] if k.endswith("_s") else k)
+        for stage in ("fetch", "deserialize", "install"):
+            _M_PIPE_BUSY.inc(rep.pipeline[f"{stage}_s"], stage=stage)
+        if rep.rank_stamped:
+            _M_STAMPED.inc(rep.rank_stamped)
+        if rep.templates_reused:
+            _M_TEMPLATES_REUSED.inc(rep.templates_reused)
+
+    log.info("[LOAD:%s] %d templates over %d buckets in %.1f ms "
+             "(parse %.1f ms, install %.1f ms, pipeline fetch %.1f ms / "
+             "deserialize %.1f ms, rank_stamped=%d, fallback_compiles=%d)",
+             rep.restore_path, rep.n_templates, rep.n_buckets,
+             rep.critical_path_s * 1e3, rep.phases["parse_s"] * 1e3,
+             rep.phases["templates_s"] * 1e3, rep.pipeline["fetch_s"] * 1e3,
+             rep.pipeline["deserialize_s"] * 1e3, rep.rank_stamped,
+             rep.fallback_compiles)
     return program_sets, rep, plan
 
 
@@ -578,5 +669,5 @@ def wait_for_background(rep: LoadReport, timeout: float = 300.0,
     for t in getattr(rep, "_bg_threads", []):
         t.join(timeout)
     if verbose and rep.background_errors:
-        print(f"[LOAD] {rep.background_errors} background exact "
-              f"realization(s) failed; first: {rep.background_first_error}")
+        log.warning("%d background exact realization(s) failed; first: %s",
+                    rep.background_errors, rep.background_first_error)

@@ -31,6 +31,9 @@ import jax
 from repro.configs.registry import get_arch
 from repro.core import Archive, TemplateDepot
 from repro.models.model import Model
+from repro.obs import configure_logging
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.serving.engine import ServingEngine
 from repro.serving.fleet import AutoscalePolicy, Fleet, spike_trace
 from repro.serving.router import ModelPolicy, ModelRouter
@@ -134,6 +137,65 @@ def run_zoo(args):
     print(json.dumps(router.report().summary(), indent=1, default=str))
 
 
+def _serve_metrics_http(port: int):
+    """Serve the live Prometheus exposition at /metrics on a daemon thread.
+    Stdlib only; dies with the process (this is a demo endpoint, not a
+    production server)."""
+    import threading
+    from http.server import BaseHTTPRequestHandler, HTTPServer
+
+    class Handler(BaseHTTPRequestHandler):
+        def do_GET(self):
+            if self.path.split("?")[0].rstrip("/") in ("", "/metrics"):
+                body = obs_metrics.render().encode()
+                self.send_response(200)
+                self.send_header("Content-Type",
+                                 "text/plain; version=0.0.4; charset=utf-8")
+                self.send_header("Content-Length", str(len(body)))
+                self.end_headers()
+                self.wfile.write(body)
+            else:
+                self.send_error(404)
+
+        def log_message(self, *a):  # keep serving output clean
+            pass
+
+    srv = HTTPServer(("127.0.0.1", port), Handler)
+    threading.Thread(target=srv.serve_forever, daemon=True).start()
+    print(f"metrics endpoint: http://127.0.0.1:{srv.server_address[1]}"
+          f"/metrics")
+    return srv
+
+
+def _obs_setup(args):
+    if args.metrics_port is not None and args.metrics is None:
+        args.metrics = "-"
+    if args.metrics is not None:
+        obs_metrics.enable()
+    if args.trace_out and not obs_trace.active():
+        obs_trace.start()
+    if args.metrics is not None or args.trace_out:
+        configure_logging()
+    if args.metrics_port is not None:
+        _serve_metrics_http(args.metrics_port)
+
+
+def _obs_finish(args):
+    if args.trace_out and obs_trace.active():
+        obs_trace.save(args.trace_out)
+        obs_trace.stop()
+        print(f"trace -> {args.trace_out}")
+    if args.metrics is not None:
+        text = obs_metrics.render()
+        if args.metrics == "-":
+            print("---- metrics ----")
+            print(text, end="")
+        else:
+            with open(args.metrics, "w") as f:
+                f.write(text)
+            print(f"metrics -> {args.metrics}")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch",
@@ -172,8 +234,27 @@ def main():
                     help="run the static verifier (repro.analysis.check) "
                          "over --load/--depot before serving; refuse to "
                          "serve artifacts with error findings")
+    ap.add_argument("--metrics", default=None, metavar="PATH",
+                    help="enable the metrics registry and dump the "
+                         "Prometheus text exposition to PATH at exit "
+                         "('-' for stdout)")
+    ap.add_argument("--metrics-port", type=int, default=None, metavar="N",
+                    help="also serve the live exposition at "
+                         "http://127.0.0.1:N/metrics (implies --metrics -)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="record structured spans and write a "
+                         "Chrome/Perfetto trace-event JSON to PATH at exit "
+                         "(open in ui.perfetto.dev or chrome://tracing)")
     args = ap.parse_args()
 
+    _obs_setup(args)
+    try:
+        _run(args, ap)
+    finally:
+        _obs_finish(args)
+
+
+def _run(args, ap):
     if args.check:
         from repro.analysis.check import main as check_main
         targets = [t for t in (args.load, args.depot) if t]

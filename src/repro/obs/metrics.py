@@ -1,0 +1,590 @@
+"""Process-wide metrics registry with Prometheus text exposition.
+
+Design goals, in priority order:
+
+1. **Near-zero cost when disabled.** Serving code declares its metrics at
+   module import time and calls ``inc()`` / ``observe()`` unconditionally
+   from hot paths (the decode step, the scheduler tick).  Every mutator
+   starts with a single module-global read — the same discipline as
+   ``faults.fault_point()`` — and returns immediately when collection is
+   off.  Nothing is allocated, no label tuple is built, no lock is taken.
+
+2. **Bounded label cardinality.** Prometheus outages are almost always
+   cardinality explosions (a request id or a hash smuggled into a label).
+   Every metric carries a hard cap on the number of distinct label sets
+   (default ``MAX_LABEL_SETS``); exceeding it raises
+   :class:`LabelCardinalityError` at the call site instead of silently
+   growing without bound.
+
+3. **One source of truth.** The legacy report dataclasses
+   (``LoadReport``, ``FleetReport``, ...) and the registry are fed from
+   the *same* measurement at the same code point, so the numbers cannot
+   disagree; ``fig18_observability`` asserts the equality.
+
+The module is intentionally dependency-free (stdlib only) and must not
+import anything from the rest of ``repro`` — it sits below every layer
+that uses it.
+"""
+from __future__ import annotations
+
+import math
+import re
+import threading
+from bisect import bisect_left
+from contextlib import contextmanager
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "LabelCardinalityError",
+    "MetricsRegistry",
+    "REGISTRY",
+    "counter",
+    "gauge",
+    "histogram",
+    "enable",
+    "disable",
+    "enabled",
+    "enabled_scope",
+    "render",
+    "reset",
+    "value",
+    "lint_exposition",
+]
+
+# One global read on the hot path.  Flipped only by enable()/disable().
+_ENABLED = False
+
+#: default hard cap on distinct label sets per metric
+MAX_LABEL_SETS = 64
+
+#: default histogram buckets — spans µs-scale decode steps up to
+#: minute-scale cold starts (seconds).
+DEFAULT_BUCKETS: Tuple[float, ...] = (
+    1e-4, 2.5e-4, 5e-4, 1e-3, 2.5e-3, 5e-3, 1e-2, 2.5e-2, 5e-2,
+    0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0, 30.0, 60.0,
+)
+
+_NAME_RE = re.compile(r"^[a-zA-Z_:][a-zA-Z0-9_:]*$")
+_LABEL_RE = re.compile(r"^[a-zA-Z_][a-zA-Z0-9_]*$")
+
+
+def enable() -> None:
+    """Turn collection on (mutators start recording)."""
+    global _ENABLED
+    _ENABLED = True
+
+
+def disable() -> None:
+    """Turn collection off (mutators become one-global-read no-ops)."""
+    global _ENABLED
+    _ENABLED = False
+
+
+def enabled() -> bool:
+    return _ENABLED
+
+
+@contextmanager
+def enabled_scope(on: bool = True) -> Iterator[None]:
+    """Temporarily enable (or disable) collection; restores on exit."""
+    global _ENABLED
+    prev = _ENABLED
+    _ENABLED = on
+    try:
+        yield
+    finally:
+        _ENABLED = prev
+
+
+class LabelCardinalityError(RuntimeError):
+    """A metric exceeded its cap on distinct label sets.
+
+    Raised at the offending call site: an unbounded label value (request
+    id, blob hash, timestamp) is a bug in the instrumentation, not a
+    runtime condition to tolerate.
+    """
+
+
+def _escape_label(v: str) -> str:
+    return v.replace("\\", "\\\\").replace('"', '\\"').replace("\n", "\\n")
+
+
+def _escape_help(v: str) -> str:
+    return v.replace("\\", "\\\\").replace("\n", "\\n")
+
+
+def _fmt(v: float) -> str:
+    if v == math.inf:
+        return "+Inf"
+    if v == -math.inf:
+        return "-Inf"
+    if isinstance(v, float) and v.is_integer() and abs(v) < 1e15:
+        return str(int(v))
+    return repr(v)
+
+
+class _Metric:
+    """Common labeled-children machinery for the three metric kinds."""
+
+    kind = "untyped"
+
+    def __init__(self, name: str, help: str, labelnames: Sequence[str] = (),
+                 max_label_sets: int = MAX_LABEL_SETS):
+        if not _NAME_RE.match(name):
+            raise ValueError(f"invalid metric name {name!r}")
+        for ln in labelnames:
+            if not _LABEL_RE.match(ln):
+                raise ValueError(f"invalid label name {ln!r} on {name}")
+        self.name = name
+        self.help = help
+        self.labelnames = tuple(labelnames)
+        self.max_label_sets = max_label_sets
+        self._lock = threading.Lock()
+        # label-values tuple -> child state (kind-specific)
+        self._children: Dict[Tuple[str, ...], object] = {}
+
+    def _key(self, labels: Dict[str, str]) -> Tuple[str, ...]:
+        if tuple(sorted(labels)) != tuple(sorted(self.labelnames)):
+            raise ValueError(
+                f"{self.name}: labels {sorted(labels)} != declared "
+                f"{sorted(self.labelnames)}")
+        return tuple(str(labels[ln]) for ln in self.labelnames)
+
+    def _child(self, key: Tuple[str, ...]):
+        # caller holds self._lock
+        child = self._children.get(key)
+        if child is None:
+            if len(self._children) >= self.max_label_sets:
+                raise LabelCardinalityError(
+                    f"metric {self.name}: more than {self.max_label_sets} "
+                    f"distinct label sets (latest: "
+                    f"{dict(zip(self.labelnames, key))}) — a label value is "
+                    f"probably unbounded (request id, hash, timestamp)")
+            child = self._new_child()
+            self._children[key] = child
+        return child
+
+    def _new_child(self):
+        raise NotImplementedError
+
+    def clear(self) -> None:
+        with self._lock:
+            self._children.clear()
+
+    def samples(self) -> List[Tuple[str, Tuple[Tuple[str, str], ...], float]]:
+        """Flat (sample_name, ((label, value), ...), value) list."""
+        raise NotImplementedError
+
+
+class Counter(_Metric):
+    kind = "counter"
+
+    def _new_child(self):
+        return [0.0]
+
+    def inc(self, amount: float = 1.0, **labels: str) -> None:
+        if not _ENABLED:
+            return
+        if amount < 0:
+            raise ValueError(f"counter {self.name}: negative increment")
+        key = self._key(labels)
+        with self._lock:
+            self._child(key)[0] += amount
+
+    def value(self, **labels: str) -> float:
+        key = self._key(labels)
+        with self._lock:
+            child = self._children.get(key)
+            return child[0] if child else 0.0
+
+    def samples(self):
+        with self._lock:
+            return [(self.name, tuple(zip(self.labelnames, key)), c[0])
+                    for key, c in sorted(self._children.items())]
+
+
+class Gauge(_Metric):
+    kind = "gauge"
+
+    def _new_child(self):
+        return [0.0]
+
+    def set(self, v: float, **labels: str) -> None:
+        if not _ENABLED:
+            return
+        key = self._key(labels)
+        with self._lock:
+            self._child(key)[0] = float(v)
+
+    def inc(self, amount: float = 1.0, **labels: str) -> None:
+        if not _ENABLED:
+            return
+        key = self._key(labels)
+        with self._lock:
+            self._child(key)[0] += amount
+
+    def dec(self, amount: float = 1.0, **labels: str) -> None:
+        self.inc(-amount, **labels)
+
+    def value(self, **labels: str) -> float:
+        key = self._key(labels)
+        with self._lock:
+            child = self._children.get(key)
+            return child[0] if child else 0.0
+
+    def samples(self):
+        with self._lock:
+            return [(self.name, tuple(zip(self.labelnames, key)), c[0])
+                    for key, c in sorted(self._children.items())]
+
+
+class _HistChild:
+    __slots__ = ("counts", "sum", "count")
+
+    def __init__(self, nbuckets: int):
+        self.counts = [0] * (nbuckets + 1)  # +1 for the +Inf bucket
+        self.sum = 0.0
+        self.count = 0
+
+
+class Histogram(_Metric):
+    kind = "histogram"
+
+    def __init__(self, name: str, help: str, labelnames: Sequence[str] = (),
+                 buckets: Optional[Sequence[float]] = None,
+                 max_label_sets: int = MAX_LABEL_SETS):
+        super().__init__(name, help, labelnames, max_label_sets)
+        bs = tuple(sorted(buckets if buckets is not None else DEFAULT_BUCKETS))
+        if not bs or any(b2 <= b1 for b1, b2 in zip(bs, bs[1:])):
+            raise ValueError(f"histogram {name}: buckets must be distinct")
+        self.buckets = bs
+
+    def _new_child(self):
+        return _HistChild(len(self.buckets))
+
+    def observe(self, v: float, **labels: str) -> None:
+        if not _ENABLED:
+            return
+        key = self._key(labels)
+        i = bisect_left(self.buckets, v)
+        with self._lock:
+            child = self._child(key)
+            child.counts[i] += 1
+            child.sum += v
+            child.count += 1
+
+    def snapshot(self, **labels: str) -> Tuple[List[int], float, int]:
+        """(cumulative bucket counts incl. +Inf, sum, count)."""
+        key = self._key(labels)
+        with self._lock:
+            child = self._children.get(key)
+            if child is None:
+                return [0] * (len(self.buckets) + 1), 0.0, 0
+            cum, acc = [], 0
+            for c in child.counts:
+                acc += c
+                cum.append(acc)
+            return cum, child.sum, child.count
+
+    def samples(self):
+        out = []
+        with self._lock:
+            items = sorted(self._children.items())
+            for key, child in items:
+                base = tuple(zip(self.labelnames, key))
+                acc = 0
+                for b, c in zip(self.buckets, child.counts):
+                    acc += c
+                    out.append((self.name + "_bucket",
+                                base + (("le", _fmt(b)),), float(acc)))
+                acc += child.counts[-1]
+                out.append((self.name + "_bucket", base + (("le", "+Inf"),),
+                            float(acc)))
+                out.append((self.name + "_sum", base, child.sum))
+                out.append((self.name + "_count", base, float(child.count)))
+        return out
+
+
+class MetricsRegistry:
+    """Name -> metric map with idempotent get-or-create declaration."""
+
+    def __init__(self):
+        self._lock = threading.RLock()
+        self._metrics: Dict[str, _Metric] = {}
+
+    def _declare(self, cls, name: str, help: str, labelnames, **kw):
+        with self._lock:
+            existing = self._metrics.get(name)
+            if existing is not None:
+                if (type(existing) is not cls
+                        or existing.labelnames != tuple(labelnames)):
+                    raise ValueError(
+                        f"metric {name} re-declared with different "
+                        f"kind/labels")
+                return existing
+            m = cls(name, help, labelnames, **kw)
+            self._metrics[name] = m
+            return m
+
+    def counter(self, name: str, help: str,
+                labelnames: Sequence[str] = (), **kw) -> Counter:
+        return self._declare(Counter, name, help, labelnames, **kw)
+
+    def gauge(self, name: str, help: str,
+              labelnames: Sequence[str] = (), **kw) -> Gauge:
+        return self._declare(Gauge, name, help, labelnames, **kw)
+
+    def histogram(self, name: str, help: str,
+                  labelnames: Sequence[str] = (), **kw) -> Histogram:
+        return self._declare(Histogram, name, help, labelnames, **kw)
+
+    def get(self, name: str) -> Optional[_Metric]:
+        with self._lock:
+            return self._metrics.get(name)
+
+    def metrics(self) -> List[_Metric]:
+        with self._lock:
+            return [self._metrics[k] for k in sorted(self._metrics)]
+
+    def reset(self) -> None:
+        """Zero every metric (keeps the declarations)."""
+        for m in self.metrics():
+            m.clear()
+
+    def value(self, name: str, labels: Optional[Dict[str, str]] = None) -> float:
+        """Convenience accessor for counters/gauges (0.0 if never touched)."""
+        m = self.get(name)
+        if m is None:
+            raise KeyError(name)
+        return m.value(**(labels or {}))  # type: ignore[union-attr]
+
+    def render(self) -> str:
+        """Prometheus text exposition (format 0.0.4)."""
+        lines: List[str] = []
+        for m in self.metrics():
+            lines.append(f"# HELP {m.name} {_escape_help(m.help)}")
+            lines.append(f"# TYPE {m.name} {m.kind}")
+            for sname, labels, v in m.samples():
+                if labels:
+                    lbl = ",".join(f'{k}="{_escape_label(str(val))}"'
+                                   for k, val in labels)
+                    lines.append(f"{sname}{{{lbl}}} {_fmt(v)}")
+                else:
+                    lines.append(f"{sname} {_fmt(v)}")
+        return "\n".join(lines) + "\n"
+
+
+#: the default process-wide registry
+REGISTRY = MetricsRegistry()
+
+
+def counter(name: str, help: str, labelnames: Sequence[str] = (), **kw) -> Counter:
+    return REGISTRY.counter(name, help, labelnames, **kw)
+
+
+def gauge(name: str, help: str, labelnames: Sequence[str] = (), **kw) -> Gauge:
+    return REGISTRY.gauge(name, help, labelnames, **kw)
+
+
+def histogram(name: str, help: str, labelnames: Sequence[str] = (), **kw) -> Histogram:
+    return REGISTRY.histogram(name, help, labelnames, **kw)
+
+
+def render() -> str:
+    return REGISTRY.render()
+
+
+def reset() -> None:
+    REGISTRY.reset()
+
+
+def value(name: str, labels: Optional[Dict[str, str]] = None) -> float:
+    return REGISTRY.value(name, labels)
+
+
+# ---------------------------------------------------------------------------
+# exposition lint — shared by fig18, tests, and .github/analysis_gate.py
+# ---------------------------------------------------------------------------
+
+_SAMPLE_RE = re.compile(
+    r"^(?P<name>[a-zA-Z_:][a-zA-Z0-9_:]*)"
+    r"(?:\{(?P<labels>[^}]*)\})?"
+    r" (?P<value>[^ ]+)(?: (?P<ts>-?\d+))?$")
+_LABEL_PAIR_RE = re.compile(
+    r'^(?P<k>[a-zA-Z_][a-zA-Z0-9_]*)="(?P<v>(?:[^"\\]|\\.)*)"$')
+
+
+def _split_labels(raw: str) -> Optional[List[Tuple[str, str]]]:
+    """Split 'a="x",b="y"' respecting escaped quotes; None if malformed."""
+    pairs: List[Tuple[str, str]] = []
+    buf, depth_in_str, prev_backslash = [], False, False
+    items: List[str] = []
+    for ch in raw:
+        if depth_in_str:
+            buf.append(ch)
+            if ch == '"' and not prev_backslash:
+                depth_in_str = False
+            prev_backslash = (ch == "\\" and not prev_backslash)
+            continue
+        if ch == '"':
+            depth_in_str = True
+            buf.append(ch)
+            prev_backslash = False
+        elif ch == ",":
+            items.append("".join(buf))
+            buf = []
+        else:
+            buf.append(ch)
+    if buf:
+        items.append("".join(buf))
+    if depth_in_str:
+        return None
+    for item in items:
+        m = _LABEL_PAIR_RE.match(item.strip())
+        if not m:
+            return None
+        pairs.append((m.group("k"), m.group("v")))
+    return pairs
+
+
+def _parse_value(s: str) -> Optional[float]:
+    if s == "+Inf":
+        return math.inf
+    if s == "-Inf":
+        return -math.inf
+    if s == "NaN":
+        return math.nan
+    try:
+        return float(s)
+    except ValueError:
+        return None
+
+
+def lint_exposition(text: str) -> List[str]:
+    """Validate Prometheus text exposition; return a list of problems.
+
+    Checks: line grammar, HELP/TYPE placement (at most one each, before
+    any sample of the family), samples grouped under their TYPE,
+    duplicate series, and histogram structure (``le`` parses, ``+Inf``
+    bucket present, cumulative counts non-decreasing, ``_count`` equals
+    the ``+Inf`` bucket, ``_sum``/``_count`` present).
+    """
+    problems: List[str] = []
+    typed: Dict[str, str] = {}
+    helped: Dict[str, bool] = {}
+    seen_sample_of: Dict[str, bool] = {}
+    seen_series: Dict[Tuple[str, Tuple[Tuple[str, str], ...]], int] = {}
+    # family -> labelset(excl. le) -> [(le, cum_count)]
+    hist_buckets: Dict[str, Dict[Tuple[Tuple[str, str], ...], List[Tuple[float, float]]]] = {}
+    hist_sum: Dict[str, Dict[Tuple[Tuple[str, str], ...], float]] = {}
+    hist_count: Dict[str, Dict[Tuple[Tuple[str, str], ...], float]] = {}
+
+    def family_of(name: str) -> str:
+        base = name
+        for suffix in ("_bucket", "_sum", "_count"):
+            if name.endswith(suffix) and name[: -len(suffix)] in typed:
+                base = name[: -len(suffix)]
+                break
+        return base
+
+    for lineno, line in enumerate(text.splitlines(), 1):
+        if not line.strip():
+            continue
+        if line.startswith("# HELP "):
+            parts = line.split(" ", 3)
+            if len(parts) < 3 or not _NAME_RE.match(parts[2]):
+                problems.append(f"line {lineno}: malformed HELP")
+                continue
+            name = parts[2]
+            if helped.get(name):
+                problems.append(f"line {lineno}: duplicate HELP for {name}")
+            if seen_sample_of.get(name):
+                problems.append(
+                    f"line {lineno}: HELP for {name} after its samples")
+            helped[name] = True
+            continue
+        if line.startswith("# TYPE "):
+            parts = line.split(" ")
+            if len(parts) != 4 or not _NAME_RE.match(parts[2]) or \
+                    parts[3] not in ("counter", "gauge", "histogram",
+                                     "summary", "untyped"):
+                problems.append(f"line {lineno}: malformed TYPE")
+                continue
+            name = parts[2]
+            if name in typed:
+                problems.append(f"line {lineno}: duplicate TYPE for {name}")
+            if seen_sample_of.get(name):
+                problems.append(
+                    f"line {lineno}: TYPE for {name} after its samples")
+            typed[name] = parts[3]
+            continue
+        if line.startswith("#"):
+            continue  # plain comment
+        m = _SAMPLE_RE.match(line)
+        if not m:
+            problems.append(f"line {lineno}: unparseable sample: {line!r}")
+            continue
+        name = m.group("name")
+        val = _parse_value(m.group("value"))
+        if val is None:
+            problems.append(f"line {lineno}: bad value {m.group('value')!r}")
+            continue
+        labels = _split_labels(m.group("labels")) if m.group("labels") else []
+        if labels is None:
+            problems.append(f"line {lineno}: malformed labels")
+            continue
+        fam = family_of(name)
+        seen_sample_of[fam] = True
+        series = (name, tuple(sorted(labels)))
+        if series in seen_series:
+            problems.append(
+                f"line {lineno}: duplicate series {name}{dict(labels)} "
+                f"(first at line {seen_series[series]})")
+        seen_series[series] = lineno
+        if typed.get(fam) == "histogram":
+            rest = tuple(sorted((k, v) for k, v in labels if k != "le"))
+            if name == fam + "_bucket":
+                le = dict(labels).get("le")
+                lev = _parse_value(le) if le is not None else None
+                if lev is None:
+                    problems.append(f"line {lineno}: histogram bucket "
+                                    f"without parseable le")
+                else:
+                    hist_buckets.setdefault(fam, {}).setdefault(
+                        rest, []).append((lev, val))
+            elif name == fam + "_sum":
+                hist_sum.setdefault(fam, {})[rest] = val
+            elif name == fam + "_count":
+                hist_count.setdefault(fam, {})[rest] = val
+            elif name == fam:
+                problems.append(
+                    f"line {lineno}: bare sample for histogram {fam}")
+
+    for fam, per_labels in hist_buckets.items():
+        for rest, entries in per_labels.items():
+            entries.sort(key=lambda e: e[0])
+            les = [le for le, _ in entries]
+            counts = [c for _, c in entries]
+            if not les or les[-1] != math.inf:
+                problems.append(f"{fam}{dict(rest)}: missing +Inf bucket")
+                continue
+            if any(c2 < c1 for c1, c2 in zip(counts, counts[1:])):
+                problems.append(
+                    f"{fam}{dict(rest)}: bucket counts not cumulative")
+            cnt = hist_count.get(fam, {}).get(rest)
+            if cnt is None:
+                problems.append(f"{fam}{dict(rest)}: missing _count")
+            elif cnt != counts[-1]:
+                problems.append(
+                    f"{fam}{dict(rest)}: _count {cnt} != +Inf bucket "
+                    f"{counts[-1]}")
+            if rest not in hist_sum.get(fam, {}):
+                problems.append(f"{fam}{dict(rest)}: missing _sum")
+    for fam, t in typed.items():
+        if t == "histogram" and seen_sample_of.get(fam) and \
+                fam not in hist_buckets:
+            problems.append(f"{fam}: histogram with samples but no buckets")
+    return problems

@@ -38,7 +38,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.memory_plan import MemoryPlan
+from repro.obs import metrics as obs_metrics
 from repro.serving.kvcache import RowBundle, reshard_rows
+
+# Mirrors RadixPrefixCache.stats — both fed at the same code points so the
+# exposition and the dict can never disagree (docs/architecture.md §13).
+_M_RADIX = obs_metrics.counter(
+    "kv_radix_events_total",
+    "Radix prefix-cache events (hit/miss/eviction/dedup/cow_fork).",
+    labelnames=("event",))
 
 
 class BlockAllocator:
@@ -177,6 +185,7 @@ class RadixPrefixCache:
             elif child.block != table[i]:
                 swaps.append((i, child.block))
                 self.stats["dedup"] += 1
+                _M_RADIX.inc(event="dedup")
             self._touch(child)
             node = child
         return swaps
@@ -228,6 +237,7 @@ class RadixPrefixCache:
         del victim.parent.children[victim.chunk]
         self.allocator.decref(victim.block)
         self.stats["evictions"] += 1
+        _M_RADIX.inc(event="eviction")
         return True
 
     @property
@@ -437,9 +447,11 @@ class PagedKVCachePool:
             table.append(fresh)
             cached += k
             self._apply_shardings()
+            _M_RADIX.inc(event="cow_fork")
         self.host_len[slot] = cached
         self.dirty = True
         self.prefix.stats["hits" if cached else "misses"] += 1
+        _M_RADIX.inc(event="hit" if cached else "miss")
         return cached
 
     def ensure_step_capacity(self) -> Optional[int]:

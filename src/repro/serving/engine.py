@@ -38,6 +38,7 @@ the token-identity regression tests.
 from __future__ import annotations
 
 import bisect
+import logging
 import time
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Sequence
@@ -45,6 +46,10 @@ from typing import Any, Dict, List, Optional, Sequence
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+from repro.obs.trace import span
 
 from repro.core import (Archive, CaptureSpec, MemoryPlan, ProgramSet,
                         default_bucket_ladder, foundry_load, foundry_save,
@@ -56,6 +61,19 @@ from repro.serving.blockpool import PagedKVCachePool
 from repro.serving.faults import fault_point
 from repro.serving.kvcache import KVCachePool, RowBundle
 from repro.serving.scheduler import ReqState, Request, Scheduler
+
+log = logging.getLogger("repro.serving.engine")
+
+# docs/architecture.md §13 has the full metric catalog
+_M_TPOT = obs_metrics.histogram(
+    "serving_tpot_seconds",
+    "Per-decode-step wall time (the steady-state TPOT proxy).",
+    buckets=(1e-4, 2.5e-4, 5e-4, 1e-3, 2.5e-3, 5e-3, 1e-2, 2.5e-2, 5e-2,
+             0.1, 0.25, 0.5, 1.0))
+_M_DECODE_STEPS = obs_metrics.counter(
+    "engine_decode_steps_total", "Decode steps that served >= 1 request.")
+_M_COLD_STARTS = obs_metrics.counter(
+    "engine_cold_starts_total", "Engine cold starts by mode.", ("mode",))
 
 
 #: The supported-convention matrix: every ``CaptureSpec.tags`` key this
@@ -307,9 +325,10 @@ class ServingEngine:
         rep.phases["capture_compile_s"] = time.perf_counter() - t0
         self.programs = ps
         self._init_pool()
+        _M_COLD_STARTS.inc(mode="vanilla")
         if verbose:
-            print(f"[cold-start vanilla] {rep.total_s:.2f}s "
-                  f"({len(self.buckets)} buckets)")
+            log.info("[cold-start vanilla] %.2fs (%d buckets)",
+                     rep.total_s, len(self.buckets))
         return rep
 
     def cold_start_foundry(self, archive: Archive,
@@ -350,8 +369,8 @@ class ServingEngine:
                     f"repro.analysis.check` on the archive)")
         archived_loop = tags.get("decode_loop", "host")
         if archived_loop != self.decode_loop and verbose:
-            print(f"[LOAD] archive captured for decode_loop="
-                  f"'{archived_loop}'; adopting it")
+            log.info("[LOAD] archive captured for decode_loop='%s'; "
+                     "adopting it", archived_loop)
         self.decode_loop = archived_loop
         # adopt the archived KV calling convention: the restored programs
         # bake in the cache layout, so the pool must match it. Untagged
@@ -359,13 +378,15 @@ class ServingEngine:
         self.kv_layout = tags.get("kv_layout", "slot")
         self.kv_block_size = tags.get("kv_block_size", self.kv_block_size)
         self.kv_blocks = tags.get("kv_blocks", self.kv_blocks)
-        progs, load_rep, plan = foundry_load(
-            archive, self.ctx.mesh,
-            background_exact=background_exact,
-            allow_stamping=allow_stamping, warm=warm, strict=strict,
-            verbose=verbose)
+        with span("engine.cold_start", cat="engine", mode="foundry"):
+            progs, load_rep, plan = foundry_load(
+                archive, self.ctx.mesh,
+                background_exact=background_exact,
+                allow_stamping=allow_stamping, warm=warm, strict=strict,
+                verbose=verbose)
         mode = ("foundry-stamped" if load_rep.restore_path == "stamped"
                 else "foundry")
+        _M_COLD_STARTS.inc(mode=mode)
         rep = ColdStartReport(mode, n_buckets=len(self.buckets),
                               rank_stamped=load_rep.rank_stamped,
                               fallback_compiles=load_rep.fallback_compiles)
@@ -621,7 +642,27 @@ class ServingEngine:
 
     def step(self) -> int:
         """One engine iteration: admit + decode one token for all running.
-        Returns number of active requests served."""
+        Returns number of active requests served.
+
+        When telemetry is on (obs.metrics enabled and/or tracing active)
+        the step is timed once and the measurement feeds both the
+        ``serving_tpot_seconds`` histogram and an ``engine.decode_step``
+        trace span; when off, the cost is two module-global reads."""
+        if not (obs_metrics.enabled() or obs_trace.active()):
+            return self._step_impl()
+        t0 = time.perf_counter()
+        n = self._step_impl()
+        dt = time.perf_counter() - t0
+        if n:  # idle ticks are not decode steps — they would skew TPOT
+            if obs_metrics.enabled():
+                _M_TPOT.observe(dt)
+                _M_DECODE_STEPS.inc()
+            if obs_trace.active():
+                obs_trace.collector().add_complete(
+                    "engine.decode_step", "engine", t0, dt, {"batch": n})
+        return n
+
+    def _step_impl(self) -> int:
         # injected BEFORE any scheduler/pool mutation: a crash here leaves
         # the engine coherent, so the fleet's salvage path (export_inflight)
         # can migrate the in-flight KV rows instead of re-prefilling

@@ -64,11 +64,46 @@ from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
 
 from repro.core import Archive, wait_for_background
 from repro.launch.mesh import describe_mesh, resolve_mesh
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.serving.engine import ServingEngine
 from repro.serving.faults import fault_point
 from repro.serving.scheduler import Request, ReqState, Scheduler
 
 log = logging.getLogger("repro.serving.fleet")
+
+# docs/architecture.md §13 has the full metric catalog
+_M_REPLICA_EVENTS = obs_metrics.counter(
+    "fleet_replica_events_total",
+    "Replica lifecycle transitions (spawn/ready/failed/crashed/respawn/"
+    "stopped).", ("event",))
+_M_CRASHES = obs_metrics.counter(
+    "fleet_crashes_total", "Mid-serving replica crashes contained by "
+    "supervision.")
+_M_RESPAWNS = obs_metrics.counter(
+    "fleet_respawns_total", "Replacement replicas spawned after crashes.")
+_M_SALVAGED = obs_metrics.counter(
+    "fleet_salvaged_requests_total",
+    "In-flight requests whose KV rows migrated off a crashed replica.")
+_M_CRASH_REQUEUED = obs_metrics.counter(
+    "fleet_crash_requeued_requests_total",
+    "Requests retried from kept prefixes after a crash (no KV carried).")
+_M_SHED = obs_metrics.counter(
+    "fleet_shed_requests_total",
+    "Requests rejected at admission by a terminally degraded fleet.")
+_M_RESHARDS = obs_metrics.counter(
+    "fleet_reshard_total", "Parallelism switches by outcome.", ("outcome",))
+_M_BACKLOG = obs_metrics.gauge(
+    "fleet_backlog_depth", "Fleet-wide queued requests (not yet dispatched "
+    "to a replica).", ("fleet",))
+_M_READY = obs_metrics.gauge(
+    "fleet_replicas_ready", "READY replicas.", ("fleet",))
+_M_INFLIGHT = obs_metrics.gauge(
+    "fleet_inflight", "Backlog + per-replica queued/running load (the "
+    "autoscale signal).", ("fleet",))
+_M_DEGRADED = obs_metrics.gauge(
+    "fleet_degraded", "1 while READY replicas < policy.min_replicas after "
+    "having reached the floor once.", ("fleet",))
 
 
 class ReplicaState(Enum):
@@ -133,6 +168,8 @@ class Replica:
         self._mesh = mesh
         self._deadline_s = deadline_s
         self._error: Optional[str] = None
+        _M_REPLICA_EVENTS.inc(event="spawn")
+        obs_trace.instant("replica.spawn", cat="fleet", replica=rid)
         self._thread = threading.Thread(target=self._provision, daemon=True)
         self._thread.start()
 
@@ -170,16 +207,24 @@ class Replica:
                                     f"({self._deadline_s:.1f}s; thread "
                                     f"still running)")
                 self.discard_engine = True
+                _M_REPLICA_EVENTS.inc(event="failed")
         if self.state is ReplicaState.PROVISIONING and not self._thread.is_alive():
             if self._error is not None or self.engine is None:
                 self.state = ReplicaState.FAILED
                 self.stats.error = self._error or "cold start produced no engine"
+                _M_REPLICA_EVENTS.inc(event="failed")
             else:
                 self.state = ReplicaState.READY
                 self.stats.ready_t = time.perf_counter()
                 # stamp the fault-injection identity so chaos plans can
                 # target this replica (serving/faults.py)
                 self.engine.fault_tag = f"replica{self.stats.replica_id}"
+                _M_REPLICA_EVENTS.inc(event="ready")
+                # provision_s as a span on the fleet timeline: spawn->READY
+                obs_trace.complete(
+                    "replica.provision", "fleet", self.stats.spawned_t,
+                    self.stats.ready_t, replica=self.stats.replica_id,
+                    mode=self.stats.mode or "?")
         return self.state
 
     @property
@@ -214,6 +259,7 @@ class Replica:
     def stop(self):
         self.state = ReplicaState.STOPPED
         self.stats.stopped_t = time.perf_counter()
+        _M_REPLICA_EVENTS.inc(event="stopped")
 
     def crash(self, reason: str):
         """Mark this replica dead MID-SERVING (Fleet supervision): distinct
@@ -223,6 +269,9 @@ class Replica:
         self.state = ReplicaState.CRASHED
         self.stats.error = reason
         self.stats.stopped_t = time.perf_counter()
+        _M_REPLICA_EVENTS.inc(event="crashed")
+        obs_trace.instant("replica.crash", cat="fleet",
+                          replica=self.stats.replica_id, reason=reason)
 
     def join_provision(self, timeout: float = 120.0) -> ReplicaState:
         """Wait for an in-flight provision to finish and resolve the state.
@@ -345,6 +394,9 @@ class FleetReport:
     replicas: List[ReplicaStats] = field(default_factory=list)
     ttfts: List[float] = field(default_factory=list)
     tpots: List[float] = field(default_factory=list)
+    # queueing share of TTFT (arrival -> first admission; scheduler.Request
+    # .queue_wait_s) — TTFT additionally bundles cold start + prefill
+    queue_waits: List[float] = field(default_factory=list)
     n_done: int = 0
     n_failed: int = 0
     reshards: List[Dict[str, object]] = field(default_factory=list)
@@ -378,6 +430,8 @@ class FleetReport:
             "replicas_spawned": len(self.replicas),
             "ttft_p50_s": self._pct(self.ttfts, 0.50),
             "ttft_p95_s": self._pct(self.ttfts, 0.95),
+            "queue_wait_p50_s": self._pct(self.queue_waits, 0.50),
+            "queue_wait_p95_s": self._pct(self.queue_waits, 0.95),
             "tpot_mean_s": (sum(self.tpots) / len(self.tpots)
                             if self.tpots else None),
             "cold_start_to_first_token_s": cold,
@@ -427,7 +481,9 @@ class Fleet:
                  allow_stamping: bool = True, background_exact: bool = True,
                  mesh=None,
                  factory_for_mesh: Optional[Callable] = None,
-                 verbose: bool = False):
+                 verbose: bool = False,
+                 name: str = "fleet",
+                 trace_path: Optional[str] = None):
         if mode == "foundry" and archive is None:
             raise ValueError("foundry fleet needs the shared archive")
         if mode not in ("foundry", "vanilla", "eager"):
@@ -470,11 +526,20 @@ class Fleet:
         self._rids = itertools.count()
         self._tick = 0
         self._t0: Optional[float] = None
-        if verbose and not logging.getLogger().handlers:
+        # telemetry identity + optional Chrome/Perfetto trace file: gauges
+        # are labeled by `name` (a router labels each model's fleet), and
+        # `trace_path` starts tracing now and writes the file at report()
+        self.name = name
+        self.trace_path = trace_path
+        self._trace_started_here = False
+        if trace_path is not None and not obs_trace.active():
+            obs_trace.start()
+            self._trace_started_here = True
+        if verbose:
             # CLI convenience (launch/serve.py --fleet): surface the fleet's
             # INFO events without requiring callers to configure logging
-            logging.basicConfig(level=logging.INFO,
-                                format="[%(name)s] %(message)s")
+            from repro.obs import configure_logging
+            configure_logging()
 
     # -- lifecycle -------------------------------------------------------
     def _cold_start(self, eng: ServingEngine, warm: bool = False):
@@ -536,6 +601,8 @@ class Fleet:
             self.replicas.append(r)
             out.append(r)
             self.respawns += 1
+            _M_RESPAWNS.inc()
+            _M_REPLICA_EVENTS.inc(event="respawn")
             log.info("+replica %d (respawn after crash, tick %d)",
                      r.stats.replica_id, self._tick)
         return out
@@ -598,6 +665,7 @@ class Fleet:
                 r, f"fleet degraded: {len(self._ready())} READY < "
                    f"min_replicas={self.policy.min_replicas} and the "
                    f"respawn budget is exhausted; shed at admission")
+            _M_SHED.inc()
             return r
         self.backlog.append(r)
         return r
@@ -655,6 +723,7 @@ class Fleet:
         and a replacement is respawned from the shared archive unless the
         sliding-window crash budget says the fleet is crash-looping."""
         self.crashes += 1
+        _M_CRASHES.inc()
         now = time.perf_counter()
         self._crash_times.append(now)
         while (self._crash_times
@@ -664,6 +733,8 @@ class Fleet:
         migrated, requeued, failed = self._salvage(r)
         self.salvaged_requests += migrated
         self.crash_requeued_requests += requeued
+        _M_SALVAGED.inc(migrated)
+        _M_CRASH_REQUEUED.inc(requeued)
         log.warning("replica %d CRASHED (%s): salvaged %d, requeued %d, "
                     "failed %d", r.stats.replica_id, r.stats.error,
                     migrated, requeued, failed)
@@ -1018,13 +1089,25 @@ class Fleet:
         self.mesh = op.new_mesh
         self.engine_factory = op.factory
         rep.drained_t = time.perf_counter()
+        # the reshard windows on the fleet timeline: SERVING->DUAL->CUTOVER
+        # ->DRAINED (endpoints observed at different call sites, so they are
+        # recorded as two back-to-back complete events at drain time)
+        obs_trace.complete("reshard.dual", "fleet", rep.started_t,
+                           rep.cutover_t, strategy=op.strategy,
+                           to=rep.to_mesh, dual_ticks=rep.dual_ticks)
+        obs_trace.complete("reshard.cutover", "fleet", rep.cutover_t,
+                           rep.drained_t, migrated=rep.migrated_requests,
+                           requeued=rep.requeued_requests)
         self._finish_reshard(op)
 
     def _finish_reshard(self, op: _ReshardOp):
         self.reshard_reports.append(op.report)
         self._reshard = None
         s = op.report
+        _M_RESHARDS.inc(outcome="aborted" if s.aborted else "completed")
         if s.aborted:
+            obs_trace.instant("reshard.aborted", cat="fleet",
+                              to=s.to_mesh, reason=s.aborted)
             log.warning("reshard[%s] %s -> %s: ABORTED (%s)",
                         s.strategy, s.from_mesh, s.to_mesh, s.aborted)
         else:
@@ -1078,11 +1161,17 @@ class Fleet:
                     self.backlog.popleft(),
                     "fleet degraded with no READY replicas and the respawn "
                     "budget exhausted; backlog shed")
+                _M_SHED.inc()
         if len(self._ready()) >= self.policy.min_replicas:
             self._was_at_floor = True
         elif self._was_at_floor:
             self.degraded_ticks += 1
         self.peak_alive = max(self.peak_alive, len(self._alive()))
+        if obs_metrics.enabled():
+            _M_BACKLOG.set(len(self.backlog), fleet=self.name)
+            _M_READY.set(len(self._ready()), fleet=self.name)
+            _M_INFLIGHT.set(self.inflight(), fleet=self.name)
+            _M_DEGRADED.set(1.0 if self.degraded else 0.0, fleet=self.name)
         return served
 
     def _unresolved(self) -> int:
@@ -1146,10 +1235,17 @@ class Fleet:
                 rep.n_done += 1
                 if q.ttft is not None:
                     rep.ttfts.append(q.ttft)
+                if q.queue_wait_s is not None:
+                    rep.queue_waits.append(q.queue_wait_s)
                 if (q.done_t is not None and q.first_token_t is not None
                         and len(q.generated) > 1):
                     rep.tpots.append((q.done_t - q.first_token_t)
                                      / (len(q.generated) - 1))
             elif q.state is ReqState.FAILED:
                 rep.n_failed += 1
+        if self.trace_path is not None:
+            obs_trace.save(self.trace_path)
+            if self._trace_started_here:
+                obs_trace.stop()
+                self._trace_started_here = False
         return rep

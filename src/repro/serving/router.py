@@ -32,6 +32,7 @@ Model lifecycle state machine (docs/architecture.md §7):
 """
 from __future__ import annotations
 
+import logging
 import time
 from dataclasses import dataclass, field
 from enum import Enum
@@ -39,10 +40,26 @@ from typing import Any, Callable, Dict, List, Optional, Sequence
 
 from repro.core import Archive
 from repro.launch.mesh import resolve_mesh
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.serving.engine import ServingEngine
 from repro.serving.fleet import (AutoscalePolicy, Fleet, FleetReport,
                                  ReplicaState)
 from repro.serving.scheduler import ReqState, Request
+
+log = logging.getLogger("repro.serving.router")
+
+# docs/architecture.md §13 has the full metric catalog
+_M_ACTIVATIONS = obs_metrics.counter(
+    "router_activations_total",
+    "Cold -> activating transitions (fresh fleet spawned).", ("model",))
+_M_DEACTIVATIONS = obs_metrics.counter(
+    "router_deactivations_total",
+    "Scale-to-zero teardowns (fleet + KV released).", ("model",))
+_M_MESH_LEVEL = obs_metrics.gauge(
+    "router_mesh_level",
+    "Parallelism level the model currently serves at (0=low, 1=high).",
+    ("model",))
 
 
 class ModelState(Enum):
@@ -120,6 +137,9 @@ class ModelStats:
         ttfts = [r.ttft for r in requests
                  if r.state is ReqState.DONE and r.ttft is not None]
 
+        waits = [r.queue_wait_s for r in requests
+                 if r.state is ReqState.DONE and r.queue_wait_s is not None]
+
         def pct(q):
             return FleetReport._pct(ttfts, q)
         return {
@@ -133,6 +153,8 @@ class ModelStats:
             "n_failed": sum(r.state is ReqState.FAILED for r in requests),
             "ttft_p50_s": pct(0.50),
             "ttft_p95_s": pct(0.95),
+            "queue_wait_p50_s": FleetReport._pct(waits, 0.50),
+            "queue_wait_p95_s": FleetReport._pct(waits, 0.95),
             "fallback_compiles": self.fallback_compiles,
             "background_errors": self.background_errors,
             "replicas_spawned": self.replicas_spawned,
@@ -252,6 +274,9 @@ class ModelRouter:
         self.peak_resident_replicas = 0
         self._tick = 0
         self._t0: Optional[float] = None
+        if verbose:
+            from repro.obs import configure_logging
+            configure_logging()
 
     # -- registry --------------------------------------------------------
     def add_model(self, name: str,
@@ -290,7 +315,7 @@ class ModelRouter:
                         policy=e.policy.autoscale,
                         mesh=resolve_mesh(e.current_mesh_spec()),
                         factory_for_mesh=e.factory_for_mesh,
-                        verbose=self.verbose)
+                        verbose=self.verbose, name=e.name)
         rp = e.policy.reshard
         if rp is not None and rp.prefer_reshard_over_scale_out:
             e.fleet.suppress_scale_out = True
@@ -303,9 +328,10 @@ class ModelRouter:
         e.await_first_token = True
         e.idle_ticks = 0
         e.stats.activations += 1
+        _M_ACTIVATIONS.inc(model=e.name)
         if self.verbose:
-            print(f"[router] +model {e.name} (activation "
-                  f"{e.stats.activations}, tick {self._tick})")
+            log.info("+model %s (activation %d, tick %d)",
+                     e.name, e.stats.activations, self._tick)
 
     def activate(self, name: str) -> None:
         """Pre-warm a model (the keep-resident baseline activates everything
@@ -322,6 +348,8 @@ class ModelRouter:
             e.pending_reshard = None
             if rep.done and rep.aborted is None:
                 e.stats.mesh_level = want
+                _M_MESH_LEVEL.set(1.0 if want == "high" else 0.0,
+                                  model=e.name)
         for r in fleet.replicas:
             # deactivate_all may catch an autoscale-spawned replica mid
             # cold start; let it finish so releasing the engine below is
@@ -349,10 +377,12 @@ class ModelRouter:
         e.state = ModelState.COLD
         e.idle_ticks = 0
         e.stats.deactivations += 1
+        _M_DEACTIVATIONS.inc(model=e.name)
+        obs_trace.instant("model.deactivate", cat="router", model=e.name)
         if self.verbose:
-            print(f"[router] -model {e.name} (scale-to-zero after "
-                  f"{e.policy.idle_ticks_to_zero} idle ticks, "
-                  f"tick {self._tick})")
+            log.info("-model %s (scale-to-zero after %d idle ticks, "
+                     "tick %d)", e.name, e.policy.idle_ticks_to_zero,
+                     self._tick)
 
     def deactivate_all(self) -> None:
         """Drain and release every live fleet (end-of-run accounting)."""
@@ -404,6 +434,10 @@ class ModelRouter:
             if e.state is ModelState.ACTIVATING and e.fleet._ready():
                 e.stats.activation_ready_s.append(now - e.trigger_t)
                 e.state = ModelState.ACTIVE
+                # the activation window on the router timeline: trigger ->
+                # first replica READY (what a queued user actually waits)
+                obs_trace.complete("model.activate", "router",
+                                   e.trigger_t, now, model=e.name)
             if e.await_first_token:
                 firsts = [q.first_token_t for q in e.fleet.requests
                           if q.first_token_t is not None
@@ -441,10 +475,12 @@ class ModelRouter:
             e.pending_reshard = None
             if rep.aborted is None:
                 e.stats.mesh_level = want
-            elif self.verbose:
-                print(f"[router] ~model {e.name}: reshard to {want} mesh "
-                      f"ABORTED ({rep.aborted}); staying at "
-                      f"{e.stats.mesh_level}")
+                _M_MESH_LEVEL.set(1.0 if want == "high" else 0.0,
+                                  model=e.name)
+            else:
+                log.warning("~model %s: reshard to %s mesh ABORTED (%s); "
+                            "staying at %s", e.name, want, rep.aborted,
+                            e.stats.mesh_level)
         if e.fleet._reshard is not None:
             return  # a switch is already in flight
         inflight = e.fleet.inflight()
@@ -468,9 +504,9 @@ class ModelRouter:
         e.last_reshard_tick = self._tick
         e.sustain_ticks = 0
         if self.verbose:
-            print(f"[router] ~model {e.name}: reshard -> {want} mesh "
-                  f"(inflight {inflight} for {rp.sustain_ticks} ticks, "
-                  f"tick {self._tick})")
+            log.info("~model %s: reshard -> %s mesh (inflight %d for %d "
+                     "ticks, tick %d)", e.name, want, inflight,
+                     rp.sustain_ticks, self._tick)
 
     def _unresolved(self) -> int:
         return sum(q.state not in (ReqState.DONE, ReqState.FAILED)

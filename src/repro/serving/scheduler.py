@@ -14,6 +14,25 @@ from dataclasses import dataclass, field
 from enum import Enum
 from typing import Deque, Dict, List, Optional
 
+from repro.obs import metrics as obs_metrics
+
+# docs/architecture.md §13 has the full metric catalog
+_M_ADMITTED = obs_metrics.counter(
+    "sched_admissions_total", "Requests admitted to a decode slot.")
+_M_REJECTS = obs_metrics.counter(
+    "sched_rejects_total", "Requests terminally rejected.")
+_M_DEFERS = obs_metrics.counter(
+    "sched_defers_total",
+    "Admission-time resource deferrals (request returns to queue front).")
+_M_REQUEUES = obs_metrics.counter(
+    "sched_requeues_total",
+    "Worker-failure requeues with generated prefix kept.")
+_M_QUEUE_WAIT = obs_metrics.histogram(
+    "serving_queue_wait_seconds",
+    "Arrival -> first admission wait (the queueing share of TTFT).")
+_M_TTFT = obs_metrics.histogram(
+    "serving_ttft_seconds", "Arrival -> first generated token.")
+
 
 class ReqState(Enum):
     WAITING = "waiting"
@@ -32,6 +51,7 @@ class Request:
     state: ReqState = ReqState.WAITING
     slot: Optional[int] = None
     first_token_t: Optional[float] = None
+    admitted_t: Optional[float] = None
     done_t: Optional[float] = None
     retries: int = 0
     fail_reason: Optional[str] = None
@@ -47,6 +67,15 @@ class Request:
         # a request whose first token landed exactly there
         return (self.first_token_t - self.arrival_t
                 if self.first_token_t is not None else None)
+
+    @property
+    def queue_wait_s(self) -> Optional[float]:
+        """Arrival -> FIRST admission. TTFT bundles queueing + cold start +
+        prefill; this isolates the queueing share (a deferred/requeued
+        request keeps its first admission time — later waits are failure
+        recovery, not arrival queueing)."""
+        return (self.admitted_t - self.arrival_t
+                if self.admitted_t is not None else None)
 
 
 class Scheduler:
@@ -68,6 +97,11 @@ class Scheduler:
         while self.queue and len(out) < free_capacity:
             r = self.queue.popleft()
             r.state = ReqState.RUNNING
+            if r.admitted_t is None:  # first admission only (queue_wait_s)
+                r.admitted_t = time.perf_counter()
+                if obs_metrics.enabled():
+                    _M_ADMITTED.inc()
+                    _M_QUEUE_WAIT.observe(r.queue_wait_s)
             self.running[r.req_id] = r
             out.append(r)
         return out
@@ -75,6 +109,8 @@ class Scheduler:
     def record_token(self, req: Request, token: int):
         if req.first_token_t is None:
             req.first_token_t = time.perf_counter()
+            if obs_metrics.enabled():
+                _M_TTFT.observe(req.first_token_t - req.arrival_t)
         req.generated.append(token)
 
     def record_step(self, req_tokens, *, eos_token: Optional[int] = None,
@@ -110,6 +146,7 @@ class Scheduler:
         req.done_t = time.perf_counter()
         req.slot = None
         self.failed.append(req)
+        _M_REJECTS.inc()
 
     def defer(self, req: Request):
         """Return a request to the queue front with prefix intact: an
@@ -120,6 +157,7 @@ class Scheduler:
         req.state = ReqState.WAITING
         req.slot = None
         self.queue.appendleft(req)
+        _M_DEFERS.inc()
 
     def requeue_on_failure(self, req: Request):
         """Worker failure path: keep generated prefix, retry at queue front.
@@ -136,9 +174,11 @@ class Scheduler:
                                f"{self.max_retries})")
             req.done_t = time.perf_counter()
             self.failed.append(req)
+            _M_REJECTS.inc()
             return
         req.state = ReqState.WAITING
         self.queue.appendleft(req)
+        _M_REQUEUES.inc()
 
     @property
     def pending(self) -> int:
