@@ -1,0 +1,316 @@
+"""[Fig 19] Phase-disaggregated serving: decode TPOT isolation + scaling.
+
+Splitting a fleet into a prefill pool and a decode pool (serving/pool.py;
+``Fleet(pools=[...])``; HydraServe/ParaServe in PAPERS.md) buys two things
+this figure measures on the cooperative single-threaded fleet loop:
+
+  1. **Decode isolation.** Long-prompt, prefill-heavy traffic lands on the
+     prefill pool, so the decode pool's batch bucket stays sized for the
+     decode-bound requests: its step wall time over 8-token windows (the
+     honest per-pool TPOT proxy — what dedicated decode hardware would
+     see) stays within 1.2x of a no-prefill-load baseline at p99, while a
+     colocated fleet serving the same mix degrades (fills inflate every
+     replica's batch bucket).
+  2. **Independent prefill scaling.** A burst of long prompts drains in
+     ~half the ticks with 2 prefill replicas vs 1, with the decode pool
+     unchanged — the knob the colocated fleet does not have.
+
+And the correctness table stakes ride along as hard assertions: every
+stream byte-identical across the prefill->decode KV handoff (requeued
+overflow handoffs included), zero dropped requests, zero fallback compiles
+(both pools LOAD the ONE shared archive).
+
+The TPOT section runs FIRST: its latency windows are single-milliseconds,
+and running the identity/scaling fleets beforehand leaves enough heap and
+allocator churn behind to inflate the under-load tail by 2x+.
+
+CLI: ``python -m benchmarks.fig19_disagg [--quick]``. ``--quick`` is the CI
+smoke mode: smaller trace, deterministic assertions only (identity, zero
+drops, handoffs observed, zero compiles, prefill tick-scaling); the
+wall-clock p99 gates additionally run in the full mode.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+
+from repro.configs.registry import get_arch
+from repro.core import Archive
+from repro.launch.mesh import ShardCtx, resolve_mesh
+from repro.models.model import Model
+from repro.serving.engine import ServingEngine
+from repro.serving.fleet import AutoscalePolicy, Fleet, FleetReport, PoolSpec
+from repro.serving.scheduler import ReqState
+
+CFG = get_arch("smollm-360m").reduced()
+MAX_BATCH = 8
+SHORTS = [[5, 9, 2], [11, 3], [7, 7, 7, 1], [2, 9]]
+
+
+def _build(cfg, mesh=None):
+    eng = ServingEngine(Model(cfg, ShardCtx(mesh=resolve_mesh(mesh))),
+                        max_batch=MAX_BATCH, max_seq=64, bucket_mode="pow2",
+                        kv_block_size=4)
+    eng.load_weights(rng=jax.random.PRNGKey(0))
+    return eng
+
+
+def build(mesh=None):
+    return _build(CFG, mesh)
+
+
+def build_tpot(mesh=None):
+    """Serving-scale logits head for the TPOT section: at the reduced
+    256-token vocab a decode step is overhead-bound and its wall time is
+    dominated by shared-CPU cache noise, not by the work the batch bucket
+    actually buys (see fig9's LOOP_VOCAB note)."""
+    return _build(dataclasses.replace(CFG, vocab_size=4096), mesh)
+
+
+def pol(n):
+    return AutoscalePolicy(min_replicas=n, max_replicas=n,
+                           target_inflight_per_replica=64,
+                           scale_down_idle_ticks=10**6)
+
+
+def disagg_fleet(ar, n_prefill=1, n_decode=1, factory=build):
+    return Fleet(factory, mode="foundry", archive=ar,
+                 pools=[PoolSpec("prefill", pol(n_prefill)),
+                        PoolSpec("decode", pol(n_decode))])
+
+
+def long_prompt(j, plen):
+    """Deterministic long prompt #j, unique for j < 2500: the leading two
+    tokens spell out j, so no two prompts share even one radix block and
+    the prefill prefix cache is not a variable here — fig16 owns that
+    axis. (A simple ``f(i, j) % k`` body aliases whenever j wraps mod k,
+    which silently turns "fresh" load into cached no-op fills.)"""
+    return ([j % 50 + 1, j // 50 + 1]
+            + [(7 * i + 3 * j + 5) % 50 + 1 for i in range(plen - 2)])
+
+
+def wait_ready(fleet, n, budget_s=600.0):
+    t0 = time.perf_counter()
+    while len(fleet._ready()) < n:
+        fleet.tick()
+        time.sleep(0.001)
+        assert time.perf_counter() - t0 < budget_s, "provision wedged"
+
+
+def drain(fleet, reqs, budget_s=900.0):
+    """Tick until every request resolves; returns the tick count."""
+    t0 = time.perf_counter()
+    ticks = 0
+    while any(q.state not in (ReqState.DONE, ReqState.FAILED) for q in reqs):
+        if fleet.tick() == 0:
+            time.sleep(0.001)
+        ticks += 1
+        assert time.perf_counter() - t0 < budget_s, "fleet wedged"
+    return ticks
+
+
+def _tpot_section(quick: bool):
+    """Decode TPOT isolation: disagg vs colocated under prefill load.
+
+    Measured at a serving-scale vocab (fig9 idiom) so decode steps are
+    bandwidth-bound and the shared-CPU cache pollution from interleaved
+    fills is small relative to the step cost — the per-pool step wall is
+    the honest proxy for what dedicated decode hardware would see.
+    Longs get max_new=1: their whole token budget comes out of the fill,
+    so they load the prefill pool without ever occupying decode — the
+    purest version of "prefill load must not touch decode latency"."""
+    ar_t, _ = build_tpot().save_archive()
+    ar_t = Archive.from_bytes(ar_t.to_bytes(), lazy=True)
+    shorts = [(p, 34) for p in SHORTS]
+
+    def longs_batch(base):
+        return [(long_prompt(base + j, 40), 1) for j in range(8)]
+
+    # Each fleet measures its OWN load ratio: alternating rounds of
+    # shorts-only passes and shorts+longs passes on the SAME pool, p99
+    # over windows per half, then min over rounds PER HALF and the ratio
+    # of the two minima. Within-fleet + interleaved means both halves
+    # sample the same ambient noise (a separate baseline fleet measured
+    # ~30s earlier drifts with whatever else the machine is doing, and
+    # with ~15 windows a p99 is the single worst window). Minimum per
+    # half is the estimator because noise only ever INFLATES a window:
+    # each half's min round is the closest observation of its true cost,
+    # so a transient burst cannot fail the disagg gate by landing in a
+    # loaded round NOR fake a pass of the colocated gate by landing in
+    # an unloaded round (min over the round RATIOS would keep exactly
+    # those inflated-baseline rounds). The colocated fleet's batch-bucket
+    # inflation is systematic, hits every loaded round, and survives the
+    # min — it gets the identical statistic, fairly.
+    n_rep, n_pass = (1, 1) if quick else (3, 2)
+    WIN = 8
+
+    def win_pcts(walls):
+        """p50/p99 of mean inter-token time over disjoint 8-step windows.
+        A single-step p99 on a time-shared CPU measures OS scheduling
+        jitter (±1-3ms spikes land on whichever pool's step is running);
+        the 8-token window mean is what a reader of the stream perceives
+        and is the level at which isolation is actually claimable."""
+        means = [sum(walls[i:i + WIN]) / len(walls[i:i + WIN])
+                 for i in range(0, len(walls), WIN)]
+        return FleetReport._pct(means, 0.50), FleetReport._pct(means, 0.99)
+
+    def load_ratio(fleet_, pool):
+        """(unloaded (p50, p99), loaded (p50, p99), p99 ratio): each half
+        is its min-p99 round, the ratio divides the two minima."""
+        fleet_.start()
+        wait_ready(fleet_, sum(p.policy.min_replicas
+                               for p in fleet_.pools.values()))
+        # identical warmup for every fleet, run TWICE: the first round
+        # touches every batch-bucket and fill shape, the second (same
+        # prompts, now sitting in the radix tree) touches the prefix-hit
+        # admission path — both first-touch host jits would otherwise land
+        # as a 100ms..3s outlier inside a measured step
+        served = 0
+        for _ in range(2):
+            rs = [fleet_.submit(p, n) for p, n in shorts + longs_batch(200)]
+            drain(fleet_, rs)
+            served += len(rs)
+        walls = fleet_.pools[pool].step_walls
+        rounds = []
+        for rep in range(n_rep):
+            halves = []
+            for with_longs in (False, True):
+                walls.clear()
+                for i in range(n_pass):
+                    # FRESH long prompts each pass: the warmup batch sits
+                    # in the prefill radix cache, and a cached fill is no
+                    # load at all
+                    subs = shorts + (
+                        longs_batch(300 + 100 * (rep * n_pass + i))
+                        if with_longs else [])
+                    rs = [fleet_.submit(p, n) for p, n in subs]
+                    drain(fleet_, rs)
+                    served += len(subs)
+                halves.append(win_pcts(walls))
+            rounds.append(halves)
+        rep_ = fleet_.report()
+        assert rep_.n_failed == 0 and rep_.n_done == served
+        assert rep_.summary()["fallback_compiles"] == 0
+        unloaded = min((r[0] for r in rounds), key=lambda h: h[1])
+        loaded = min((r[1] for r in rounds), key=lambda h: h[1])
+        return unloaded, loaded, loaded[1] / unloaded[1]
+
+    (d0_p50, d0_p99), (d1_p50, d1_p99), ratio_disagg = load_ratio(
+        disagg_fleet(ar_t, factory=build_tpot), "decode")
+    colo = Fleet(build_tpot, mode="foundry", archive=ar_t, policy=pol(2))
+    (c0_p50, c0_p99), (c1_p50, c1_p99), ratio_colo = load_ratio(
+        colo, "serve")
+    if not quick:
+        assert ratio_disagg <= 1.2, \
+            (f"prefill load leaked into the decode pool: p99 TPOT "
+             f"{d1_p99 * 1e6:.0f}us vs baseline {d0_p99 * 1e6:.0f}us "
+             f"({ratio_disagg:.2f}x)")
+        assert ratio_colo > 1.5 and ratio_colo > ratio_disagg, \
+            (f"colocated fleet did not degrade under the same mix: "
+             f"{ratio_colo:.2f}x vs disaggregated {ratio_disagg:.2f}x")
+    return [
+        ("fig19.decode_p99_baseline", d0_p99 * 1e6,
+         f"disagg_shorts_only_win{WIN}_p50={d0_p50 * 1e6:.0f}us"),
+        ("fig19.decode_p99_disagg", d1_p99 * 1e6,
+         f"under_prefill_load_ratio={ratio_disagg:.2f}"
+         f"_p50_ratio={d1_p50 / d0_p50:.2f}"),
+        ("fig19.decode_p99_colocated", c1_p99 * 1e6,
+         f"own_baseline={c0_p99 * 1e6:.0f}us_ratio={ratio_colo:.2f}"
+         f"_p50_ratio={c1_p50 / c0_p50:.2f}"),
+    ], ratio_disagg, ratio_colo
+
+
+def run(quick: bool = False):
+    plen = 24 if quick else 32
+    n_long = 4 if quick else 8
+    short_new = 8 if quick else 12
+    rows = []
+
+    # TPOT isolation runs first in a quiet heap (see module docstring)
+    tpot_rows, ratio_disagg, ratio_colo = _tpot_section(quick)
+
+    ar, _ = build().save_archive()
+    ar = Archive.from_bytes(ar.to_bytes(), lazy=True)
+
+    # oracle token streams from a colocated single engine, one at a time
+    workload = ([(p, short_new) for p in SHORTS]
+                + [(long_prompt(j, plen), 3) for j in range(n_long)])
+    oracle_eng = build()
+    oracle_eng.cold_start_foundry(ar, background_exact=False)
+    oracle = {}
+    for p, n_new in workload:
+        r = oracle_eng.submit(p, n_new)
+        oracle_eng.run_until_drained()
+        oracle[(tuple(p), n_new)] = tuple(r.generated)
+
+    # -- correctness: byte identity across the handoff, zero drops --------
+    fleet = disagg_fleet(ar)
+    fleet.start()
+    wait_ready(fleet, 2)
+    reqs = [fleet.submit(p, n_new) for p, n_new in workload]
+    drain(fleet, reqs)
+    fleet.drain_background()
+    rep = fleet.report()
+    s = rep.summary()
+    assert rep.n_failed == 0 and rep.n_done == len(reqs), \
+        f"dropped requests: {rep.n_failed} failed / {rep.n_done} done"
+    for r in reqs:
+        assert tuple(r.generated) == oracle[(tuple(r.prompt),
+                                             r.max_new_tokens)], \
+            f"req {r.req_id} diverged across the prefill->decode handoff"
+    assert fleet.handoffs > 0, "no request ever crossed the pools"
+    assert s["fallback_compiles"] == 0, "a pool compiled instead of LOADing"
+    assert s["background_errors"] == 0
+    assert s["handoff_wait_p50_s"] is not None
+    n_handoffs = fleet.handoffs
+    rows.append(("fig19.served", rep.n_done, "byte_identity_asserted"))
+    rows.append(("fig19.handoffs", n_handoffs,
+                 f"requeued={fleet.handoff_requeued}"))
+    rows.append(("fig19.handoff_wait_p50", s["handoff_wait_p50_s"] * 1e6,
+                 f"p95={s['handoff_wait_p95_s'] * 1e6:.1f}us"))
+
+    # -- prefill scaling: ticks to drain a long burst, 1 vs 2 replicas ----
+    # decode stays at 2 replicas in BOTH configs (enough slots to absorb
+    # all 16 handoffs without a requeue-and-refill) so the only variable
+    # is prefill capacity — the axis the colocated fleet cannot scale alone
+    burst = [(long_prompt(100 + j, plen), 2) for j in range(16)]
+    ticks = {}
+    for n_pre in (1, 2):
+        f = disagg_fleet(ar, n_prefill=n_pre, n_decode=2)
+        f.start()
+        wait_ready(f, n_pre + 2)
+        rs = [f.submit(p, n_new) for p, n_new in burst]
+        ticks[n_pre] = drain(f, rs)
+        frep = f.report()
+        assert frep.n_failed == 0 and frep.n_done == len(rs)
+        assert frep.summary()["fallback_compiles"] == 0
+    ratio = ticks[1] / max(1, ticks[2])
+    assert ratio > 1.3, \
+        (f"2 prefill replicas must drain the burst substantially faster: "
+         f"{ticks[1]} vs {ticks[2]} ticks (ratio {ratio:.2f})")
+    rows.append(("fig19.prefill_burst_ticks_1p", ticks[1], "16_long_fills"))
+    rows.append(("fig19.prefill_burst_ticks_2p", ticks[2],
+                 f"scaling_ratio={ratio:.2f}_gt_1.3_asserted"))
+
+    rows.extend(tpot_rows)
+    headline = {"decode_p99_ratio_disagg": ratio_disagg,
+                "decode_p99_ratio_colocated": ratio_colo,
+                "prefill_scaling_ratio": ratio,
+                "handoffs": float(n_handoffs)}
+    return rows, headline
+
+
+if __name__ == "__main__":
+    import argparse
+
+    from benchmarks.common import emit
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: smaller trace; identity / zero-drop / "
+                         "zero-compile / prefill-scaling assertions only "
+                         "(wall-clock p99 gates run in full mode)")
+    args = ap.parse_args()
+    rows, headline = run(quick=args.quick)
+    emit(rows, figure="fig19_disagg", headline=headline)

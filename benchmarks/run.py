@@ -17,7 +17,7 @@ MODULES = [
     "fig7_coldstart", "fig8_breakdown", "fig9_tpot", "fig10_pergraph",
     "fig11_templates", "fig12_rank_stamp", "fig13_autoscale",
     "fig14_modelzoo", "fig15_reshard", "fig16_prefix_cache", "fig17_chaos",
-    "fig18_observability", "tab1_storage", "tab2_contention",
+    "fig18_observability", "fig19_disagg", "tab1_storage", "tab2_contention",
 ]
 
 

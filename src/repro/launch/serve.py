@@ -18,6 +18,13 @@
     PYTHONPATH=src python -m repro.launch.serve \
         --models qwen3-14b-reduced,smollm-360m-reduced --depot /tmp/depot \
         --zoo-rounds 2
+
+    # phase-disaggregated fleet: wide prefill pool + narrow decode pool,
+    # per-request KV handoff after the first token (docs §14); both pools
+    # LOAD the same archive (the wide pool via rank stamping)
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-14b-reduced \
+        --load /tmp/qwen.fndry --fleet \
+        --pools prefill=2:wide,decode=1:narrow --trace 10:25:30:1:6
 """
 from __future__ import annotations
 
@@ -39,12 +46,57 @@ from repro.serving.fleet import AutoscalePolicy, Fleet, spike_trace
 from repro.serving.router import ModelPolicy, ModelRouter
 
 
-def build(arch: str, max_batch: int, max_seq: int) -> ServingEngine:
+def build(arch: str, max_batch: int, max_seq: int,
+          mesh=None) -> ServingEngine:
     cfg = get_arch(arch)
-    eng = ServingEngine(Model(cfg), max_batch=max_batch, max_seq=max_seq,
+    if mesh is None:
+        model = Model(cfg)
+    else:
+        from repro.launch.mesh import ShardCtx, resolve_mesh
+        model = Model(cfg, ShardCtx(mesh=resolve_mesh(mesh)))
+    eng = ServingEngine(model, max_batch=max_batch, max_seq=max_seq,
                         bucket_mode="pow2")
     eng.load_weights(rng=jax.random.PRNGKey(0))
     return eng
+
+
+def parse_pools(spec: str):
+    """``prefill=2:wide,decode=1:narrow`` -> [PoolSpec, ...].
+
+    Each entry is ``phase=count[:mesh]`` where mesh is ``wide`` (every
+    local device, via make_host_mesh — LOADed from the shared archive by
+    rank stamping), ``narrow`` (un-meshed single device, the exact LOAD
+    path), or an explicit ``AxB`` data x model shape."""
+    from repro.launch.mesh import MeshSpec, make_host_mesh
+    from repro.serving.fleet import PoolSpec
+    pools = []
+    for entry in spec.split(","):
+        entry = entry.strip()
+        if not entry:
+            continue
+        phase, eq, rest = entry.partition("=")
+        count_s, _, mesh_s = rest.partition(":")
+        if not eq or not count_s.isdigit():
+            raise ValueError(
+                f"bad --pools entry {entry!r}: want phase=count[:mesh]")
+        n = int(count_s)
+        mesh_s = mesh_s.strip().lower()
+        if mesh_s in ("", "narrow"):
+            mesh = None
+        elif mesh_s == "wide":
+            mesh = make_host_mesh()
+        elif "x" in mesh_s:
+            a, _, b = mesh_s.partition("x")
+            mesh = MeshSpec((int(a), int(b)))
+        else:
+            raise ValueError(f"bad --pools mesh {mesh_s!r}: want "
+                             f"wide | narrow | AxB")
+        pools.append(PoolSpec(
+            phase.strip(),
+            AutoscalePolicy(min_replicas=n, max_replicas=n), mesh))
+    if not pools:
+        raise ValueError("--pools parsed to an empty pool list")
+    return pools
 
 
 def run_fleet(args):
@@ -67,11 +119,20 @@ def run_fleet(args):
     warm, spike, cool, base, rate = (int(x) for x in args.trace.split(":"))
     trace = spike_trace(warm_ticks=warm, spike_ticks=spike, cool_ticks=cool,
                         base_rate=base, spike_rate=rate)
-    fleet = Fleet(lambda: build(args.arch, args.max_batch, args.max_seq),
-                  mode=args.fleet_mode, archive=archive,
-                  policy=AutoscalePolicy(min_replicas=args.min_replicas,
-                                         max_replicas=args.max_replicas),
-                  verbose=True)
+    if args.pools:
+        # phase-disaggregated pools (docs §14): requests enter on the
+        # prefill pool and migrate to decode via per-request KV handoff
+        fleet = Fleet(
+            factory_for_mesh=lambda m: build(args.arch, args.max_batch,
+                                             args.max_seq, mesh=m),
+            mode=args.fleet_mode, archive=archive,
+            pools=parse_pools(args.pools), verbose=True)
+    else:
+        fleet = Fleet(lambda: build(args.arch, args.max_batch, args.max_seq),
+                      mode=args.fleet_mode, archive=archive,
+                      policy=AutoscalePolicy(min_replicas=args.min_replicas,
+                                             max_replicas=args.max_replicas),
+                      verbose=True)
     if args.chaos > 0:
         # supervised-fleet demo: kill N decode steps spread over the trace
         # and watch the fleet salvage + respawn (serving/faults.py)
@@ -90,7 +151,19 @@ def run_fleet(args):
             plan.deactivate()
     fleet.drain_background()  # then re-report to pick up background_errors
     rep = fleet.report()
-    print(json.dumps(rep.summary(), indent=1, default=str))
+    s = rep.summary()
+    print(json.dumps(s, indent=1, default=str))
+    if fleet.disaggregated:
+        w50, w95 = s["handoff_wait_p50_s"], s["handoff_wait_p95_s"]
+        print(f"  handoffs: {rep.handoffs} adopted, "
+              f"{rep.handoff_requeued} requeued"
+              + (f", wait p50={w50 * 1e3:.1f}ms p95={w95 * 1e3:.1f}ms"
+                 if w50 is not None else ""))
+        for p in s["pools"]:
+            p99 = p["step_wall_p99_s"]
+            tail = f" step_p99={p99 * 1e3:.2f}ms" if p99 is not None else ""
+            print(f"  pool {p['phase']}: replicas={p['ready']} "
+                  f"mesh={p['mesh']} steps={p['steps']}{tail}")
     for r in rep.replicas:
         cs = r.cold_start_to_first_token_s
         print(f"  replica {r.replica_id}: mode={r.mode} "
@@ -211,6 +284,13 @@ def main():
                     choices=("foundry", "vanilla", "eager"))
     ap.add_argument("--min-replicas", type=int, default=1)
     ap.add_argument("--max-replicas", type=int, default=4)
+    ap.add_argument("--pools", default=None, metavar="SPEC",
+                    help="with --fleet: phase-disaggregated pools, e.g. "
+                         "'prefill=2:wide,decode=1:narrow' "
+                         "(phase=count[:mesh]; mesh is wide | narrow | AxB; "
+                         "requests prefill on one pool and migrate to the "
+                         "other via per-request KV handoff, overriding "
+                         "--min/--max-replicas)")
     ap.add_argument("--trace", default="10:25:30:1:6",
                     help="warm:spike:cool:base_rate:spike_rate ticks")
     ap.add_argument("--chaos", type=int, default=0,

@@ -39,7 +39,8 @@ import numpy as np
 
 from repro.core.memory_plan import MemoryPlan
 from repro.obs import metrics as obs_metrics
-from repro.serving.kvcache import RowBundle, reshard_rows
+from repro.serving.rowbundle import (RowBundle, check_export_slots,
+                                     check_import, reshard_rows)
 
 # Mirrors RadixPrefixCache.stats — both fed at the same code points so the
 # exposition and the dict can never disagree (docs/architecture.md §13).
@@ -530,9 +531,7 @@ class PagedKVCachePool:
         """Gather the given slots' blocks into dense per-request rows in the
         slot-layout interchange format ([L,n,S,Hkv,Dh] k rows, [n] lengths,
         v rows) so either pool layout can import them."""
-        for s in slots:
-            if not (0 <= s < len(self.slots)) or self.slots[s] is None:
-                raise ValueError(f"export of slot {s}: not an active slot")
+        check_export_slots(slots, self.slots)
         MB, bs = self.blocks_per_seq, self.block_size
         tbl = np.zeros((len(slots), MB), np.int32)
         lens = np.zeros((len(slots),), np.int32)
@@ -557,13 +556,7 @@ class PagedKVCachePool:
         its length, reshard the row onto this pool's mesh, and scatter it
         block-by-block into the pools. Imported rows are private (no radix
         attachment — the migrated request may be mid-stream)."""
-        if len(req_ids) != bundle.n:
-            raise ValueError(f"import of {bundle.n} rows for {len(req_ids)} "
-                             f"requests")
-        if self.n_active + bundle.n > self.max_batch:
-            raise RuntimeError(
-                f"pool cannot host {bundle.n} imported rows "
-                f"({self.n_active} active, max_batch {self.max_batch})")
+        check_import(bundle, req_ids, self.n_active, self.max_batch)
         k_rows, lens, v_rows = bundle.rows
         lens = np.asarray(lens)
         bs = self.block_size

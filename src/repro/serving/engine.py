@@ -739,27 +739,55 @@ class ServingEngine:
             steps += 1
         return steps
 
-    # ---- live migration (Fleet.reshard cutover) ----------------------------
+    # ---- live migration (Fleet.reshard cutover, prefill->decode handoff) ---
+    def export_requests(self, reqs: List[Request], *,
+                        release: bool = False) -> RowBundle:
+        """Detach specific RUNNING requests with their KV rows for migration
+        to another engine. The requests leave WAITING with no slot — in
+        flight between engines; fill progress travels as the exported row's
+        length (the adopter re-derives its own fill target from it).
+
+        ``release=False`` leaves the pool slots occupied — for callers that
+        strip a replica about to be retired (reshard cutover, salvage), where
+        releasing would only churn the doomed pool. ``release=True`` is the
+        per-request handoff path (docs/architecture.md §14): this engine
+        keeps serving, so the slots must go back to the pool. Slots are
+        released highest-first — ``release`` compacts the max active row
+        into the hole, and under that order the moved row always belongs to
+        a still-running request, so its slot fixup can land."""
+        sched = self.scheduler
+        for r in reqs:
+            if r.slot is None or sched.running.get(r.req_id) is not r:
+                raise ValueError(f"export of request {r.req_id}: not running "
+                                 f"with a slot on this engine")
+        bundle = self.pool.export_rows([r.slot for r in reqs])
+        slots = []
+        for r in reqs:
+            sched.running.pop(r.req_id, None)
+            self._fill_target.pop(r.req_id, None)
+            slots.append(r.slot)
+            r.slot = None
+            r.state = ReqState.WAITING
+        if release:
+            for s in sorted(slots, reverse=True):
+                self.pool.release(s)
+                moved_id = (self.pool.slots[s]
+                            if s < len(self.pool.slots) else None)
+                if moved_id is not None and moved_id in sched.running:
+                    sched.running[moved_id].slot = s
+        self._tokens_dirty = True
+        return bundle
+
     def export_inflight(self):
         """Detach this engine's whole in-flight population for migration to
         another engine (possibly on a different mesh): every RUNNING request
         with its KV rows, plus the queued-but-not-admitted requests. Returns
-        ``(running, bundle, queued)`` where ``bundle`` is a
-        ``kvcache.RowBundle`` aligned with ``running`` (None when nothing was
-        running). The requests are left in WAITING with no slot — in flight
-        between engines — and this engine's device token state is
-        invalidated."""
+        ``(running, bundle, queued)`` where ``bundle`` is a ``RowBundle``
+        aligned with ``running`` (None when nothing was running). Slots stay
+        occupied — every caller retires this engine afterwards."""
         running = [r for r in self.scheduler.running.values()
                    if r.slot is not None]
-        bundle = (self.pool.export_rows([r.slot for r in running])
-                  if running else None)
-        for r in running:
-            self.scheduler.running.pop(r.req_id, None)
-            r.slot = None
-            r.state = ReqState.WAITING
-            # fill progress travels as the exported row's length; the
-            # adopting engine re-derives its own fill target from it
-            self._fill_target.pop(r.req_id, None)
+        bundle = self.export_requests(running) if running else None
         # anything admitted but slotless (mid-failure) rides with the queue
         stragglers = list(self.scheduler.running.values())
         for r in stragglers:

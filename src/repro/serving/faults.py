@@ -16,6 +16,10 @@ test asserts the code's ``fault_point`` calls and this table stay in sync):
     restore.install     per-group install step of foundry_load
     engine.decode_step  top of ServingEngine.step (tag = replica fault_tag)
     kv.import_rows      ServingEngine.adopt_inflight before the pool import
+    kv.handoff          prefill->decode handoff in Fleet, after the export
+                        but before a decode replica adopts (tag = source
+                        replica fault_tag); a hit requeues the request onto
+                        the decode pool with its prefix kept
     reshard.cutover     top of Fleet._cutover, before any mutation
 
 Fault kinds:
@@ -56,6 +60,7 @@ FAULT_SITES: Dict[str, str] = {
     "restore.install": "per-group template install during foundry_load",
     "engine.decode_step": "one serving decode step",
     "kv.import_rows": "KV row import during adopt_inflight",
+    "kv.handoff": "prefill->decode KV handoff (export -> adopt)",
     "reshard.cutover": "fleet reshard cutover",
 }
 

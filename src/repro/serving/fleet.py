@@ -1,387 +1,79 @@
-"""Autoscaling replica fleet: N serving engines cold-starting against ONE
-shared Foundry archive while traffic is in flight (paper §1-2).
+"""Autoscaling replica fleet: phase-aware replica pools cold-starting
+against ONE shared Foundry archive while traffic is in flight (paper §1-2).
 
 This is the paper's motivating scenario made executable: a load spike
 arrives, the autoscaler spins up replicas, and every second a replica spends
 in cold start is a second of queue growth ("Breaking the Ice"; HydraServe's
 serverless scale-out framing). The fleet makes the cold-start path the
-measured quantity:
+measured quantity: one ``Archive`` object is shared by every replica LOAD
+(the lazy v2 blob store parses the manifest once and decompresses each blob
+at most once fleet-wide), replicas provision on background threads while the
+fleet keeps dispatching, and serving steps run cooperatively on the fleet's
+own thread so scale-up/scale-down behavior is deterministic enough to
+unit-test.
 
-  * one ``Archive`` object is shared by every replica LOAD — the lazy v2
-    blob store (core/archive.py) parses the manifest once and decompresses
-    each blob at most once fleet-wide, so concurrent LOADs de-duplicate
-    instead of multiplying work;
-  * each replica provisions on a background thread (build engine + cold
-    start) while the fleet keeps dispatching to already-READY replicas;
-  * serving steps run cooperatively on the fleet's own thread (one
-    ``tick()`` = one decode step per READY replica), so scale-up/scale-down
-    behavior is deterministic enough to unit-test;
-  * per-replica cold-start-to-first-token and fleet-wide TTFT/TPOT are
-    recorded (``FleetReport``), which is exactly the comparison
-    benchmarks/fig13_autoscale.py plots across vanilla / foundry /
-    foundry-stamped cold starts.
+A fleet is now a SET OF POOLS (``serving/pool.py``; docs/architecture.md
+§14). The default is one colocated pool of phase "serve" — the historical
+behavior, byte for byte. Passing ``pools=[PoolSpec("prefill", ...),
+PoolSpec("decode", ...)]`` phase-disaggregates it (HydraServe / ParaServe,
+PAPERS.md): prefill replicas provision on a wide mesh via the rank-stamped
+LOAD of the SAME archive (§4.3 — one capture, many topologies), run the
+captured decode-fill prefill to completion, and the fleet hands each request
+off per-request onto a decode replica through ``export_requests ->
+RowBundle -> adopt_inflight``::
 
-Autoscaling policy (``AutoscalePolicy``): scale up toward
-``ceil(inflight / target_inflight_per_replica)`` (counting replicas already
-provisioning, so a burst does not spawn a storm), scale down — at most one
-replica per tick — when a replica has been idle for
-``scale_down_idle_ticks`` consecutive ticks and the fleet is above
-``min_replicas``.
+    submit ──▶ prefill pool (wide mesh)          decode pool (narrow mesh)
+               │  decode-fill to plen            │  steady-state decode
+               └─▶ export_requests ── RowBundle ─▶ adopt_inflight ──▶ done
+                        (kv.handoff fault site; a failed handoff
+                         requeues onto the decode pool, prefix kept)
 
-Live reshard (``Fleet.reshard``, paper §4.3 "dynamic parallelism
-switching"; docs/architecture.md §8): the fleet moves a *serving* model
-between shape-compatible meshes without tearing traffic down. Replacement
-replicas stand up on the new topology via stamped-template LOAD of the SAME
-archive (warm: no re-prealloc, deserialized templates reused) while the old
-generation keeps serving; at cutover every in-flight request's KV rows are
-exported from the old pools and imported — ``device_put``-resharded — into
-the new mesh's pools, the backlog flips over atomically, and the old
-replicas are drained and released. State machine::
-
-    SERVING ──reshard()──▶ DUAL ──all new replicas READY──▶ CUTOVER
-       ▲                    (old generation keeps serving)      │
-       └───────── DRAINED ◀── migrate KV rows + flip queue ─────┘
-
-Zero dropped requests, zero fallback compiles, token streams byte-identical
-across the switch (benchmarks/fig15_reshard.py asserts all three). The
-``strategy="restart"`` ablation is the drain-and-restart baseline: old
-replicas are torn down FIRST, requests retry from their kept prefixes, and
-the backlog stalls while the new topology provisions.
+Token streams stay byte-identical across the handoff (the adopter re-derives
+a one-step-left fill target, which degenerates to the steady-state feeding
+rule), no fallback compiles, and radix prefix-cache hits survive (the
+prefill pool's tree serves later prompts; the exported rows carry the KV).
+Each pool keeps its own ``AutoscalePolicy``, mesh, and reshard trigger —
+``Fleet.reshard(..., pool="prefill")`` switches one pool's topology while
+the other keeps serving. Autoscaling, crash salvage (cross-pool: a crashed
+prefill replica's mid-fill rows can land on decode replicas), and the
+degradation ladder all live in ``ReplicaPool``; the fleet owns request
+identity, admission shedding, the handoff, and fleet-wide accounting.
 """
 from __future__ import annotations
 
 import itertools
 import logging
-import math
 import random
-import threading
 import time
 from collections import deque
-from contextlib import nullcontext
 from dataclasses import dataclass, field
-from enum import Enum
-from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Deque, Dict, List, Optional, Sequence
 
-from repro.core import Archive, wait_for_background
+from repro.core import Archive
 from repro.launch.mesh import describe_mesh, resolve_mesh
 from repro.obs import metrics as obs_metrics
 from repro.obs import trace as obs_trace
 from repro.serving.engine import ServingEngine
 from repro.serving.faults import fault_point
+from repro.serving.pool import (AutoscalePolicy, PoolSpec, Replica,
+                                ReplicaPool, ReplicaState, ReplicaStats,
+                                ReshardReport, _ReshardOp)
 from repro.serving.scheduler import Request, ReqState, Scheduler
 
 log = logging.getLogger("repro.serving.fleet")
 
-# docs/architecture.md §13 has the full metric catalog
-_M_REPLICA_EVENTS = obs_metrics.counter(
-    "fleet_replica_events_total",
-    "Replica lifecycle transitions (spawn/ready/failed/crashed/respawn/"
-    "stopped).", ("event",))
-_M_CRASHES = obs_metrics.counter(
-    "fleet_crashes_total", "Mid-serving replica crashes contained by "
-    "supervision.")
-_M_RESPAWNS = obs_metrics.counter(
-    "fleet_respawns_total", "Replacement replicas spawned after crashes.")
-_M_SALVAGED = obs_metrics.counter(
-    "fleet_salvaged_requests_total",
-    "In-flight requests whose KV rows migrated off a crashed replica.")
-_M_CRASH_REQUEUED = obs_metrics.counter(
-    "fleet_crash_requeued_requests_total",
-    "Requests retried from kept prefixes after a crash (no KV carried).")
+# docs/architecture.md §13 has the full metric catalog (per-pool gauges and
+# the replica lifecycle counters are declared in serving/pool.py)
 _M_SHED = obs_metrics.counter(
     "fleet_shed_requests_total",
     "Requests rejected at admission by a terminally degraded fleet.")
-_M_RESHARDS = obs_metrics.counter(
-    "fleet_reshard_total", "Parallelism switches by outcome.", ("outcome",))
-_M_BACKLOG = obs_metrics.gauge(
-    "fleet_backlog_depth", "Fleet-wide queued requests (not yet dispatched "
-    "to a replica).", ("fleet",))
-_M_READY = obs_metrics.gauge(
-    "fleet_replicas_ready", "READY replicas.", ("fleet",))
-_M_INFLIGHT = obs_metrics.gauge(
-    "fleet_inflight", "Backlog + per-replica queued/running load (the "
-    "autoscale signal).", ("fleet",))
-_M_DEGRADED = obs_metrics.gauge(
-    "fleet_degraded", "1 while READY replicas < policy.min_replicas after "
-    "having reached the floor once.", ("fleet",))
-
-
-class ReplicaState(Enum):
-    PROVISIONING = "provisioning"   # cold-start thread running
-    READY = "ready"                 # serving
-    STOPPED = "stopped"             # scaled down
-    FAILED = "failed"               # cold start raised / provision timed out
-    CRASHED = "crashed"             # died MID-SERVING; salvaged + replaced
-
-
-@dataclass
-class ReplicaStats:
-    """Lifecycle timeline of one replica (all times perf_counter seconds)."""
-    replica_id: int
-    spawned_t: float
-    ready_t: Optional[float] = None
-    first_token_t: Optional[float] = None
-    stopped_t: Optional[float] = None
-    mode: Optional[str] = None            # cold-start path actually taken
-    cold_start_s: Optional[float] = None  # engine cold-start phase total
-    fallback_compiles: int = 0
-    background_errors: int = 0
-    steps: int = 0
-    served_requests: int = 0
-    error: Optional[str] = None
-
-    @property
-    def provision_s(self) -> Optional[float]:
-        """Spawn -> servable (engine build + weights + cold start)."""
-        return None if self.ready_t is None else self.ready_t - self.spawned_t
-
-    @property
-    def cold_start_to_first_token_s(self) -> Optional[float]:
-        """Spawn -> first token out of this replica: the scale-out latency a
-        user stuck in the queue actually experiences."""
-        return (None if self.first_token_t is None
-                else self.first_token_t - self.spawned_t)
-
-
-class Replica:
-    """One ServingEngine behind the fleet queue.
-
-    Provisioning (engine build + cold start) runs on a daemon thread so
-    replicas come up while traffic is in flight; decode steps run on the
-    fleet's thread via ``step()``.
-    """
-
-    def __init__(self, rid: int, engine_factory: Callable[[], ServingEngine],
-                 cold_start: Callable[[ServingEngine], object], mesh=None,
-                 deadline_s: Optional[float] = None):
-        self.stats = ReplicaStats(rid, spawned_t=time.perf_counter())
-        self.state = ReplicaState.PROVISIONING
-        self.engine: Optional[ServingEngine] = None
-        self.cold_report = None
-        self.idle_ticks = 0
-        # set by Fleet.abort_reshard on a replica it could not join: an
-        # engine the provisioning thread attaches later must be dropped,
-        # not served or accounted (poll() reaps it on the next tick)
-        self.discard_engine = False
-        self._engine_factory = engine_factory
-        self._cold_start = cold_start
-        self._mesh = mesh
-        self._deadline_s = deadline_s
-        self._error: Optional[str] = None
-        _M_REPLICA_EVENTS.inc(event="spawn")
-        obs_trace.instant("replica.spawn", cat="fleet", replica=rid)
-        self._thread = threading.Thread(target=self._provision, daemon=True)
-        self._thread.start()
-
-    def _ctx(self):
-        return self._mesh if self._mesh is not None else nullcontext()
-
-    def _provision(self):
-        try:
-            with self._ctx():
-                eng = self._engine_factory()
-                t0 = time.perf_counter()
-                rep = self._cold_start(eng)
-            self.cold_report = rep
-            self.stats.mode = getattr(rep, "mode", None)
-            self.stats.cold_start_s = getattr(
-                rep, "total_s", time.perf_counter() - t0)
-            self.stats.fallback_compiles = getattr(rep, "fallback_compiles", 0)
-            self.engine = eng
-        except Exception as e:  # surfaced via ReplicaState.FAILED
-            self._error = f"{type(e).__name__}: {e}"
-
-    def poll(self) -> ReplicaState:
-        """Advance PROVISIONING -> READY/FAILED when the thread finishes.
-        A provision past its deadline (hung IO, wedged compile) is FAILED
-        in place — the caller can respawn — and its engine, should the
-        thread eventually attach one, is reaped like an aborted reshard's."""
-        if self.discard_engine and self.engine is not None:
-            self.engine = None  # late attach after abort/timeout/crash
-        if self.state is ReplicaState.PROVISIONING and self._thread.is_alive():
-            if (self._deadline_s is not None
-                    and time.perf_counter() - self.stats.spawned_t
-                    > self._deadline_s):
-                self.state = ReplicaState.FAILED
-                self.stats.error = (f"provision deadline exceeded "
-                                    f"({self._deadline_s:.1f}s; thread "
-                                    f"still running)")
-                self.discard_engine = True
-                _M_REPLICA_EVENTS.inc(event="failed")
-        if self.state is ReplicaState.PROVISIONING and not self._thread.is_alive():
-            if self._error is not None or self.engine is None:
-                self.state = ReplicaState.FAILED
-                self.stats.error = self._error or "cold start produced no engine"
-                _M_REPLICA_EVENTS.inc(event="failed")
-            else:
-                self.state = ReplicaState.READY
-                self.stats.ready_t = time.perf_counter()
-                # stamp the fault-injection identity so chaos plans can
-                # target this replica (serving/faults.py)
-                self.engine.fault_tag = f"replica{self.stats.replica_id}"
-                _M_REPLICA_EVENTS.inc(event="ready")
-                # provision_s as a span on the fleet timeline: spawn->READY
-                obs_trace.complete(
-                    "replica.provision", "fleet", self.stats.spawned_t,
-                    self.stats.ready_t, replica=self.stats.replica_id,
-                    mode=self.stats.mode or "?")
-        return self.state
-
-    @property
-    def load(self) -> int:
-        """Requests this replica still owns (queued + running)."""
-        return 0 if self.engine is None else self.engine.scheduler.pending
-
-    def assign(self, req: Request):
-        self.engine.scheduler.queue.append(req)
-
-    def step(self) -> int:
-        with self._ctx():
-            n = self.engine.step()
-        self.stats.steps += 1
-        self.stats.served_requests = len(self.engine.scheduler.done)
-        if self.stats.first_token_t is None:
-            # only tokens emitted by THIS replica count: a request migrated
-            # in by a reshard cutover carries a first_token_t from the old
-            # generation, which predates this replica's spawn
-            firsts = [r.first_token_t
-                      for r in self.engine.scheduler.running.values()
-                      if r.first_token_t is not None
-                      and r.first_token_t >= self.stats.spawned_t]
-            firsts += [r.first_token_t for r in self.engine.scheduler.done
-                       if r.first_token_t is not None
-                       and r.first_token_t >= self.stats.spawned_t]
-            if firsts:
-                self.stats.first_token_t = min(firsts)
-        self.idle_ticks = self.idle_ticks + 1 if self.load == 0 else 0
-        return n
-
-    def stop(self):
-        self.state = ReplicaState.STOPPED
-        self.stats.stopped_t = time.perf_counter()
-        _M_REPLICA_EVENTS.inc(event="stopped")
-
-    def crash(self, reason: str):
-        """Mark this replica dead MID-SERVING (Fleet supervision): distinct
-        from FAILED (never came up) so reports can tell a cold-start problem
-        from a serving-time one. The fleet salvages the engine's in-flight
-        population before releasing it."""
-        self.state = ReplicaState.CRASHED
-        self.stats.error = reason
-        self.stats.stopped_t = time.perf_counter()
-        _M_REPLICA_EVENTS.inc(event="crashed")
-        obs_trace.instant("replica.crash", cat="fleet",
-                          replica=self.stats.replica_id, reason=reason)
-
-    def join_provision(self, timeout: float = 120.0) -> ReplicaState:
-        """Wait for an in-flight provision to finish and resolve the state.
-        Stopping a PROVISIONING replica without this races the daemon
-        thread, which would re-attach the freshly built engine (and its KV
-        pool) to the stopped replica after the caller released it.
-
-        A thread STILL alive after ``timeout`` resolves to FAILED with a
-        distinct timeout error (callers respawn on it) instead of leaving
-        the replica looking PROVISIONING forever; the wedged thread's
-        eventual engine attach is reaped by ``poll()``."""
-        self._thread.join(timeout)
-        if self._thread.is_alive() and self.state is ReplicaState.PROVISIONING:
-            self.state = ReplicaState.FAILED
-            self.stats.error = (f"provision join timed out after "
-                                f"{timeout:.1f}s (thread still running)")
-            self.discard_engine = True
-            return self.state
-        return self.poll()
-
-    def drain_background(self, timeout: float = 300.0):
-        """Join the engine LOAD's background exact-bucket workers and copy
-        their error count into the stats (tests assert it is 0)."""
-        rep = getattr(self.engine, "_load_report", None)
-        if rep is not None:
-            wait_for_background(rep, timeout)
-            self.stats.background_errors = rep.background_errors
-
-
-@dataclass
-class AutoscalePolicy:
-    min_replicas: int = 1
-    max_replicas: int = 4
-    # inflight requests one replica is expected to absorb before the fleet
-    # scales; engines can batch max_batch of them per step
-    target_inflight_per_replica: int = 8
-    scale_down_idle_ticks: int = 25
-    # provisioning failures after which the fleet stops respawning (a
-    # systematically failing cold start — bad archive, broken factory —
-    # must fail fast, not spawn replicas forever)
-    max_spawn_failures: int = 3
-    # mid-serving crash budget, the serving-time analogue of
-    # max_spawn_failures: more than this many CRASHED replicas inside a
-    # sliding crash_window_s means the fleet is crash-looping (poisoned
-    # archive, broken kernel) and must stop respawning and degrade
-    max_crashes_in_window: int = 5
-    crash_window_s: float = 60.0
-    # wall-clock deadline for one replica provision (None: wait forever —
-    # the pre-supervision behavior); a hung cold start past it is FAILED by
-    # poll() so the autoscaler/supervisor can respawn instead of blocking
-    provision_deadline_s: Optional[float] = None
-
-
-@dataclass
-class ReshardReport:
-    """Timeline + accounting of one parallelism switch (``Fleet.reshard``).
-
-    All times are perf_counter seconds. ``cutover_t``/``drained_t`` stay
-    None until the corresponding transition happens; ``aborted`` carries the
-    reason when the switch could not complete (the old generation keeps
-    serving on a "live" abort).
-    """
-    strategy: str               # "live" | "restart"
-    from_mesh: str
-    to_mesh: str
-    started_t: float
-    new_replicas: int = 0
-    cutover_t: Optional[float] = None
-    drained_t: Optional[float] = None
-    dual_ticks: int = 0          # ticks the two generations coexisted
-                                 # (live only; stays 0 for "restart")
-    migrated_requests: int = 0   # in-flight KV rows moved across meshes
-    requeued_requests: int = 0   # retried from kept prefix (no KV carried)
-    released_replicas: int = 0
-    aborted: Optional[str] = None
-
-    @property
-    def done(self) -> bool:
-        return self.drained_t is not None or self.aborted is not None
-
-    @property
-    def time_to_new_topology_s(self) -> Optional[float]:
-        """reshard() call -> old generation fully drained and released."""
-        return (None if self.drained_t is None
-                else self.drained_t - self.started_t)
-
-    def summary(self) -> Dict[str, object]:
-        return {
-            "strategy": self.strategy,
-            "from_mesh": self.from_mesh, "to_mesh": self.to_mesh,
-            "time_to_new_topology_s": self.time_to_new_topology_s,
-            "dual_ticks": self.dual_ticks,
-            "migrated_requests": self.migrated_requests,
-            "requeued_requests": self.requeued_requests,
-            "new_replicas": self.new_replicas,
-            "released_replicas": self.released_replicas,
-            "aborted": self.aborted,
-        }
-
-
-@dataclass
-class _ReshardOp:
-    """In-flight reshard state (one at a time per fleet)."""
-    new_mesh: object
-    factory: Callable[[], ServingEngine]
-    strategy: str
-    report: ReshardReport
-    old: List[Replica] = field(default_factory=list)
-    new: List[Replica] = field(default_factory=list)
-    deferrals: int = 0  # cutover holds (see Fleet._advance_reshard)
+_M_HANDOFFS = obs_metrics.counter(
+    "fleet_handoffs_total",
+    "Prefill->decode KV handoffs by outcome (adopted/requeued).",
+    ("outcome",))
+_M_HANDOFF_WAIT = obs_metrics.histogram(
+    "serving_handoff_seconds",
+    "Prefill-exit -> decode-adopt handoff latency (adopted path).")
 
 
 @dataclass
@@ -409,6 +101,12 @@ class FleetReport:
     verify_degraded_loads: int = 0    # respawns that fell back to non-strict
     degraded: bool = False            # currently below min_replicas
     degraded_ticks: int = 0           # ticks spent below the floor
+    # phase disaggregation (docs §14)
+    handoffs: int = 0                 # prefill->decode adoptions
+    handoff_requeued: int = 0         # handoffs requeued with prefix kept
+    handoff_waits: List[float] = field(default_factory=list)
+    phase_queue_waits: Dict[str, List[float]] = field(default_factory=dict)
+    pools: List[Dict[str, object]] = field(default_factory=list)
 
     @staticmethod
     def _pct(xs: List[float], q: float) -> Optional[float]:
@@ -449,6 +147,14 @@ class FleetReport:
             "verify_degraded_loads": self.verify_degraded_loads,
             "degraded": self.degraded,
             "degraded_ticks": self.degraded_ticks,
+            "handoffs": self.handoffs,
+            "handoff_requeued": self.handoff_requeued,
+            "handoff_wait_p50_s": self._pct(self.handoff_waits, 0.50),
+            "handoff_wait_p95_s": self._pct(self.handoff_waits, 0.95),
+            "phase_queue_wait_p50_s": {
+                ph: self._pct(ws, 0.50)
+                for ph, ws in sorted(self.phase_queue_waits.items())},
+            "pools": list(self.pools),
         }
 
 
@@ -462,17 +168,17 @@ def spike_trace(warm_ticks: int = 10, spike_ticks: int = 25,
 
 
 class Fleet:
-    """N ServingEngine replicas behind one shared request queue.
+    """Phase-aware replica pools behind one shared request front door.
 
     ``mode`` picks the replica cold-start path: "vanilla" | "eager" |
     "foundry" (LOAD ``archive``; reported as "foundry-stamped" automatically
     when the archive was captured on a different, shape-compatible mesh).
-    ``mesh`` (optional) is entered around every engine build/step — pass the
-    deployment mesh for stamped fleets. ``factory_for_mesh`` is the
-    mesh-parameterized engine factory a resharding fleet needs (the
-    zero-arg ``engine_factory`` then becomes optional): replicas are built
-    with ``factory_for_mesh(current_mesh)``, and ``reshard`` can derive the
-    new topology's factory itself.
+    ``pools`` disaggregates the fleet into named phases (module docstring);
+    omitted, the fleet is one colocated pool of phase "serve" built from the
+    legacy ``policy``/``mesh`` arguments. ``factory_for_mesh`` is the
+    mesh-parameterized engine factory a resharding or multi-mesh fleet needs
+    (the zero-arg ``engine_factory`` then becomes optional): replicas are
+    built with ``factory_for_mesh(pool_mesh)``.
     """
 
     def __init__(self, engine_factory: Optional[Callable[[], ServingEngine]] = None, *,
@@ -481,6 +187,7 @@ class Fleet:
                  allow_stamping: bool = True, background_exact: bool = True,
                  mesh=None,
                  factory_for_mesh: Optional[Callable] = None,
+                 pools: Optional[Sequence[PoolSpec]] = None,
                  verbose: bool = False,
                  name: str = "fleet",
                  trace_path: Optional[str] = None):
@@ -494,42 +201,46 @@ class Fleet:
         self.factory_for_mesh = factory_for_mesh
         self.mode = mode
         self.archive = archive
-        self.policy = policy or AutoscalePolicy()
         self.allow_stamping = allow_stamping
         self.background_exact = background_exact
-        self.mesh = resolve_mesh(mesh)
         self.verbose = verbose
-        self.replicas: List[Replica] = []
-        self.backlog: Deque[Request] = deque()
         self.requests: List[Request] = []
         self.peak_alive = 0
-        self.spawn_failures = 0
-        # set True (router ReshardPolicy.prefer_reshard_over_scale_out) when
-        # the answer to sustained load is a bigger mesh, not more replicas
-        self.suppress_scale_out = False
-        self.reshard_reports: List[ReshardReport] = []
-        self._reshard: Optional[_ReshardOp] = None
-        # supervision state (docs/architecture.md §12): crash accounting,
-        # the sliding-window crash budget, and the admission-shed scheduler
-        # (reuses Scheduler.reject for terminal bookkeeping — no KV touched)
-        self.crashes = 0
-        self.respawns = 0
-        self.salvaged_requests = 0
-        self.crash_requeued_requests = 0
         self.verify_degraded_loads = 0
-        self.degraded_ticks = 0
-        self.crash_budget_exhausted = False
-        self._crash_times: Deque[float] = deque()
-        self._was_at_floor = False  # degradation = DROPPING below the floor
+        # prefill->decode handoff accounting (docs §14)
+        self.handoffs = 0
+        self.handoff_requeued = 0
+        # admission-shed scheduler (reuses Scheduler.reject for terminal
+        # bookkeeping — no KV touched)
         self._shed = Scheduler()
         self._ids = itertools.count()
-        self._rids = itertools.count()
+        self._rids = itertools.count()  # shared: replica ids unique fleet-wide
         self._tick = 0
         self._t0: Optional[float] = None
-        # telemetry identity + optional Chrome/Perfetto trace file: gauges
-        # are labeled by `name` (a router labels each model's fleet), and
-        # `trace_path` starts tracing now and writes the file at report()
         self.name = name
+        # pool topology: legacy single "serve" pool unless specs are given
+        specs = (list(pools) if pools
+                 else [PoolSpec("serve", policy or AutoscalePolicy(), mesh)])
+        self.pools: Dict[str, ReplicaPool] = {}
+        for spec in specs:
+            if spec.phase in self.pools:
+                raise ValueError(f"duplicate pool phase {spec.phase!r}")
+            self.pools[spec.phase] = ReplicaPool(
+                spec.phase, policy=spec.policy, mesh=spec.mesh,
+                engine_factory=engine_factory,
+                factory_for_mesh=factory_for_mesh,
+                cold_start=self._cold_start,
+                respawn_cold_start=(self._respawn_cold_start
+                                    if mode == "foundry" else None),
+                salvage_targets=self._salvage_targets,
+                tick_fn=self.tick, rid_source=self._rids, fleet_name=name)
+        # requests enter through the prefill pool when one exists
+        self._entry = self.pools.get("prefill") or next(iter(self.pools.values()))
+        self.disaggregated = ("prefill" in self.pools
+                              and "decode" in self.pools)
+        # telemetry identity + optional Chrome/Perfetto trace file: gauges
+        # are labeled by (`name`, pool), and `trace_path` starts tracing now
+        # and writes the file at report()
         self.trace_path = trace_path
         self._trace_started_here = False
         if trace_path is not None and not obs_trace.active():
@@ -541,7 +252,7 @@ class Fleet:
             from repro.obs import configure_logging
             configure_logging()
 
-    # -- lifecycle -------------------------------------------------------
+    # -- cold-start wiring (shared by every pool) ------------------------
     def _cold_start(self, eng: ServingEngine, warm: bool = False):
         if self.mode == "vanilla":
             return eng.cold_start_vanilla()
@@ -551,61 +262,6 @@ class Fleet:
                                       background_exact=self.background_exact,
                                       allow_stamping=self.allow_stamping,
                                       warm=warm)
-
-    def _alive(self) -> List[Replica]:
-        return [r for r in self.replicas
-                if r.state in (ReplicaState.PROVISIONING, ReplicaState.READY)]
-
-    def _ready(self) -> List[Replica]:
-        return [r for r in self.replicas if r.state is ReplicaState.READY]
-
-    def _factory_for(self, mesh) -> Callable[[], ServingEngine]:
-        """Zero-arg factory for one replica, with the mesh snapshotted at
-        spawn time (a reshard may flip ``self.mesh`` while a provisioning
-        thread is still running)."""
-        if self.factory_for_mesh is not None:
-            return lambda fm=self.factory_for_mesh, m=mesh: fm(m)
-        return self.engine_factory
-
-    def scale_up(self, n: int = 1) -> List[Replica]:
-        out = []
-        for _ in range(n):
-            mesh = self.mesh
-            r = Replica(next(self._rids), self._factory_for(mesh),
-                        self._cold_start, mesh=mesh,
-                        deadline_s=self.policy.provision_deadline_s)
-            self.replicas.append(r)
-            out.append(r)
-            log.info("+replica %d (%s, tick %d)",
-                     r.stats.replica_id, self.mode, self._tick)
-        return out
-
-    def _can_spawn(self) -> bool:
-        return (self.spawn_failures < self.policy.max_spawn_failures
-                and not self.crash_budget_exhausted)
-
-    def _respawn(self, n: int = 1) -> List[Replica]:
-        """Replace crashed capacity: same path as ``scale_up`` but the cold
-        start is warm for foundry fleets — the shared archive's blobs are
-        already fetched and ``_template_cache`` is hot, so the replacement
-        comes up at warm-LOAD speed (the paper's pitch applied to crash
-        recovery, not just scale-out)."""
-        out = []
-        for _ in range(n):
-            mesh = self.mesh
-            cold = (self._respawn_cold_start if self.mode == "foundry"
-                    else self._cold_start)
-            r = Replica(next(self._rids), self._factory_for(mesh),
-                        cold, mesh=mesh,
-                        deadline_s=self.policy.provision_deadline_s)
-            self.replicas.append(r)
-            out.append(r)
-            self.respawns += 1
-            _M_RESPAWNS.inc()
-            _M_REPLICA_EVENTS.inc(event="respawn")
-            log.info("+replica %d (respawn after crash, tick %d)",
-                     r.stats.replica_id, self._tick)
-        return out
 
     def _respawn_cold_start(self, eng: ServingEngine):
         """Warm foundry LOAD with a verify-degrade rung: if the strict
@@ -624,554 +280,290 @@ class Fleet:
                 self.archive, background_exact=self.background_exact,
                 allow_stamping=self.allow_stamping, warm=True, strict=False)
 
-    def start(self) -> "Fleet":
-        """Spawn the floor of the policy (idempotent)."""
-        if self._t0 is None:
-            self._t0 = time.perf_counter()
-        missing = self.policy.min_replicas - len(self._alive())
-        if missing > 0 and self._can_spawn():
-            self.scale_up(missing)
-        return self
-
-    # -- degradation ladder (docs/architecture.md §12) -------------------
-    @property
-    def degraded(self) -> bool:
-        """Below the autoscale floor after having reached it once: fewer
-        READY replicas than ``policy.min_replicas``. (The initial
-        provisioning ramp is not degradation — nothing was lost.)"""
-        return (self._was_at_floor
-                and len(self._ready()) < self.policy.min_replicas)
-
-    def _sheds_load(self) -> bool:
-        """Terminal incapacity: degraded, nothing provisioning, and the
-        spawn/crash budgets forbid respawning — capacity is NOT coming back,
-        so new load is shed cheaply at admission instead of queueing
-        forever. A degraded fleet with a respawn in flight keeps queueing
-        (recovery is ~a warm LOAD away — the whole point of foundry)."""
-        return (self.degraded and not self._can_spawn()
-                and not any(r.state is ReplicaState.PROVISIONING
-                            for r in self.replicas))
-
-    # -- traffic ---------------------------------------------------------
-    def submit(self, prompt: Sequence[int], max_new_tokens: int) -> Request:
-        """Enqueue on the fleet-wide queue; arrival time is fleet arrival,
-        so TTFT includes queueing AND any cold start it had to wait for.
-        A fleet in terminal degradation (``_sheds_load``) rejects at
-        admission — ``Scheduler.reject`` bookkeeping, no KV, no dispatch."""
-        r = Request(next(self._ids), list(prompt), max_new_tokens)
-        self.requests.append(r)
-        if self._sheds_load():
-            self._shed.reject(
-                r, f"fleet degraded: {len(self._ready())} READY < "
-                   f"min_replicas={self.policy.min_replicas} and the "
-                   f"respawn budget is exhausted; shed at admission")
-            _M_SHED.inc()
-            return r
-        self.backlog.append(r)
-        return r
-
-    def _dispatch(self):
-        """Drain the shared backlog onto READY replicas, least-loaded first,
-        never queueing more than one batch-worth ahead per replica. During a
-        live reshard's DUAL phase the replacement generation is NOT a
-        dispatch target: the queue flips to it atomically at cutover, and
-        routing work there early would leave the cutover nothing to
-        migrate."""
-        ready = self._ready()
-        if self._reshard is not None and self._reshard.strategy == "live":
-            pending_new = {id(r) for r in self._reshard.new}
-            ready = [r for r in ready if id(r) not in pending_new]
-        while self.backlog and ready:
-            ready.sort(key=lambda r: r.load)
-            tgt = ready[0]
-            if tgt.load >= tgt.engine.max_batch:
-                break  # everyone is saturated; leave work visible on backlog
-            tgt.assign(self.backlog.popleft())
-
-    def inflight(self) -> int:
-        """Requests the fleet currently owes: backlog + every READY
-        replica's queued/running load (the autoscale and router reshard
-        trigger signal)."""
-        return len(self.backlog) + sum(r.load for r in self._ready())
-
-    def _autoscale(self):
-        pol = self.policy
-        alive = self._alive()
-        inflight = self.inflight()
-        desired = max(pol.min_replicas,
-                      math.ceil(inflight / max(1, pol.target_inflight_per_replica)))
-        desired = min(pol.max_replicas, desired)
-        if self.suppress_scale_out:
-            desired = min(desired, max(pol.min_replicas, len(alive)))
-        if desired > len(alive) and self._can_spawn():
-            self.scale_up(desired - len(alive))
-        elif not self.backlog and len(alive) > pol.min_replicas:
-            # scale down at most one per tick: oldest idle replica first
-            for r in self._ready():
-                if r.load == 0 and r.idle_ticks >= pol.scale_down_idle_ticks:
-                    r.stop()
-                    log.info("-replica %d (idle %d ticks)",
-                             r.stats.replica_id, r.idle_ticks)
-                    break
-
-    # -- supervision (docs/architecture.md §12) --------------------------
-    def _on_replica_crash(self, r: Replica, exc: Exception):
-        """A decode step raised: contain it. The replica transitions to
-        CRASHED (tick keeps serving everyone else), its in-flight requests
-        are salvaged — KV rows migrated to surviving replicas when the
-        engine is still coherent, requeued from kept prefixes otherwise —
-        and a replacement is respawned from the shared archive unless the
-        sliding-window crash budget says the fleet is crash-looping."""
-        self.crashes += 1
-        _M_CRASHES.inc()
-        now = time.perf_counter()
-        self._crash_times.append(now)
-        while (self._crash_times
-               and now - self._crash_times[0] > self.policy.crash_window_s):
-            self._crash_times.popleft()
-        r.crash(f"{type(exc).__name__}: {exc}")
-        migrated, requeued, failed = self._salvage(r)
-        self.salvaged_requests += migrated
-        self.crash_requeued_requests += requeued
-        _M_SALVAGED.inc(migrated)
-        _M_CRASH_REQUEUED.inc(requeued)
-        log.warning("replica %d CRASHED (%s): salvaged %d, requeued %d, "
-                    "failed %d", r.stats.replica_id, r.stats.error,
-                    migrated, requeued, failed)
-        r.engine = None  # release weights + KV pool
-        if len(self._crash_times) > self.policy.max_crashes_in_window:
-            self.crash_budget_exhausted = True
-            log.error("crash budget exhausted (%d crashes inside %.0fs > "
-                      "%d): fleet stops respawning and degrades",
-                      len(self._crash_times), self.policy.crash_window_s,
-                      self.policy.max_crashes_in_window)
-            return
-        if (self._reshard is None and self._can_spawn()
-                and len(self._alive()) < self.policy.max_replicas):
-            self._respawn(1)
-
     def _salvage_targets(self, crashed: Replica) -> List[Replica]:
-        """READY replicas whose pools can adopt the crashed replica's KV
-        rows. During a live reshard's DUAL phase the pending new generation
-        is excluded for the same reason ``_dispatch`` skips it: it must
-        stand empty until cutover."""
-        out = [t for t in self._ready()
-               if t is not crashed and t.engine is not None]
-        if self._reshard is not None and self._reshard.strategy == "live":
-            pending_new = {id(t) for t in self._reshard.new}
-            out = [t for t in out if id(t) not in pending_new]
+        """Crash-salvage adopter candidates, CROSS-POOL: every pool's READY
+        replicas except pending reshard generations — a crashed prefill
+        replica's mid-fill rows can land on decode replicas (the adopter
+        resumes the fill; the request simply never needs a handoff)."""
+        out: List[Replica] = []
+        for p in self.pools.values():
+            pend = ({id(t) for t in p._reshard.new}
+                    if p._reshard is not None
+                    and p._reshard.strategy == "live" else set())
+            out += [t for t in p._ready()
+                    if t is not crashed and t.engine is not None
+                    and id(t) not in pend]
         return out
 
-    def _salvage(self, r: Replica) -> Tuple[int, int, int]:
-        """Recover a crashed replica's in-flight population. Returns
-        ``(migrated, requeued, failed)``.
+    # -- pool composition / legacy Fleet surface -------------------------
+    def _pool(self, phase: Optional[str] = None) -> ReplicaPool:
+        if phase is None:
+            if len(self.pools) == 1:
+                return self._entry
+            raise ValueError(
+                f"this fleet has pools {sorted(self.pools)}; pass pool=")
+        if phase not in self.pools:
+            raise ValueError(f"no pool {phase!r} (have {sorted(self.pools)})")
+        return self.pools[phase]
 
-        Fast path — the crash left the engine coherent (decode-step faults
-        fire before any mutation): ``export_inflight`` pulls every running
-        request's KV rows and they migrate into surviving replicas' pools
-        exactly like a reshard cutover; overflow requeues with its prefix
-        kept. Slow path — export itself raises (pool corrupt): every
-        running request retries from its kept prefix through
-        ``Scheduler.requeue_on_failure``, which charges one retry and
-        terminally FAILs requests past ``max_retries``."""
-        if r.engine is None:
-            return 0, 0, 0
-        eng = r.engine
-        try:
-            with r._ctx():
-                reqs, bundle, queued = eng.export_inflight()
-        except Exception as e:
-            log.warning("export_inflight failed on crashed replica %d "
-                        "(%s: %s); requeueing from kept prefixes",
-                        r.stats.replica_id, type(e).__name__, e)
-            return self._requeue_crashed(eng)
-        for q in reversed(queued):
-            self.backlog.appendleft(q)
-        migrated = requeued = 0
-        targets = self._salvage_targets(r)
-        while reqs:
-            cands = [t for t in targets
-                     if t.engine.max_batch - t.engine.pool.n_active > 0]
-            if not cands:
-                for q in reversed(reqs):
-                    self.backlog.appendleft(q)
-                requeued += len(reqs)
-                break
-            tgt = min(cands, key=lambda t: t.load)
-            try:
-                with tgt._ctx():
-                    k = tgt.engine.adopt_inflight(reqs, bundle)
-            except Exception as e:
-                log.warning("adopt_inflight into replica %d failed during "
-                            "salvage (%s: %s); excluding it",
-                            tgt.stats.replica_id, type(e).__name__, e)
-                targets = [t for t in targets if t is not tgt]
+    def _alive(self) -> List[Replica]:
+        return [r for p in self.pools.values() for r in p._alive()]
+
+    def _ready(self) -> List[Replica]:
+        return [r for p in self.pools.values() for r in p._ready()]
+
+    @property
+    def replicas(self) -> List[Replica]:
+        return [r for p in self.pools.values() for r in p.replicas]
+
+    @property
+    def backlog(self) -> Deque[Request]:
+        return self._entry.backlog
+
+    @property
+    def mesh(self):
+        return self._entry.mesh
+
+    @mesh.setter
+    def mesh(self, m):
+        self._entry.mesh = resolve_mesh(m)
+
+    @property
+    def policy(self) -> AutoscalePolicy:
+        return self._entry.policy
+
+    @property
+    def suppress_scale_out(self) -> bool:
+        return self._entry.suppress_scale_out
+
+    @suppress_scale_out.setter
+    def suppress_scale_out(self, v: bool):
+        for p in self.pools.values():
+            p.suppress_scale_out = v
+
+    @property
+    def spawn_failures(self) -> int:
+        return sum(p.spawn_failures for p in self.pools.values())
+
+    @property
+    def crashes(self) -> int:
+        return sum(p.crashes for p in self.pools.values())
+
+    @property
+    def respawns(self) -> int:
+        return sum(p.respawns for p in self.pools.values())
+
+    @property
+    def salvaged_requests(self) -> int:
+        return sum(p.salvaged_requests for p in self.pools.values())
+
+    @property
+    def crash_requeued_requests(self) -> int:
+        return sum(p.crash_requeued_requests for p in self.pools.values())
+
+    @property
+    def degraded_ticks(self) -> int:
+        return sum(p.degraded_ticks for p in self.pools.values())
+
+    @property
+    def crash_budget_exhausted(self) -> bool:
+        return any(p.crash_budget_exhausted for p in self.pools.values())
+
+    @property
+    def degraded(self) -> bool:
+        return any(p.degraded for p in self.pools.values())
+
+    @property
+    def reshard_reports(self) -> List[ReshardReport]:
+        out = [s for p in self.pools.values() for s in p.reshard_reports]
+        return sorted(out, key=lambda s: s.started_t)
+
+    @property
+    def _reshard(self) -> Optional[_ReshardOp]:
+        for p in self.pools.values():
+            if p._reshard is not None:
+                return p._reshard
+        return None
+
+    def _can_spawn(self) -> bool:
+        return self._entry._can_spawn()
+
+    def scale_up(self, n: int = 1) -> List[Replica]:
+        return self._entry.scale_up(n)
+
+    def inflight(self) -> int:
+        return sum(p.inflight() for p in self.pools.values())
+
+    # -- lifecycle -------------------------------------------------------
+    def start(self) -> "Fleet":
+        """Spawn every pool's policy floor (idempotent)."""
+        if self._t0 is None:
+            self._t0 = time.perf_counter()
+        for p in self.pools.values():
+            p.spawn_floor()
+        return self
+
+    # -- traffic ---------------------------------------------------------
+    def _shedding_pool(self) -> Optional[ReplicaPool]:
+        for p in self.pools.values():
+            if p.sheds_load():
+                return p
+        return None
+
+    def submit(self, prompt: Sequence[int], max_new_tokens: int) -> Request:
+        """Enqueue on the entry pool's queue (prefill when disaggregated);
+        arrival time is fleet arrival, so TTFT includes queueing AND any
+        cold start it had to wait for. A fleet with a pool in terminal
+        degradation (``ReplicaPool.sheds_load``) rejects at admission —
+        ``Scheduler.reject`` bookkeeping, no KV, no dispatch."""
+        r = Request(next(self._ids), list(prompt), max_new_tokens)
+        r.phase = self._entry.phase
+        r.phase_enqueued_t[r.phase] = r.arrival_t
+        self.requests.append(r)
+        shedding = self._shedding_pool()
+        if shedding is not None:
+            self._shed.reject(
+                r, f"fleet degraded: pool {shedding.phase!r} has "
+                   f"{len(shedding._ready())} READY < min_replicas="
+                   f"{shedding.policy.min_replicas} and the respawn budget "
+                   f"is exhausted; shed at admission")
+            _M_SHED.inc()
+            return r
+        self._entry.backlog.append(r)
+        return r
+
+    # -- prefill->decode handoff (docs/architecture.md §14) --------------
+    def _handoff_pass(self):
+        """Move every finished fill off the prefill pool: a request whose
+        decode-fill completed (first token sampled, no fill target left)
+        exports its KV rows — freeing the prefill slot for the next fill —
+        and a decode replica adopts them mid-stream."""
+        src, dst = self.pools["prefill"], self.pools["decode"]
+        for rep in src._ready():
+            eng = rep.engine
+            if eng is None:
                 continue
-            migrated += k
-            reqs = reqs[k:]
-            bundle = bundle.select(range(k, bundle.n)) if reqs else None
-        return migrated, requeued, 0
+            done_fills = [r for r in list(eng.scheduler.running.values())
+                          if r.slot is not None and r.generated
+                          and r.req_id not in eng._fill_target]
+            for req in done_fills:
+                self._handoff_one(rep, eng, req, dst)
 
-    def _requeue_crashed(self, eng: ServingEngine) -> Tuple[int, int, int]:
-        """Incoherent-engine salvage: no KV leaves the wreck. Running
-        requests go through ``Scheduler.requeue_on_failure`` (kept prefix,
-        one retry charged, terminal FAILED past the budget); the engine's
-        local queue drains back onto the fleet backlog untouched."""
-        sched = eng.scheduler
-        n_failed0 = len(sched.failed)
-        requeued = 0
-        for q in list(sched.running.values()):
-            sched.requeue_on_failure(q)
-        # requeue_on_failure pushes survivors onto the ENGINE queue; move
-        # the whole local queue (survivors + never-started) to the fleet
-        for q in reversed(list(sched.queue)):
-            self.backlog.appendleft(q)
-            requeued += 1
-        sched.queue.clear()
-        failed = len(sched.failed) - n_failed0
-        return 0, requeued, failed
+    def _handoff_one(self, rep: Replica, eng: ServingEngine,
+                     req: Request, dst: ReplicaPool):
+        t0 = time.perf_counter()
+        with rep._ctx():
+            bundle = eng.export_requests([req], release=True)
+        req.phase = "decode"
+        req.handoff_export_t = t0
+        req.phase_enqueued_t["decode"] = t0
+        try:
+            # chaos hook between export and adopt — the window where the
+            # request exists only as a detached RowBundle
+            fault_point("kv.handoff", tag=eng.fault_tag)
+            tgt = dst.adoption_target()
+            if tgt is None:
+                raise RuntimeError("no decode replica with free capacity")
+            with tgt._ctx():
+                k = tgt.engine.adopt_inflight([req], bundle)
+            if k != 1:
+                raise RuntimeError("decode replica refused the row")
+        except Exception as e:
+            # failed handoff: requeue onto the DECODE pool with prompt +
+            # generated prefix kept (no retry charged — this is a resource/
+            # transport shortfall, not a worker failure); the admitting
+            # decode replica re-fills the row deterministically, so the
+            # token stream still does not diverge
+            self.handoff_requeued += 1
+            _M_HANDOFFS.inc(outcome="requeued")
+            log.warning("handoff of request %d failed (%s: %s); requeued "
+                        "onto decode pool with prefix kept",
+                        req.req_id, type(e).__name__, e)
+            dst.backlog.append(req)
+            return
+        now = time.perf_counter()
+        req.handoff_done_t = now
+        req.phase_admitted_t.setdefault("decode", now)
+        self.handoffs += 1
+        _M_HANDOFFS.inc(outcome="adopted")
+        if obs_metrics.enabled():
+            _M_HANDOFF_WAIT.observe(now - t0)
+        obs_trace.complete("kv.handoff", "fleet", t0, now, req=req.req_id,
+                           src=rep.stats.replica_id,
+                           dst=tgt.stats.replica_id)
 
-    # -- live reshard (module docstring; docs/architecture.md §8) --------
-    def reshard(self, new_mesh, *, factory: Optional[Callable[[], ServingEngine]] = None,
+    # -- per-pool live reshard -------------------------------------------
+    def reshard(self, new_mesh, *, pool: Optional[str] = None,
+                factory: Optional[Callable[[], ServingEngine]] = None,
                 n_replicas: Optional[int] = None, strategy: str = "live",
                 warm: bool = True, wait: bool = False,
                 wait_timeout_s: float = 600.0) -> ReshardReport:
-        """Move this serving fleet onto ``new_mesh`` (a Mesh, a
-        ``launch.mesh.MeshSpec``, or None for un-meshed single-process).
-
-        strategy="live" (the tentpole path): replacement replicas provision
-        on the new topology — stamped-template LOAD of the same shared
-        archive, ``warm`` by default — while the old generation keeps
-        serving (DUAL); once every replacement resolves, the cutover
-        migrates each in-flight request's KV rows from the old pools into
-        the new mesh's pools (``ServingEngine.export_inflight`` /
-        ``adopt_inflight``), flips the backlog, and drains + releases the
-        old replicas. No request is dropped and no token diverges.
-
-        strategy="restart" is the drain-and-restart baseline fig15 measures
-        against: the old topology is torn down FIRST (in-flight requests
-        requeue with their generated prefixes, losing their KV rows) and
-        the backlog stalls until the new topology provisions.
-
-        The switch is asynchronous — ``tick()`` advances it — unless
-        ``wait=True``, which ticks the fleet (still serving) until the
-        switch completes. Returns the live ``ReshardReport``; a "live"
-        switch whose every replacement replica fails to provision is
-        aborted in place and the old generation keeps serving.
-        """
-        if self._reshard is not None:
-            raise RuntimeError("a reshard is already in progress")
-        if strategy not in ("live", "restart"):
-            raise ValueError(f"unknown reshard strategy {strategy!r}")
-        new_mesh = resolve_mesh(new_mesh)
-        if factory is None:
-            if self.factory_for_mesh is None:
-                raise ValueError(
-                    "reshard needs `factory` (zero-arg engine factory for "
-                    "the new topology) or a fleet-level factory_for_mesh")
-            factory = (lambda fm=self.factory_for_mesh, m=new_mesh: fm(m))
+        """Move one pool onto ``new_mesh`` (``ReplicaPool.reshard`` has the
+        full state-machine contract). ``pool`` names the target phase;
+        optional for single-pool fleets. The other pools keep serving
+        throughout — ``wait=True`` blocks on the whole fleet's ``tick``."""
         if self._t0 is None:
             self.start()
-        n = n_replicas if n_replicas is not None else max(len(self._ready()), 1)
-        n = max(1, min(n, self.policy.max_replicas))
-        report = ReshardReport(
-            strategy=strategy, from_mesh=describe_mesh(self.mesh),
-            to_mesh=describe_mesh(new_mesh),
-            started_t=time.perf_counter(), new_replicas=n)
-        op = _ReshardOp(new_mesh=new_mesh, factory=factory,
-                        strategy=strategy, report=report,
-                        old=list(self._alive()))
-        log.info("reshard[%s] %s -> %s (%d replicas, tick %d)",
-                 strategy, report.from_mesh, report.to_mesh, n, self._tick)
-        if strategy == "restart":
-            # baseline: tear the old topology down before the new one exists
-            for old in op.old:
-                self._requeue_replica(old, report)
-            self.mesh = op.new_mesh
-            self.engine_factory = op.factory
-            report.cutover_t = time.perf_counter()
-        op.new = self._spawn_generation(op, n, warm)
-        self._reshard = op
-        if wait:
-            t_end = time.perf_counter() + wait_timeout_s
-            while self._reshard is not None:
-                if time.perf_counter() > t_end:
-                    # abort before raising: leaving the op installed would
-                    # block every later reshard AND keep autoscaling paused
-                    self.abort_reshard(f"wait timeout after {wait_timeout_s}s")
-                    raise RuntimeError(
-                        f"reshard to {report.to_mesh} did not complete in "
-                        f"{wait_timeout_s}s (replacement replicas stuck "
-                        f"provisioning); aborted — the old topology keeps "
-                        f"serving")
-                if self.tick() == 0:
-                    time.sleep(0.001)  # serving idle; yield to provisioning
-        return report
+        return self._pool(pool).reshard(
+            new_mesh, factory=factory, n_replicas=n_replicas,
+            strategy=strategy, warm=warm, wait=wait,
+            wait_timeout_s=wait_timeout_s)
 
-    def abort_reshard(self, reason: str = "aborted by caller"
-                      ) -> Optional[ReshardReport]:
-        """Cancel an in-flight reshard (e.g. replacement provisioning is
-        wedged): the pending new generation is stopped and dropped, and the
-        fleet resumes normal dispatch/autoscaling on the next tick. A
-        "live" abort leaves the old generation serving exactly as before;
-        a "restart" abort (the old generation is already gone) resumes
-        autoscaling on the new topology, which respawns replicas. A stuck
-        provisioning thread cannot be killed — its replica is STOPPED, so
-        an engine it attaches later is never dispatched to. Returns the
-        aborted report, or None when no reshard was in flight."""
-        op = self._reshard
-        if op is None:
-            return None
-        op.report.aborted = reason
-        for r in op.new:
-            if r.state is ReplicaState.PROVISIONING:
-                # a briefly-slow (not dead) provision may attach its engine
-                # after we give up; flag it for the poll() reaper so the
-                # engine (KV pool + weights) is released, never served, and
-                # never folded into fleet accounting
-                r.discard_engine = True
-            if r.state in (ReplicaState.PROVISIONING, ReplicaState.READY):
-                r.stop()
-            r.engine = None
-        self._finish_reshard(op)
-        return op.report
-
-    def _spawn_generation(self, op: _ReshardOp, n: int,
-                          warm: bool) -> List[Replica]:
-        cold = ((lambda eng: self._cold_start(eng, warm=True)) if warm
-                else self._cold_start)
-        out = []
-        for _ in range(n):
-            r = Replica(next(self._rids), op.factory, cold, mesh=op.new_mesh,
-                        deadline_s=self.policy.provision_deadline_s)
-            self.replicas.append(r)
-            out.append(r)
-            log.info("+replica %d (reshard -> %s, tick %d)",
-                     r.stats.replica_id, op.report.to_mesh, self._tick)
-        return out
-
-    def _retire_replica(self, r: Replica):
-        """Stop a replica and release its engine + KV pool immediately,
-        preserving its stats (background errors drained and counted)."""
-        if r.state is ReplicaState.PROVISIONING:
-            r.join_provision()
-        if r.engine is not None:
-            r.drain_background(timeout=120.0)
-        if r.state in (ReplicaState.PROVISIONING, ReplicaState.READY):
-            r.stop()
-        r.engine = None
-
-    def _requeue_replica(self, old: Replica, report: ReshardReport):
-        """restart-baseline teardown: push the replica's whole in-flight
-        population back onto the fleet backlog (KV rows dropped; requests
-        re-prefill from their kept prefixes) and release it."""
-        if old.state is ReplicaState.PROVISIONING:
-            old.join_provision()
-        if old.state is ReplicaState.READY and old.engine is not None:
-            with old._ctx():
-                reqs, _bundle, queued = old.engine.export_inflight()
-            for r in reversed(reqs + queued):
-                self.backlog.appendleft(r)
-            report.requeued_requests += len(reqs) + len(queued)
-        self._retire_replica(old)
-        report.released_replicas += 1
-
-    def _advance_reshard(self):
-        """One tick of the reshard state machine (called from ``tick``)."""
-        op = self._reshard
-        if op.strategy == "live":
-            # only the live strategy has two generations coexisting; the
-            # restart baseline's provisioning ticks are a backlog stall,
-            # not a dual-serving window
-            op.report.dual_ticks += 1
-        if any(r.state is ReplicaState.PROVISIONING for r in op.new):
-            return  # DUAL: old generation is serving; new one still warming
-        ready_new = [r for r in op.new if r.state is ReplicaState.READY]
-        if op.strategy == "restart":
-            if ready_new:
-                op.report.drained_t = time.perf_counter()
-            else:
-                op.report.aborted = ("every replacement replica failed to "
-                                     "provision")
-            self._finish_reshard(op)
-            return
-        if not ready_new:
-            # live abort: nothing to cut over to — the old generation never
-            # stopped serving, so simply drop the dead new generation
-            op.report.aborted = ("every replacement replica failed to "
-                                 "provision; old topology keeps serving")
-            self._finish_reshard(op)
-            return
-        # Hold the cutover for a tick when work is pending but nothing is
-        # decoding: batch-admitted cohorts complete in lockstep, so the old
-        # generation's running set can be momentarily empty exactly when
-        # the replacements come READY. One deferred tick lets dispatch +
-        # step put the pending work in flight so its decode state migrates
-        # mid-stream instead of silently re-prefilling. Bounded so a
-        # pathological case cannot stall the switch.
-        old_ready = [r for r in op.old
-                     if r.state is ReplicaState.READY and r.engine is not None]
-        if old_ready and op.deferrals < 3:
-            running = any(r.engine.scheduler.running for r in old_ready)
-            pending = (bool(self.backlog)
-                       or any(r.engine.scheduler.pending for r in old_ready))
-            if pending and not running:
-                op.deferrals += 1
-                return
-        try:
-            self._cutover(op, ready_new)
-        except Exception as e:
-            # the cutover's own failure paths (torn export, refused adopt)
-            # are contained per replica; anything that still escapes — the
-            # reshard.cutover fault site fires before any mutation — aborts
-            # the switch, and the old generation keeps serving
-            log.warning("cutover to %s raised (%s: %s); aborting reshard",
-                        op.report.to_mesh, type(e).__name__, e)
-            self.abort_reshard(f"cutover failed: {type(e).__name__}: {e}")
-
-    def _cutover(self, op: _ReshardOp, targets: List[Replica]):
-        """CUTOVER -> DRAINED, atomically between decode steps: migrate
-        every old replica's in-flight KV rows into the new generation's
-        pools, flip the fleet's identity to the new topology, release the
-        old replicas."""
-        # chaos hook BEFORE any mutation: a fault here unwinds into
-        # _advance_reshard's abort and the old generation keeps serving
-        fault_point("reshard.cutover")
-        rep = op.report
-        rep.cutover_t = time.perf_counter()
-        for old in op.old:
-            if old.state is ReplicaState.PROVISIONING:
-                old.join_provision()
-            if old.state is ReplicaState.READY and old.engine is not None:
-                try:
-                    with old._ctx():
-                        reqs, bundle, queued = old.engine.export_inflight()
-                except Exception as e:
-                    # torn export on ONE old replica must not strand the
-                    # others: its requests retry from kept prefixes
-                    log.warning("export_inflight failed on replica %d "
-                                "during cutover (%s: %s); requeueing",
-                                old.stats.replica_id, type(e).__name__, e)
-                    _, rq, _ = self._requeue_crashed(old.engine)
-                    rep.requeued_requests += rq
-                    self._retire_replica(old)
-                    rep.released_replicas += 1
-                    continue
-                for q in reversed(queued):
-                    self.backlog.appendleft(q)
-                while reqs:
-                    cands = [t for t in targets
-                             if t.engine is not None
-                             and t.engine.max_batch - t.engine.pool.n_active > 0]
-                    if not cands:
-                        # no capacity anywhere on the new mesh: the tail
-                        # requeues with its prefix kept (still zero drops)
-                        for r in reversed(reqs):
-                            self.backlog.appendleft(r)
-                        rep.requeued_requests += len(reqs)
-                        break
-                    tgt = min(cands, key=lambda t: t.load)
-                    try:
-                        with tgt._ctx():
-                            k = tgt.engine.adopt_inflight(reqs, bundle)
-                    except Exception as e:
-                        log.warning("adopt_inflight into replica %d failed "
-                                    "during cutover (%s: %s); excluding it",
-                                    tgt.stats.replica_id, type(e).__name__, e)
-                        targets = [t for t in targets if t is not tgt]
-                        continue
-                    rep.migrated_requests += k
-                    reqs = reqs[k:]
-                    bundle = (bundle.select(range(k, bundle.n))
-                              if reqs else None)
-            self._retire_replica(old)
-            rep.released_replicas += 1
-        self.mesh = op.new_mesh
-        self.engine_factory = op.factory
-        rep.drained_t = time.perf_counter()
-        # the reshard windows on the fleet timeline: SERVING->DUAL->CUTOVER
-        # ->DRAINED (endpoints observed at different call sites, so they are
-        # recorded as two back-to-back complete events at drain time)
-        obs_trace.complete("reshard.dual", "fleet", rep.started_t,
-                           rep.cutover_t, strategy=op.strategy,
-                           to=rep.to_mesh, dual_ticks=rep.dual_ticks)
-        obs_trace.complete("reshard.cutover", "fleet", rep.cutover_t,
-                           rep.drained_t, migrated=rep.migrated_requests,
-                           requeued=rep.requeued_requests)
-        self._finish_reshard(op)
-
-    def _finish_reshard(self, op: _ReshardOp):
-        self.reshard_reports.append(op.report)
-        self._reshard = None
-        s = op.report
-        _M_RESHARDS.inc(outcome="aborted" if s.aborted else "completed")
-        if s.aborted:
-            obs_trace.instant("reshard.aborted", cat="fleet",
-                              to=s.to_mesh, reason=s.aborted)
-            log.warning("reshard[%s] %s -> %s: ABORTED (%s)",
-                        s.strategy, s.from_mesh, s.to_mesh, s.aborted)
-        else:
-            log.info("reshard[%s] %s -> %s: done in %.1f ms (migrated %d, "
-                     "requeued %d, dual %d ticks)",
-                     s.strategy, s.from_mesh, s.to_mesh,
-                     s.time_to_new_topology_s * 1e3, s.migrated_requests,
-                     s.requeued_requests, s.dual_ticks)
+    def abort_reshard(self, reason: str = "aborted by caller",
+                      pool: Optional[str] = None) -> Optional[ReshardReport]:
+        """Cancel an in-flight reshard. Without ``pool``, aborts whichever
+        pool has one in flight (None when nobody does)."""
+        if pool is not None:
+            return self.pools[pool].abort_reshard(reason)
+        for p in self.pools.values():
+            if p._reshard is not None:
+                return p.abort_reshard(reason)
+        return None
 
     # -- serving loop ----------------------------------------------------
     def tick(self) -> int:
-        """One fleet iteration: poll provisioning, advance any in-flight
-        reshard, dispatch, autoscale, one decode step per READY replica.
-        Returns requests actively served.
-
-        Decode steps are supervised: a replica whose ``step()`` raises
-        transitions to CRASHED and is salvaged + replaced
-        (``_on_replica_crash``) WITHOUT unwinding the tick — one bad
-        replica must not take the fleet's serving loop down with it."""
+        """One fleet iteration: per pool — poll provisioning, advance any
+        in-flight reshard, dispatch, autoscale, one supervised decode step
+        per READY replica — then the prefill->decode handoff pass and
+        end-of-tick accounting. Returns requests actively served."""
         if self._t0 is None:
             self.start()
         self._tick += 1
-        for r in self.replicas:
-            was = r.state
-            if (r.poll() is ReplicaState.FAILED
-                    and was is ReplicaState.PROVISIONING):
-                self.spawn_failures += 1
-                log.warning("replica %d FAILED to provision (%d/%d before "
-                            "giving up): %s", r.stats.replica_id,
-                            self.spawn_failures,
-                            self.policy.max_spawn_failures, r.stats.error)
-        if self._reshard is not None:
-            self._advance_reshard()
-        self._dispatch()
-        if self._reshard is None:
-            # replica-count autoscaling pauses while a topology switch is in
-            # flight (it would spawn on a mesh that is about to change)
-            self._autoscale()
+        pools = list(self.pools.values())
+        for p in pools:
+            p.poll_all()
+        for p in pools:
+            if p._reshard is not None:
+                p.advance_reshard()
+        for p in pools:
+            p.dispatch()
+        for p in pools:
+            # replica-count autoscaling pauses while the pool's own topology
+            # switch is in flight (it would spawn on a mesh about to change)
+            if p._reshard is None:
+                p.autoscale()
         served = 0
-        for r in self._ready():
-            try:
-                served += r.step()
-            except Exception as e:
-                self._on_replica_crash(r, e)
-        if self._sheds_load() and not self._ready() and self.backlog:
-            # terminal incapacity with zero serving capacity: what already
-            # queued will never run either — shed it with the same terminal
-            # bookkeeping admission uses, so callers see FAILED, not a hang
-            while self.backlog:
-                self._shed.reject(
-                    self.backlog.popleft(),
-                    "fleet degraded with no READY replicas and the respawn "
-                    "budget exhausted; backlog shed")
-                _M_SHED.inc()
-        if len(self._ready()) >= self.policy.min_replicas:
-            self._was_at_floor = True
-        elif self._was_at_floor:
-            self.degraded_ticks += 1
+        for p in pools:
+            served += p.step_all()
+        if self.disaggregated:
+            self._handoff_pass()
+        for p in pools:
+            if p.sheds_load() and not p._ready() and p.backlog:
+                # terminal incapacity with zero serving capacity: what
+                # already queued will never run either — shed it with the
+                # same terminal bookkeeping admission uses, so callers see
+                # FAILED, not a hang
+                while p.backlog:
+                    self._shed.reject(
+                        p.backlog.popleft(),
+                        f"pool {p.phase!r} degraded with no READY replicas "
+                        f"and the respawn budget exhausted; backlog shed")
+                    _M_SHED.inc()
+            p.note_floor()
         self.peak_alive = max(self.peak_alive, len(self._alive()))
         if obs_metrics.enabled():
-            _M_BACKLOG.set(len(self.backlog), fleet=self.name)
-            _M_READY.set(len(self._ready()), fleet=self.name)
-            _M_INFLIGHT.set(self.inflight(), fleet=self.name)
-            _M_DEGRADED.set(1.0 if self.degraded else 0.0, fleet=self.name)
+            for p in pools:
+                p.publish_gauges()
         return served
 
     def _unresolved(self) -> int:
@@ -1200,17 +592,37 @@ class Fleet:
         while drain and self._unresolved() and self._tick < max_ticks:
             if not self._ready() and not self._alive():
                 break  # every replica failed; report what we have
-            if self.tick() == 0 and not self._ready():
-                time.sleep(0.001)  # all replicas still provisioning
+            if self.tick() == 0:
+                # idle tick: yield the GIL so provisioning threads make
+                # progress — in a disaggregated fleet one pool can be READY
+                # (keeping _ready() non-empty) while the other pool's
+                # replica is still cold-starting, and busy-spinning here
+                # starves that thread until max_ticks burns out
+                time.sleep(0.001)
         return self.report()
 
     # -- accounting ------------------------------------------------------
     def drain_background(self, timeout: float = 300.0):
         """Join every replica LOAD's background workers (deterministic tests
         / benchmarks; serving itself never needs this)."""
-        for r in self.replicas:
-            if r.engine is not None and not r.discard_engine:
-                r.drain_background(timeout)
+        for p in self.pools.values():
+            p.drain_background(timeout)
+
+    def _pool_summary(self, p: ReplicaPool) -> Dict[str, object]:
+        pct = FleetReport._pct
+        return {
+            "phase": p.phase,
+            "mesh": describe_mesh(p.mesh),
+            "replicas_spawned": len(p.replicas),
+            "ready": len(p._ready()),
+            "backlog": len(p.backlog),
+            "steps": len(p.step_walls),
+            "step_wall_p50_s": pct(p.step_walls, 0.50),
+            "step_wall_p99_s": pct(p.step_walls, 0.99),
+            "crashes": p.crashes,
+            "respawns": p.respawns,
+            "degraded_ticks": p.degraded_ticks,
+        }
 
     def report(self) -> FleetReport:
         rep = FleetReport(
@@ -1223,7 +635,9 @@ class Fleet:
             crash_requeued_requests=self.crash_requeued_requests,
             shed_requests=len(self._shed.failed),
             verify_degraded_loads=self.verify_degraded_loads,
-            degraded=self.degraded, degraded_ticks=self.degraded_ticks)
+            degraded=self.degraded, degraded_ticks=self.degraded_ticks,
+            handoffs=self.handoffs, handoff_requeued=self.handoff_requeued,
+            pools=[self._pool_summary(p) for p in self.pools.values()])
         for r in self.replicas:
             lr = (None if r.discard_engine
                   else getattr(r.engine, "_load_report", None))
@@ -1237,6 +651,10 @@ class Fleet:
                     rep.ttfts.append(q.ttft)
                 if q.queue_wait_s is not None:
                     rep.queue_waits.append(q.queue_wait_s)
+                if q.handoff_wait_s is not None:
+                    rep.handoff_waits.append(q.handoff_wait_s)
+                for ph, w in q.queue_wait_by_phase.items():
+                    rep.phase_queue_waits.setdefault(ph, []).append(w)
                 if (q.done_t is not None and q.first_token_t is not None
                         and len(q.generated) > 1):
                     rep.tpots.append((q.done_t - q.first_token_t)

@@ -13,62 +13,22 @@ engine pins the pool size before LOAD, paper §5.4).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.memory_plan import MemoryPlan
+from repro.serving.rowbundle import (RowBundle, check_export_slots,
+                                     check_import, reshard_rows)
+
+__all__ = ["KVCachePool", "RowBundle", "reshard_rows"]  # historical home of
+# RowBundle/reshard_rows — engine.py and older callers import them from here
 
 
 def _leaf_bytes(sd) -> int:
     return int(np.prod(sd.shape)) * jnp.dtype(sd.dtype).itemsize
-
-
-def reshard_rows(rows, sd, mesh):
-    """Commit migrated rows to a destination pool's devices: the leaf's spec
-    sharding when it accepts the row-count (batch may not divide the data
-    axes), replicated on the mesh otherwise, first local device when
-    un-meshed (eager update ops reject operands committed to a different
-    mesh's device set). Shared by both pool layouts (slot and paged)."""
-    if sd.sharding is not None:
-        try:
-            return jax.device_put(rows, sd.sharding)
-        except Exception:
-            pass
-    if mesh is not None:
-        from jax.sharding import NamedSharding, PartitionSpec
-        return jax.device_put(rows, NamedSharding(mesh, PartitionSpec()))
-    return jax.device_put(rows, jax.devices()[0])
-
-
-@dataclass
-class RowBundle:
-    """Device-resident export of pool rows for cross-pool migration.
-
-    One entry per cache leaf, in tree-leaf order; ``rows[i]`` holds the
-    exported requests' rows stacked along that leaf's batch dim (``None``
-    for batch-invariant leaves — the importing pool keeps its own). The
-    arrays stay committed to the *source* pool's mesh; ``import_rows``
-    reshards them onto the destination's cache specs with ``device_put``
-    (live-reshard KV migration, docs/architecture.md §8).
-    """
-    rows: List[Optional[Any]]
-    bdims: List[Optional[int]]
-    n: int
-
-    def select(self, idx) -> "RowBundle":
-        """Sub-bundle of the given row indices (e.g. the remainder after a
-        partial adopt)."""
-        idx = list(idx)
-        if idx == list(range(self.n)):
-            return self
-        j = jnp.asarray(idx, jnp.int32)
-        rows = [None if (r is None or bd is None) else jnp.take(r, j, axis=bd)
-                for r, bd in zip(self.rows, self.bdims)]
-        return RowBundle(rows, list(self.bdims), len(idx))
 
 
 class KVCachePool:
@@ -190,9 +150,7 @@ class KVCachePool:
         """Gather the given slots' rows (KV, SSM state, lengths — every
         batch-dim leaf) into a standalone ``RowBundle``. The pool itself is
         left untouched; callers release the slots separately."""
-        for s in slots:
-            if not (0 <= s < len(self.slots)) or self.slots[s] is None:
-                raise ValueError(f"export of slot {s}: not an active slot")
+        check_export_slots(slots, self.slots)
         idx = jnp.asarray(list(slots), jnp.int32)
         leaves = jax.tree.leaves(self.cache)
         rows = [jnp.take(x, idx, axis=bd) if bd is not None else None
@@ -204,13 +162,7 @@ class KVCachePool:
         request, reshard each row onto THIS pool's cache specs with
         ``device_put`` (the source may live on a different mesh), and write
         it in place. Returns the assigned slots, in ``req_ids`` order."""
-        if len(req_ids) != bundle.n:
-            raise ValueError(f"import of {bundle.n} rows for {len(req_ids)} "
-                             f"requests")
-        if self.n_active + bundle.n > self.max_batch:
-            raise RuntimeError(
-                f"pool cannot host {bundle.n} imported rows "
-                f"({self.n_active} active, max_batch {self.max_batch})")
+        check_import(bundle, req_ids, self.n_active, self.max_batch)
         slots = [self.acquire(rid) for rid in req_ids]
         specs = jax.tree.leaves(
             self.model.cache_specs(self.cur_bucket, self.max_seq))

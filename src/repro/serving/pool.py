@@ -1,0 +1,1061 @@
+"""Phase-aware replica pool: the unit a Fleet composes (docs §14).
+
+Extracted from the fleet monolith so "a fleet" can be "a set of pools":
+everything that manages ONE homogeneous group of replicas lives here —
+provisioning (``Replica`` daemon threads + deadline supervision), dispatch
+(least-loaded over the pool's own backlog), autoscaling
+(``AutoscalePolicy``), crash containment with KV salvage, and the live
+reshard state machine (SERVING -> DUAL -> CUTOVER -> DRAINED). A colocated
+fleet is one pool of phase "serve"; a phase-disaggregated fleet is a
+"prefill" pool on a wide mesh plus a "decode" pool on a narrow one, sharing
+one archive and handing requests off per-request (the fleet owns the
+handoff — it is the only cross-pool motion besides crash salvage).
+
+What a pool deliberately does NOT own: the shared archive and cold-start
+mode (the fleet's ``cold_start`` callable closes over them), request
+identity/admission-shed bookkeeping, and cross-pool salvage targeting (the
+``salvage_targets`` callable lets a fleet offer OTHER pools' replicas as
+adopters, so a crashed prefill replica's mid-fill rows can land on the
+decode pool).
+
+Each pool records its own decode-step wall times (``step_walls``): in the
+cooperative single-threaded tick loop this is the honest per-pool TPOT
+proxy — the decode pool's step cost is what dedicated decode hardware would
+see, independent of how long the prefill pool's fills run on the same
+thread (benchmarks/fig19_disagg.py).
+"""
+from __future__ import annotations
+
+import itertools
+import logging
+import math
+import threading
+import time
+from collections import deque
+from contextlib import nullcontext
+from dataclasses import dataclass, field
+from enum import Enum
+from typing import Callable, Deque, Dict, List, Optional, Tuple
+
+from repro.core import wait_for_background
+from repro.launch.mesh import describe_mesh, resolve_mesh
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+from repro.serving.engine import ServingEngine
+from repro.serving.faults import fault_point
+from repro.serving.scheduler import Request
+
+log = logging.getLogger("repro.serving.pool")
+
+# docs/architecture.md §13 has the full metric catalog
+_M_REPLICA_EVENTS = obs_metrics.counter(
+    "fleet_replica_events_total",
+    "Replica lifecycle transitions (spawn/ready/failed/crashed/respawn/"
+    "stopped).", ("event",))
+_M_CRASHES = obs_metrics.counter(
+    "fleet_crashes_total", "Mid-serving replica crashes contained by "
+    "supervision.")
+_M_RESPAWNS = obs_metrics.counter(
+    "fleet_respawns_total", "Replacement replicas spawned after crashes.")
+_M_SALVAGED = obs_metrics.counter(
+    "fleet_salvaged_requests_total",
+    "In-flight requests whose KV rows migrated off a crashed replica.")
+_M_CRASH_REQUEUED = obs_metrics.counter(
+    "fleet_crash_requeued_requests_total",
+    "Requests retried from kept prefixes after a crash (no KV carried).")
+_M_RESHARDS = obs_metrics.counter(
+    "fleet_reshard_total", "Parallelism switches by outcome.", ("outcome",))
+_M_BACKLOG = obs_metrics.gauge(
+    "fleet_backlog_depth", "Per-pool queued requests (not yet dispatched "
+    "to a replica).", ("fleet", "pool"))
+_M_READY = obs_metrics.gauge(
+    "fleet_replicas_ready", "READY replicas per pool.", ("fleet", "pool"))
+_M_INFLIGHT = obs_metrics.gauge(
+    "fleet_inflight", "Per-pool backlog + replica queued/running load (the "
+    "autoscale signal).", ("fleet", "pool"))
+_M_DEGRADED = obs_metrics.gauge(
+    "fleet_degraded", "1 while a pool's READY replicas < policy.min_replicas "
+    "after having reached the floor once.", ("fleet", "pool"))
+
+
+class ReplicaState(Enum):
+    PROVISIONING = "provisioning"   # cold-start thread running
+    READY = "ready"                 # serving
+    STOPPED = "stopped"             # scaled down
+    FAILED = "failed"               # cold start raised / provision timed out
+    CRASHED = "crashed"             # died MID-SERVING; salvaged + replaced
+
+
+@dataclass
+class ReplicaStats:
+    """Lifecycle timeline of one replica (all times perf_counter seconds)."""
+    replica_id: int
+    spawned_t: float
+    ready_t: Optional[float] = None
+    first_token_t: Optional[float] = None
+    stopped_t: Optional[float] = None
+    mode: Optional[str] = None            # cold-start path actually taken
+    cold_start_s: Optional[float] = None  # engine cold-start phase total
+    fallback_compiles: int = 0
+    background_errors: int = 0
+    steps: int = 0
+    served_requests: int = 0
+    error: Optional[str] = None
+
+    @property
+    def provision_s(self) -> Optional[float]:
+        """Spawn -> servable (engine build + weights + cold start)."""
+        return None if self.ready_t is None else self.ready_t - self.spawned_t
+
+    @property
+    def cold_start_to_first_token_s(self) -> Optional[float]:
+        """Spawn -> first token out of this replica: the scale-out latency a
+        user stuck in the queue actually experiences."""
+        return (None if self.first_token_t is None
+                else self.first_token_t - self.spawned_t)
+
+
+class Replica:
+    """One ServingEngine behind a pool's queue.
+
+    Provisioning (engine build + cold start) runs on a daemon thread so
+    replicas come up while traffic is in flight; decode steps run on the
+    fleet's thread via ``step()``.
+    """
+
+    def __init__(self, rid: int, engine_factory: Callable[[], ServingEngine],
+                 cold_start: Callable[[ServingEngine], object], mesh=None,
+                 deadline_s: Optional[float] = None):
+        self.stats = ReplicaStats(rid, spawned_t=time.perf_counter())
+        self.state = ReplicaState.PROVISIONING
+        self.engine: Optional[ServingEngine] = None
+        self.cold_report = None
+        self.idle_ticks = 0
+        # set by ReplicaPool.abort_reshard on a replica it could not join: an
+        # engine the provisioning thread attaches later must be dropped,
+        # not served or accounted (poll() reaps it on the next tick)
+        self.discard_engine = False
+        self._engine_factory = engine_factory
+        self._cold_start = cold_start
+        self._mesh = mesh
+        self._deadline_s = deadline_s
+        self._error: Optional[str] = None
+        _M_REPLICA_EVENTS.inc(event="spawn")
+        obs_trace.instant("replica.spawn", cat="fleet", replica=rid)
+        self._thread = threading.Thread(target=self._provision, daemon=True)
+        self._thread.start()
+
+    def _ctx(self):
+        return self._mesh if self._mesh is not None else nullcontext()
+
+    def _provision(self):
+        try:
+            with self._ctx():
+                eng = self._engine_factory()
+                t0 = time.perf_counter()
+                rep = self._cold_start(eng)
+            self.cold_report = rep
+            self.stats.mode = getattr(rep, "mode", None)
+            self.stats.cold_start_s = getattr(
+                rep, "total_s", time.perf_counter() - t0)
+            self.stats.fallback_compiles = getattr(rep, "fallback_compiles", 0)
+            self.engine = eng
+        except Exception as e:  # surfaced via ReplicaState.FAILED
+            self._error = f"{type(e).__name__}: {e}"
+
+    def poll(self) -> ReplicaState:
+        """Advance PROVISIONING -> READY/FAILED when the thread finishes.
+        A provision past its deadline (hung IO, wedged compile) is FAILED
+        in place — the caller can respawn — and its engine, should the
+        thread eventually attach one, is reaped like an aborted reshard's."""
+        if self.discard_engine and self.engine is not None:
+            self.engine = None  # late attach after abort/timeout/crash
+        if self.state is ReplicaState.PROVISIONING and self._thread.is_alive():
+            if (self._deadline_s is not None
+                    and time.perf_counter() - self.stats.spawned_t
+                    > self._deadline_s):
+                self.state = ReplicaState.FAILED
+                self.stats.error = (f"provision deadline exceeded "
+                                    f"({self._deadline_s:.1f}s; thread "
+                                    f"still running)")
+                self.discard_engine = True
+                _M_REPLICA_EVENTS.inc(event="failed")
+        if self.state is ReplicaState.PROVISIONING and not self._thread.is_alive():
+            if self._error is not None or self.engine is None:
+                self.state = ReplicaState.FAILED
+                self.stats.error = self._error or "cold start produced no engine"
+                _M_REPLICA_EVENTS.inc(event="failed")
+            else:
+                self.state = ReplicaState.READY
+                self.stats.ready_t = time.perf_counter()
+                # stamp the fault-injection identity so chaos plans can
+                # target this replica (serving/faults.py)
+                self.engine.fault_tag = f"replica{self.stats.replica_id}"
+                _M_REPLICA_EVENTS.inc(event="ready")
+                # provision_s as a span on the fleet timeline: spawn->READY
+                obs_trace.complete(
+                    "replica.provision", "fleet", self.stats.spawned_t,
+                    self.stats.ready_t, replica=self.stats.replica_id,
+                    mode=self.stats.mode or "?")
+        return self.state
+
+    @property
+    def load(self) -> int:
+        """Requests this replica still owns (queued + running)."""
+        return 0 if self.engine is None else self.engine.scheduler.pending
+
+    def assign(self, req: Request):
+        self.engine.scheduler.queue.append(req)
+
+    def step(self) -> int:
+        with self._ctx():
+            n = self.engine.step()
+        self.stats.steps += 1
+        self.stats.served_requests = len(self.engine.scheduler.done)
+        if self.stats.first_token_t is None:
+            # only tokens emitted by THIS replica count: a request migrated
+            # in by a reshard cutover carries a first_token_t from the old
+            # generation, which predates this replica's spawn
+            firsts = [r.first_token_t
+                      for r in self.engine.scheduler.running.values()
+                      if r.first_token_t is not None
+                      and r.first_token_t >= self.stats.spawned_t]
+            firsts += [r.first_token_t for r in self.engine.scheduler.done
+                       if r.first_token_t is not None
+                       and r.first_token_t >= self.stats.spawned_t]
+            if firsts:
+                self.stats.first_token_t = min(firsts)
+        self.idle_ticks = self.idle_ticks + 1 if self.load == 0 else 0
+        return n
+
+    def stop(self):
+        self.state = ReplicaState.STOPPED
+        self.stats.stopped_t = time.perf_counter()
+        _M_REPLICA_EVENTS.inc(event="stopped")
+
+    def crash(self, reason: str):
+        """Mark this replica dead MID-SERVING (pool supervision): distinct
+        from FAILED (never came up) so reports can tell a cold-start problem
+        from a serving-time one. The pool salvages the engine's in-flight
+        population before releasing it."""
+        self.state = ReplicaState.CRASHED
+        self.stats.error = reason
+        self.stats.stopped_t = time.perf_counter()
+        _M_REPLICA_EVENTS.inc(event="crashed")
+        obs_trace.instant("replica.crash", cat="fleet",
+                          replica=self.stats.replica_id, reason=reason)
+
+    def join_provision(self, timeout: float = 120.0) -> ReplicaState:
+        """Wait for an in-flight provision to finish and resolve the state.
+        Stopping a PROVISIONING replica without this races the daemon
+        thread, which would re-attach the freshly built engine (and its KV
+        pool) to the stopped replica after the caller released it.
+
+        A thread STILL alive after ``timeout`` resolves to FAILED with a
+        distinct timeout error (callers respawn on it) instead of leaving
+        the replica looking PROVISIONING forever; the wedged thread's
+        eventual engine attach is reaped by ``poll()``."""
+        self._thread.join(timeout)
+        if self._thread.is_alive() and self.state is ReplicaState.PROVISIONING:
+            self.state = ReplicaState.FAILED
+            self.stats.error = (f"provision join timed out after "
+                                f"{timeout:.1f}s (thread still running)")
+            self.discard_engine = True
+            return self.state
+        return self.poll()
+
+    def drain_background(self, timeout: float = 300.0):
+        """Join the engine LOAD's background exact-bucket workers and copy
+        their error count into the stats (tests assert it is 0)."""
+        rep = getattr(self.engine, "_load_report", None)
+        if rep is not None:
+            wait_for_background(rep, timeout)
+            self.stats.background_errors = rep.background_errors
+
+
+@dataclass
+class AutoscalePolicy:
+    min_replicas: int = 1
+    max_replicas: int = 4
+    # inflight requests one replica is expected to absorb before the pool
+    # scales; engines can batch max_batch of them per step
+    target_inflight_per_replica: int = 8
+    scale_down_idle_ticks: int = 25
+    # provisioning failures after which the pool stops respawning (a
+    # systematically failing cold start — bad archive, broken factory —
+    # must fail fast, not spawn replicas forever)
+    max_spawn_failures: int = 3
+    # mid-serving crash budget, the serving-time analogue of
+    # max_spawn_failures: more than this many CRASHED replicas inside a
+    # sliding crash_window_s means the pool is crash-looping (poisoned
+    # archive, broken kernel) and must stop respawning and degrade
+    max_crashes_in_window: int = 5
+    crash_window_s: float = 60.0
+    # wall-clock deadline for one replica provision (None: wait forever —
+    # the pre-supervision behavior); a hung cold start past it is FAILED by
+    # poll() so the autoscaler/supervisor can respawn instead of blocking
+    provision_deadline_s: Optional[float] = None
+
+
+@dataclass
+class PoolSpec:
+    """Declarative description of one pool in a fleet: phase name
+    ("prefill" | "decode" | "serve"), its autoscale policy, and the mesh its
+    replicas provision on (a Mesh, ``launch.mesh.MeshSpec``, or None for
+    un-meshed single-process)."""
+    phase: str
+    policy: AutoscalePolicy = field(default_factory=AutoscalePolicy)
+    mesh: object = None
+
+
+@dataclass
+class ReshardReport:
+    """Timeline + accounting of one parallelism switch
+    (``ReplicaPool.reshard`` / ``Fleet.reshard``).
+
+    All times are perf_counter seconds. ``cutover_t``/``drained_t`` stay
+    None until the corresponding transition happens; ``aborted`` carries the
+    reason when the switch could not complete (the old generation keeps
+    serving on a "live" abort).
+    """
+    strategy: str               # "live" | "restart"
+    from_mesh: str
+    to_mesh: str
+    started_t: float
+    new_replicas: int = 0
+    cutover_t: Optional[float] = None
+    drained_t: Optional[float] = None
+    dual_ticks: int = 0          # ticks the two generations coexisted
+                                 # (live only; stays 0 for "restart")
+    migrated_requests: int = 0   # in-flight KV rows moved across meshes
+    requeued_requests: int = 0   # retried from kept prefix (no KV carried)
+    released_replicas: int = 0
+    aborted: Optional[str] = None
+    pool: str = "serve"          # which pool switched (phase name)
+
+    @property
+    def done(self) -> bool:
+        return self.drained_t is not None or self.aborted is not None
+
+    @property
+    def time_to_new_topology_s(self) -> Optional[float]:
+        """reshard() call -> old generation fully drained and released."""
+        return (None if self.drained_t is None
+                else self.drained_t - self.started_t)
+
+    def summary(self) -> Dict[str, object]:
+        return {
+            "strategy": self.strategy,
+            "pool": self.pool,
+            "from_mesh": self.from_mesh, "to_mesh": self.to_mesh,
+            "time_to_new_topology_s": self.time_to_new_topology_s,
+            "dual_ticks": self.dual_ticks,
+            "migrated_requests": self.migrated_requests,
+            "requeued_requests": self.requeued_requests,
+            "new_replicas": self.new_replicas,
+            "released_replicas": self.released_replicas,
+            "aborted": self.aborted,
+        }
+
+
+@dataclass
+class _ReshardOp:
+    """In-flight reshard state (one at a time per pool)."""
+    new_mesh: object
+    factory: Callable[[], ServingEngine]
+    strategy: str
+    report: ReshardReport
+    old: List[Replica] = field(default_factory=list)
+    new: List[Replica] = field(default_factory=list)
+    deferrals: int = 0  # cutover holds (see ReplicaPool.advance_reshard)
+
+
+class ReplicaPool:
+    """One phase's replicas behind one backlog (module docstring).
+
+    The composing fleet supplies the shared pieces as callables:
+    ``cold_start(engine, warm=False)`` (closes over mode + the shared
+    archive), ``respawn_cold_start(engine)`` (the verify-degrade rung; None
+    falls back to a plain cold start), ``salvage_targets(crashed)`` (adopter
+    candidates, possibly from OTHER pools; None restricts salvage to this
+    pool), ``tick_fn()`` (ticks the whole fleet so a blocking
+    ``reshard(wait=True)`` keeps every pool serving; None runs a pool-local
+    tick), and ``rid_source`` (a shared ``itertools.count`` so replica ids
+    stay unique fleet-wide).
+    """
+
+    def __init__(self, phase: str, *,
+                 policy: Optional[AutoscalePolicy] = None, mesh=None,
+                 engine_factory: Optional[Callable[[], ServingEngine]] = None,
+                 factory_for_mesh: Optional[Callable] = None,
+                 cold_start: Callable = None,
+                 respawn_cold_start: Optional[Callable] = None,
+                 salvage_targets: Optional[Callable] = None,
+                 tick_fn: Optional[Callable[[], int]] = None,
+                 rid_source=None, fleet_name: str = "fleet"):
+        if engine_factory is None and factory_for_mesh is None:
+            raise ValueError(
+                "ReplicaPool needs engine_factory or factory_for_mesh")
+        if cold_start is None:
+            raise ValueError("ReplicaPool needs a cold_start callable")
+        self.phase = phase
+        self.policy = policy or AutoscalePolicy()
+        self.mesh = resolve_mesh(mesh)
+        self.engine_factory = engine_factory
+        self.factory_for_mesh = factory_for_mesh
+        self._cold_start = cold_start
+        self._respawn_cold_start = respawn_cold_start
+        self._salvage_targets_fn = salvage_targets
+        self._tick_fn = tick_fn
+        self._rids = rid_source if rid_source is not None else itertools.count()
+        self.fleet_name = fleet_name
+        self.label = f"{fleet_name}/{phase}"
+        self.replicas: List[Replica] = []
+        self.backlog: Deque[Request] = deque()
+        self.spawn_failures = 0
+        # set True (router ReshardPolicy.prefer_reshard_over_scale_out) when
+        # the answer to sustained load is a bigger mesh, not more replicas
+        self.suppress_scale_out = False
+        self.reshard_reports: List[ReshardReport] = []
+        self._reshard: Optional[_ReshardOp] = None
+        # supervision state (docs/architecture.md §12): crash accounting,
+        # the sliding-window crash budget, floor tracking
+        self.crashes = 0
+        self.respawns = 0
+        self.salvaged_requests = 0
+        self.crash_requeued_requests = 0
+        self.degraded_ticks = 0
+        self.crash_budget_exhausted = False
+        self._crash_times: Deque[float] = deque()
+        self._was_at_floor = False  # degradation = DROPPING below the floor
+        self._tick = 0
+        # per-pool decode-step wall times (the fig19 TPOT proxy); capped so
+        # a long soak cannot grow without bound
+        self.step_walls: List[float] = []
+        self._step_walls_cap = 65536
+
+    # -- membership ------------------------------------------------------
+    def _alive(self) -> List[Replica]:
+        return [r for r in self.replicas
+                if r.state in (ReplicaState.PROVISIONING, ReplicaState.READY)]
+
+    def _ready(self) -> List[Replica]:
+        return [r for r in self.replicas if r.state is ReplicaState.READY]
+
+    def _factory_for(self, mesh) -> Callable[[], ServingEngine]:
+        """Zero-arg factory for one replica, with the mesh snapshotted at
+        spawn time (a reshard may flip ``self.mesh`` while a provisioning
+        thread is still running)."""
+        if self.factory_for_mesh is not None:
+            return lambda fm=self.factory_for_mesh, m=mesh: fm(m)
+        return self.engine_factory
+
+    def scale_up(self, n: int = 1) -> List[Replica]:
+        out = []
+        for _ in range(n):
+            mesh = self.mesh
+            r = Replica(next(self._rids), self._factory_for(mesh),
+                        self._cold_start, mesh=mesh,
+                        deadline_s=self.policy.provision_deadline_s)
+            self.replicas.append(r)
+            out.append(r)
+            log.info("+replica %d (%s, tick %d)",
+                     r.stats.replica_id, self.label, self._tick)
+        return out
+
+    def _can_spawn(self) -> bool:
+        return (self.spawn_failures < self.policy.max_spawn_failures
+                and not self.crash_budget_exhausted)
+
+    def _respawn(self, n: int = 1) -> List[Replica]:
+        """Replace crashed capacity: same path as ``scale_up`` but through
+        the fleet-supplied respawn cold start — warm for foundry fleets (the
+        shared archive's blobs are already fetched and ``_template_cache``
+        is hot, so the replacement comes up at warm-LOAD speed: the paper's
+        pitch applied to crash recovery, not just scale-out)."""
+        out = []
+        for _ in range(n):
+            mesh = self.mesh
+            cold = self._respawn_cold_start or self._cold_start
+            r = Replica(next(self._rids), self._factory_for(mesh),
+                        cold, mesh=mesh,
+                        deadline_s=self.policy.provision_deadline_s)
+            self.replicas.append(r)
+            out.append(r)
+            self.respawns += 1
+            _M_RESPAWNS.inc()
+            _M_REPLICA_EVENTS.inc(event="respawn")
+            log.info("+replica %d (%s respawn after crash, tick %d)",
+                     r.stats.replica_id, self.label, self._tick)
+        return out
+
+    def spawn_floor(self):
+        """Bring the pool up to the policy floor (idempotent)."""
+        missing = self.policy.min_replicas - len(self._alive())
+        if missing > 0 and self._can_spawn():
+            self.scale_up(missing)
+
+    # -- degradation ladder (docs/architecture.md §12) -------------------
+    @property
+    def degraded(self) -> bool:
+        """Below the autoscale floor after having reached it once: fewer
+        READY replicas than ``policy.min_replicas``. (The initial
+        provisioning ramp is not degradation — nothing was lost.)"""
+        return (self._was_at_floor
+                and len(self._ready()) < self.policy.min_replicas)
+
+    def sheds_load(self) -> bool:
+        """Terminal incapacity: degraded, nothing provisioning, and the
+        spawn/crash budgets forbid respawning — capacity is NOT coming back,
+        so new load is shed cheaply at admission instead of queueing
+        forever. A degraded pool with a respawn in flight keeps queueing
+        (recovery is ~a warm LOAD away — the whole point of foundry)."""
+        return (self.degraded and not self._can_spawn()
+                and not any(r.state is ReplicaState.PROVISIONING
+                            for r in self.replicas))
+
+    def note_floor(self):
+        """End-of-tick floor accounting: remember having reached the floor
+        once, count ticks spent below it afterwards."""
+        if len(self._ready()) >= self.policy.min_replicas:
+            self._was_at_floor = True
+        elif self._was_at_floor:
+            self.degraded_ticks += 1
+
+    # -- traffic ---------------------------------------------------------
+    def dispatch(self):
+        """Drain the pool backlog onto READY replicas, least-loaded first,
+        never queueing more than one batch-worth ahead per replica. During a
+        live reshard's DUAL phase the replacement generation is NOT a
+        dispatch target: the queue flips to it atomically at cutover, and
+        routing work there early would leave the cutover nothing to
+        migrate."""
+        ready = self._ready()
+        if self._reshard is not None and self._reshard.strategy == "live":
+            pending_new = {id(r) for r in self._reshard.new}
+            ready = [r for r in ready if id(r) not in pending_new]
+        while self.backlog and ready:
+            ready.sort(key=lambda r: r.load)
+            tgt = ready[0]
+            if tgt.load >= tgt.engine.max_batch:
+                break  # everyone is saturated; leave work visible on backlog
+            tgt.assign(self.backlog.popleft())
+
+    def inflight(self) -> int:
+        """Requests the pool currently owes: backlog + every READY
+        replica's queued/running load (the autoscale and router reshard
+        trigger signal)."""
+        return len(self.backlog) + sum(r.load for r in self._ready())
+
+    def adoption_target(self, exclude=()) -> Optional[Replica]:
+        """Least-loaded READY replica with free pool capacity — the
+        destination of a prefill->decode handoff. A live reshard's pending
+        new generation is excluded (same reason ``dispatch`` skips it)."""
+        skip = {id(t) for t in exclude}
+        if self._reshard is not None and self._reshard.strategy == "live":
+            skip |= {id(t) for t in self._reshard.new}
+        cands = [t for t in self._ready()
+                 if t.engine is not None and id(t) not in skip
+                 and t.engine.max_batch - t.engine.pool.n_active > 0]
+        return min(cands, key=lambda t: t.load) if cands else None
+
+    def autoscale(self):
+        pol = self.policy
+        alive = self._alive()
+        inflight = self.inflight()
+        desired = max(pol.min_replicas,
+                      math.ceil(inflight / max(1, pol.target_inflight_per_replica)))
+        desired = min(pol.max_replicas, desired)
+        if self.suppress_scale_out:
+            desired = min(desired, max(pol.min_replicas, len(alive)))
+        if desired > len(alive) and self._can_spawn():
+            self.scale_up(desired - len(alive))
+        elif not self.backlog and len(alive) > pol.min_replicas:
+            # scale down at most one per tick: oldest idle replica first
+            for r in self._ready():
+                if r.load == 0 and r.idle_ticks >= pol.scale_down_idle_ticks:
+                    r.stop()
+                    log.info("-replica %d (%s idle %d ticks)",
+                             r.stats.replica_id, self.label, r.idle_ticks)
+                    break
+
+    # -- serving ---------------------------------------------------------
+    def poll_all(self):
+        """Advance every provisioning thread and count provision failures
+        toward the pool's spawn budget."""
+        self._tick += 1
+        for r in self.replicas:
+            was = r.state
+            if (r.poll() is ReplicaState.FAILED
+                    and was is ReplicaState.PROVISIONING):
+                self.spawn_failures += 1
+                log.warning("replica %d FAILED to provision (%s: %d/%d "
+                            "before giving up): %s", r.stats.replica_id,
+                            self.label, self.spawn_failures,
+                            self.policy.max_spawn_failures, r.stats.error)
+
+    def step_all(self) -> int:
+        """One supervised decode step per READY replica. A replica whose
+        ``step()`` raises transitions to CRASHED and is salvaged + replaced
+        (``_on_replica_crash``) WITHOUT unwinding the loop — one bad
+        replica must not take the pool down with it. Non-idle step wall
+        times feed ``step_walls`` (the per-pool TPOT proxy)."""
+        served = 0
+        for r in self._ready():
+            t0 = time.perf_counter()
+            try:
+                n = r.step()
+            except Exception as e:
+                self._on_replica_crash(r, e)
+                continue
+            if n and len(self.step_walls) < self._step_walls_cap:
+                self.step_walls.append(time.perf_counter() - t0)
+            served += n
+        return served
+
+    def _self_tick(self) -> int:
+        """Pool-local serving iteration for a standalone pool (a composing
+        fleet passes ``tick_fn`` instead so EVERY pool keeps serving while
+        this one blocks in ``reshard(wait=True)``)."""
+        self.poll_all()
+        if self._reshard is not None:
+            self.advance_reshard()
+        self.dispatch()
+        if self._reshard is None:
+            self.autoscale()
+        return self.step_all()
+
+    # -- supervision (docs/architecture.md §12) --------------------------
+    def _on_replica_crash(self, r: Replica, exc: Exception):
+        """A decode step raised: contain it. The replica transitions to
+        CRASHED (the loop keeps serving everyone else), its in-flight
+        requests are salvaged — KV rows migrated to surviving replicas when
+        the engine is still coherent, requeued from kept prefixes otherwise
+        — and a replacement is respawned from the shared archive unless the
+        sliding-window crash budget says the pool is crash-looping."""
+        self.crashes += 1
+        _M_CRASHES.inc()
+        now = time.perf_counter()
+        self._crash_times.append(now)
+        while (self._crash_times
+               and now - self._crash_times[0] > self.policy.crash_window_s):
+            self._crash_times.popleft()
+        r.crash(f"{type(exc).__name__}: {exc}")
+        migrated, requeued, failed = self._salvage(r)
+        self.salvaged_requests += migrated
+        self.crash_requeued_requests += requeued
+        _M_SALVAGED.inc(migrated)
+        _M_CRASH_REQUEUED.inc(requeued)
+        log.warning("replica %d CRASHED (%s: %s): salvaged %d, requeued %d, "
+                    "failed %d", r.stats.replica_id, self.label,
+                    r.stats.error, migrated, requeued, failed)
+        r.engine = None  # release weights + KV pool
+        if len(self._crash_times) > self.policy.max_crashes_in_window:
+            self.crash_budget_exhausted = True
+            log.error("crash budget exhausted (%s: %d crashes inside %.0fs "
+                      "> %d): pool stops respawning and degrades",
+                      self.label, len(self._crash_times),
+                      self.policy.crash_window_s,
+                      self.policy.max_crashes_in_window)
+            return
+        if (self._reshard is None and self._can_spawn()
+                and len(self._alive()) < self.policy.max_replicas):
+            self._respawn(1)
+
+    def _salvage_targets(self, crashed: Replica) -> List[Replica]:
+        """Adopter candidates for a crashed replica's KV rows: the
+        fleet-supplied cross-pool callable when present (a prefill crash can
+        salvage onto the decode pool), else this pool's other READY
+        replicas. A live reshard's pending new generation is excluded for
+        the same reason ``dispatch`` skips it: it must stand empty until
+        cutover."""
+        if self._salvage_targets_fn is not None:
+            return [t for t in self._salvage_targets_fn(crashed)
+                    if t is not crashed and t.engine is not None]
+        out = [t for t in self._ready()
+               if t is not crashed and t.engine is not None]
+        if self._reshard is not None and self._reshard.strategy == "live":
+            pending_new = {id(t) for t in self._reshard.new}
+            out = [t for t in out if id(t) not in pending_new]
+        return out
+
+    def _salvage(self, r: Replica) -> Tuple[int, int, int]:
+        """Recover a crashed replica's in-flight population. Returns
+        ``(migrated, requeued, failed)``.
+
+        Fast path — the crash left the engine coherent (decode-step faults
+        fire before any mutation): ``export_inflight`` pulls every running
+        request's KV rows and they migrate into surviving replicas' pools
+        exactly like a reshard cutover; overflow requeues with its prefix
+        kept. Slow path — export itself raises (pool corrupt): every
+        running request retries from its kept prefix through
+        ``Scheduler.requeue_on_failure``, which charges one retry and
+        terminally FAILs requests past ``max_retries``."""
+        if r.engine is None:
+            return 0, 0, 0
+        eng = r.engine
+        try:
+            with r._ctx():
+                reqs, bundle, queued = eng.export_inflight()
+        except Exception as e:
+            log.warning("export_inflight failed on crashed replica %d "
+                        "(%s: %s); requeueing from kept prefixes",
+                        r.stats.replica_id, type(e).__name__, e)
+            return self._requeue_crashed(eng)
+        for q in reversed(queued):
+            self.backlog.appendleft(q)
+        migrated = requeued = 0
+        targets = self._salvage_targets(r)
+        while reqs:
+            cands = [t for t in targets
+                     if t.engine.max_batch - t.engine.pool.n_active > 0]
+            if not cands:
+                for q in reversed(reqs):
+                    self.backlog.appendleft(q)
+                requeued += len(reqs)
+                break
+            tgt = min(cands, key=lambda t: t.load)
+            try:
+                with tgt._ctx():
+                    k = tgt.engine.adopt_inflight(reqs, bundle)
+            except Exception as e:
+                log.warning("adopt_inflight into replica %d failed during "
+                            "salvage (%s: %s); excluding it",
+                            tgt.stats.replica_id, type(e).__name__, e)
+                targets = [t for t in targets if t is not tgt]
+                continue
+            migrated += k
+            reqs = reqs[k:]
+            bundle = bundle.select(range(k, bundle.n)) if reqs else None
+        return migrated, requeued, 0
+
+    def _requeue_crashed(self, eng: ServingEngine) -> Tuple[int, int, int]:
+        """Incoherent-engine salvage: no KV leaves the wreck. Running
+        requests go through ``Scheduler.requeue_on_failure`` (kept prefix,
+        one retry charged, terminal FAILED past the budget); the engine's
+        local queue drains back onto the pool backlog untouched."""
+        sched = eng.scheduler
+        n_failed0 = len(sched.failed)
+        requeued = 0
+        for q in list(sched.running.values()):
+            sched.requeue_on_failure(q)
+        # requeue_on_failure pushes survivors onto the ENGINE queue; move
+        # the whole local queue (survivors + never-started) to the pool
+        for q in reversed(list(sched.queue)):
+            self.backlog.appendleft(q)
+            requeued += 1
+        sched.queue.clear()
+        failed = len(sched.failed) - n_failed0
+        return 0, requeued, failed
+
+    # -- live reshard (docs/architecture.md §8) --------------------------
+    def reshard(self, new_mesh, *,
+                factory: Optional[Callable[[], ServingEngine]] = None,
+                n_replicas: Optional[int] = None, strategy: str = "live",
+                warm: bool = True, wait: bool = False,
+                wait_timeout_s: float = 600.0) -> ReshardReport:
+        """Move this pool onto ``new_mesh`` (a Mesh, a
+        ``launch.mesh.MeshSpec``, or None for un-meshed single-process).
+
+        strategy="live": replacement replicas provision on the new topology
+        — stamped-template LOAD of the same shared archive, ``warm`` by
+        default — while the old generation keeps serving (DUAL); once every
+        replacement resolves, the cutover migrates each in-flight request's
+        KV rows from the old pools into the new mesh's pools
+        (``ServingEngine.export_inflight`` / ``adopt_inflight``), flips the
+        backlog, and drains + releases the old replicas. No request is
+        dropped and no token diverges. In a multi-pool fleet the OTHER pools
+        keep serving throughout — the switch is scoped to this pool.
+
+        strategy="restart" is the drain-and-restart baseline fig15 measures
+        against: the old topology is torn down FIRST (in-flight requests
+        requeue with their generated prefixes, losing their KV rows) and
+        the backlog stalls until the new topology provisions.
+
+        The switch is asynchronous — ``advance_reshard`` (driven by the
+        fleet tick) advances it — unless ``wait=True``, which ticks the
+        fleet (still serving) until the switch completes. Returns the live
+        ``ReshardReport``; a "live" switch whose every replacement replica
+        fails to provision is aborted in place and the old generation keeps
+        serving.
+        """
+        if self._reshard is not None:
+            raise RuntimeError("a reshard is already in progress")
+        if strategy not in ("live", "restart"):
+            raise ValueError(f"unknown reshard strategy {strategy!r}")
+        new_mesh = resolve_mesh(new_mesh)
+        if factory is None:
+            if self.factory_for_mesh is None:
+                raise ValueError(
+                    "reshard needs `factory` (zero-arg engine factory for "
+                    "the new topology) or a pool-level factory_for_mesh")
+            factory = (lambda fm=self.factory_for_mesh, m=new_mesh: fm(m))
+        if not self.replicas:
+            self.spawn_floor()
+        n = n_replicas if n_replicas is not None else max(len(self._ready()), 1)
+        n = max(1, min(n, self.policy.max_replicas))
+        report = ReshardReport(
+            strategy=strategy, from_mesh=describe_mesh(self.mesh),
+            to_mesh=describe_mesh(new_mesh),
+            started_t=time.perf_counter(), new_replicas=n, pool=self.phase)
+        op = _ReshardOp(new_mesh=new_mesh, factory=factory,
+                        strategy=strategy, report=report,
+                        old=list(self._alive()))
+        log.info("reshard[%s] %s: %s -> %s (%d replicas, tick %d)",
+                 strategy, self.label, report.from_mesh, report.to_mesh, n,
+                 self._tick)
+        if strategy == "restart":
+            # baseline: tear the old topology down before the new one exists
+            for old in op.old:
+                self._requeue_replica(old, report)
+            self.mesh = op.new_mesh
+            self.engine_factory = op.factory
+            report.cutover_t = time.perf_counter()
+        op.new = self._spawn_generation(op, n, warm)
+        self._reshard = op
+        if wait:
+            tick = self._tick_fn or self._self_tick
+            t_end = time.perf_counter() + wait_timeout_s
+            while self._reshard is not None:
+                if time.perf_counter() > t_end:
+                    # abort before raising: leaving the op installed would
+                    # block every later reshard AND keep autoscaling paused
+                    self.abort_reshard(f"wait timeout after {wait_timeout_s}s")
+                    raise RuntimeError(
+                        f"reshard to {report.to_mesh} did not complete in "
+                        f"{wait_timeout_s}s (replacement replicas stuck "
+                        f"provisioning); aborted — the old topology keeps "
+                        f"serving")
+                if tick() == 0:
+                    time.sleep(0.001)  # serving idle; yield to provisioning
+        return report
+
+    def abort_reshard(self, reason: str = "aborted by caller"
+                      ) -> Optional[ReshardReport]:
+        """Cancel an in-flight reshard (e.g. replacement provisioning is
+        wedged): the pending new generation is stopped and dropped, and the
+        pool resumes normal dispatch/autoscaling on the next tick. A
+        "live" abort leaves the old generation serving exactly as before;
+        a "restart" abort (the old generation is already gone) resumes
+        autoscaling on the new topology, which respawns replicas. A stuck
+        provisioning thread cannot be killed — its replica is STOPPED, so
+        an engine it attaches later is never dispatched to. Returns the
+        aborted report, or None when no reshard was in flight."""
+        op = self._reshard
+        if op is None:
+            return None
+        op.report.aborted = reason
+        for r in op.new:
+            if r.state is ReplicaState.PROVISIONING:
+                # a briefly-slow (not dead) provision may attach its engine
+                # after we give up; flag it for the poll() reaper so the
+                # engine (KV pool + weights) is released, never served, and
+                # never folded into fleet accounting
+                r.discard_engine = True
+            if r.state in (ReplicaState.PROVISIONING, ReplicaState.READY):
+                r.stop()
+            r.engine = None
+        self._finish_reshard(op)
+        return op.report
+
+    def _spawn_generation(self, op: _ReshardOp, n: int,
+                          warm: bool) -> List[Replica]:
+        cold = ((lambda eng: self._cold_start(eng, warm=True)) if warm
+                else self._cold_start)
+        out = []
+        for _ in range(n):
+            r = Replica(next(self._rids), op.factory, cold, mesh=op.new_mesh,
+                        deadline_s=self.policy.provision_deadline_s)
+            self.replicas.append(r)
+            out.append(r)
+            log.info("+replica %d (%s reshard -> %s, tick %d)",
+                     r.stats.replica_id, self.label, op.report.to_mesh,
+                     self._tick)
+        return out
+
+    def _retire_replica(self, r: Replica):
+        """Stop a replica and release its engine + KV pool immediately,
+        preserving its stats (background errors drained and counted)."""
+        if r.state is ReplicaState.PROVISIONING:
+            r.join_provision()
+        if r.engine is not None:
+            r.drain_background(timeout=120.0)
+        if r.state in (ReplicaState.PROVISIONING, ReplicaState.READY):
+            r.stop()
+        r.engine = None
+
+    def _requeue_replica(self, old: Replica, report: ReshardReport):
+        """restart-baseline teardown: push the replica's whole in-flight
+        population back onto the pool backlog (KV rows dropped; requests
+        re-prefill from their kept prefixes) and release it."""
+        if old.state is ReplicaState.PROVISIONING:
+            old.join_provision()
+        if old.state is ReplicaState.READY and old.engine is not None:
+            with old._ctx():
+                reqs, _bundle, queued = old.engine.export_inflight()
+            for r in reversed(reqs + queued):
+                self.backlog.appendleft(r)
+            report.requeued_requests += len(reqs) + len(queued)
+        self._retire_replica(old)
+        report.released_replicas += 1
+
+    def advance_reshard(self):
+        """One tick of the reshard state machine (called from the fleet
+        tick while an op is installed)."""
+        op = self._reshard
+        if op.strategy == "live":
+            # only the live strategy has two generations coexisting; the
+            # restart baseline's provisioning ticks are a backlog stall,
+            # not a dual-serving window
+            op.report.dual_ticks += 1
+        if any(r.state is ReplicaState.PROVISIONING for r in op.new):
+            return  # DUAL: old generation is serving; new one still warming
+        ready_new = [r for r in op.new if r.state is ReplicaState.READY]
+        if op.strategy == "restart":
+            if ready_new:
+                op.report.drained_t = time.perf_counter()
+            else:
+                op.report.aborted = ("every replacement replica failed to "
+                                     "provision")
+            self._finish_reshard(op)
+            return
+        if not ready_new:
+            # live abort: nothing to cut over to — the old generation never
+            # stopped serving, so simply drop the dead new generation
+            op.report.aborted = ("every replacement replica failed to "
+                                 "provision; old topology keeps serving")
+            self._finish_reshard(op)
+            return
+        # Hold the cutover for a tick when work is pending but nothing is
+        # decoding: batch-admitted cohorts complete in lockstep, so the old
+        # generation's running set can be momentarily empty exactly when
+        # the replacements come READY. One deferred tick lets dispatch +
+        # step put the pending work in flight so its decode state migrates
+        # mid-stream instead of silently re-prefilling. Bounded so a
+        # pathological case cannot stall the switch.
+        old_ready = [r for r in op.old
+                     if r.state is ReplicaState.READY and r.engine is not None]
+        if old_ready and op.deferrals < 3:
+            running = any(r.engine.scheduler.running for r in old_ready)
+            pending = (bool(self.backlog)
+                       or any(r.engine.scheduler.pending for r in old_ready))
+            if pending and not running:
+                op.deferrals += 1
+                return
+        try:
+            self._cutover(op, ready_new)
+        except Exception as e:
+            # the cutover's own failure paths (torn export, refused adopt)
+            # are contained per replica; anything that still escapes — the
+            # reshard.cutover fault site fires before any mutation — aborts
+            # the switch, and the old generation keeps serving
+            log.warning("cutover to %s raised (%s: %s); aborting reshard",
+                        op.report.to_mesh, type(e).__name__, e)
+            self.abort_reshard(f"cutover failed: {type(e).__name__}: {e}")
+
+    def _cutover(self, op: _ReshardOp, targets: List[Replica]):
+        """CUTOVER -> DRAINED, atomically between decode steps: migrate
+        every old replica's in-flight KV rows into the new generation's
+        pools, flip the pool's identity to the new topology, release the
+        old replicas."""
+        # chaos hook BEFORE any mutation: a fault here unwinds into
+        # advance_reshard's abort and the old generation keeps serving
+        fault_point("reshard.cutover")
+        rep = op.report
+        rep.cutover_t = time.perf_counter()
+        for old in op.old:
+            if old.state is ReplicaState.PROVISIONING:
+                old.join_provision()
+            if old.state is ReplicaState.READY and old.engine is not None:
+                try:
+                    with old._ctx():
+                        reqs, bundle, queued = old.engine.export_inflight()
+                except Exception as e:
+                    # torn export on ONE old replica must not strand the
+                    # others: its requests retry from kept prefixes
+                    log.warning("export_inflight failed on replica %d "
+                                "during cutover (%s: %s); requeueing",
+                                old.stats.replica_id, type(e).__name__, e)
+                    _, rq, _ = self._requeue_crashed(old.engine)
+                    rep.requeued_requests += rq
+                    self._retire_replica(old)
+                    rep.released_replicas += 1
+                    continue
+                for q in reversed(queued):
+                    self.backlog.appendleft(q)
+                while reqs:
+                    cands = [t for t in targets
+                             if t.engine is not None
+                             and t.engine.max_batch - t.engine.pool.n_active > 0]
+                    if not cands:
+                        # no capacity anywhere on the new mesh: the tail
+                        # requeues with its prefix kept (still zero drops)
+                        for r in reversed(reqs):
+                            self.backlog.appendleft(r)
+                        rep.requeued_requests += len(reqs)
+                        break
+                    tgt = min(cands, key=lambda t: t.load)
+                    try:
+                        with tgt._ctx():
+                            k = tgt.engine.adopt_inflight(reqs, bundle)
+                    except Exception as e:
+                        log.warning("adopt_inflight into replica %d failed "
+                                    "during cutover (%s: %s); excluding it",
+                                    tgt.stats.replica_id, type(e).__name__, e)
+                        targets = [t for t in targets if t is not tgt]
+                        continue
+                    rep.migrated_requests += k
+                    reqs = reqs[k:]
+                    bundle = (bundle.select(range(k, bundle.n))
+                              if reqs else None)
+            self._retire_replica(old)
+            rep.released_replicas += 1
+        self.mesh = op.new_mesh
+        self.engine_factory = op.factory
+        rep.drained_t = time.perf_counter()
+        # the reshard windows on the fleet timeline: SERVING->DUAL->CUTOVER
+        # ->DRAINED (endpoints observed at different call sites, so they are
+        # recorded as two back-to-back complete events at drain time)
+        obs_trace.complete("reshard.dual", "fleet", rep.started_t,
+                           rep.cutover_t, strategy=op.strategy,
+                           to=rep.to_mesh, dual_ticks=rep.dual_ticks)
+        obs_trace.complete("reshard.cutover", "fleet", rep.cutover_t,
+                           rep.drained_t, migrated=rep.migrated_requests,
+                           requeued=rep.requeued_requests)
+        self._finish_reshard(op)
+
+    def _finish_reshard(self, op: _ReshardOp):
+        self.reshard_reports.append(op.report)
+        self._reshard = None
+        s = op.report
+        _M_RESHARDS.inc(outcome="aborted" if s.aborted else "completed")
+        if s.aborted:
+            obs_trace.instant("reshard.aborted", cat="fleet",
+                              to=s.to_mesh, reason=s.aborted)
+            log.warning("reshard[%s] %s: %s -> %s: ABORTED (%s)",
+                        s.strategy, self.label, s.from_mesh, s.to_mesh,
+                        s.aborted)
+        else:
+            log.info("reshard[%s] %s: %s -> %s: done in %.1f ms (migrated "
+                     "%d, requeued %d, dual %d ticks)",
+                     s.strategy, self.label, s.from_mesh, s.to_mesh,
+                     s.time_to_new_topology_s * 1e3, s.migrated_requests,
+                     s.requeued_requests, s.dual_ticks)
+
+    # -- accounting ------------------------------------------------------
+    def drain_background(self, timeout: float = 300.0):
+        """Join every replica LOAD's background workers (deterministic tests
+        / benchmarks; serving itself never needs this)."""
+        for r in self.replicas:
+            if r.engine is not None and not r.discard_engine:
+                r.drain_background(timeout)
+
+    def publish_gauges(self):
+        _M_BACKLOG.set(len(self.backlog), fleet=self.fleet_name,
+                       pool=self.phase)
+        _M_READY.set(len(self._ready()), fleet=self.fleet_name,
+                     pool=self.phase)
+        _M_INFLIGHT.set(self.inflight(), fleet=self.fleet_name,
+                        pool=self.phase)
+        _M_DEGRADED.set(1.0 if self.degraded else 0.0,
+                        fleet=self.fleet_name, pool=self.phase)

@@ -44,7 +44,7 @@ from repro.obs import metrics as obs_metrics
 from repro.obs import trace as obs_trace
 from repro.serving.engine import ServingEngine
 from repro.serving.fleet import (AutoscalePolicy, Fleet, FleetReport,
-                                 ReplicaState)
+                                 PoolSpec, ReplicaState)
 from repro.serving.scheduler import ReqState, Request
 
 log = logging.getLogger("repro.serving.router")
@@ -93,6 +93,9 @@ class ReshardPolicy:
     # without a cooldown an oscillating queue would thrash topologies)
     cooldown_ticks: int = 50
     prefer_reshard_over_scale_out: bool = True
+    # which pool of a phase-disaggregated fleet the policy reshards (e.g.
+    # "prefill"); None targets the sole pool of a colocated fleet
+    pool: Optional[str] = None
 
 
 @dataclass
@@ -105,6 +108,10 @@ class ModelPolicy:
     # provisioning) before the model's fleet is drained and released
     idle_ticks_to_zero: int = 30
     reshard: Optional[ReshardPolicy] = None
+    # phase-disaggregated serving (docs §14): pool specs handed to the
+    # model's Fleet on every (re)activation; None keeps the colocated
+    # single-pool fleet built from ``autoscale``
+    pools: Optional[Sequence[PoolSpec]] = None
 
 
 @dataclass
@@ -139,6 +146,9 @@ class ModelStats:
 
         waits = [r.queue_wait_s for r in requests
                  if r.state is ReqState.DONE and r.queue_wait_s is not None]
+        howaits = [r.handoff_wait_s for r in requests
+                   if r.state is ReqState.DONE
+                   and r.handoff_wait_s is not None]
 
         def pct(q):
             return FleetReport._pct(ttfts, q)
@@ -155,6 +165,8 @@ class ModelStats:
             "ttft_p95_s": pct(0.95),
             "queue_wait_p50_s": FleetReport._pct(waits, 0.50),
             "queue_wait_p95_s": FleetReport._pct(waits, 0.95),
+            "handoff_wait_p50_s": FleetReport._pct(howaits, 0.50),
+            "handoff_wait_p95_s": FleetReport._pct(howaits, 0.95),
             "fallback_compiles": self.fallback_compiles,
             "background_errors": self.background_errors,
             "replicas_spawned": self.replicas_spawned,
@@ -315,6 +327,7 @@ class ModelRouter:
                         policy=e.policy.autoscale,
                         mesh=resolve_mesh(e.current_mesh_spec()),
                         factory_for_mesh=e.factory_for_mesh,
+                        pools=e.policy.pools,
                         verbose=self.verbose, name=e.name)
         rp = e.policy.reshard
         if rp is not None and rp.prefer_reshard_over_scale_out:
@@ -500,7 +513,7 @@ class ModelRouter:
                 and self._tick - e.last_reshard_tick < rp.cooldown_ticks):
             return
         mesh = rp.high_mesh if want == "high" else rp.low_mesh
-        e.pending_reshard = (e.fleet.reshard(mesh), want)
+        e.pending_reshard = (e.fleet.reshard(mesh, pool=rp.pool), want)
         e.last_reshard_tick = self._tick
         e.sustain_ticks = 0
         if self.verbose:

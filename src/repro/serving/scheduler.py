@@ -55,6 +55,15 @@ class Request:
     done_t: Optional[float] = None
     retries: int = 0
     fail_reason: Optional[str] = None
+    # phase-disaggregated serving (docs/architecture.md §14): which pool the
+    # request currently belongs to ("serve" in colocated fleets, else
+    # "prefill" -> "decode"), plus per-phase queue timestamps and the
+    # prefill->decode handoff interval
+    phase: str = "serve"
+    phase_enqueued_t: Dict[str, float] = field(default_factory=dict)
+    phase_admitted_t: Dict[str, float] = field(default_factory=dict)
+    handoff_export_t: Optional[float] = None
+    handoff_done_t: Optional[float] = None
 
     @property
     def finished(self) -> bool:
@@ -77,6 +86,24 @@ class Request:
         return (self.admitted_t - self.arrival_t
                 if self.admitted_t is not None else None)
 
+    @property
+    def handoff_wait_s(self) -> Optional[float]:
+        """Prefill-exit -> decode-adopt interval: how long the finished fill
+        sat in flight (or requeued) before a decode replica owned it. None
+        for colocated requests and for handoffs still in flight."""
+        return (self.handoff_done_t - self.handoff_export_t
+                if self.handoff_export_t is not None
+                and self.handoff_done_t is not None else None)
+
+    @property
+    def queue_wait_by_phase(self) -> Dict[str, float]:
+        """Per-phase enqueue -> admission waits (phases still queued are
+        omitted). ``queue_wait_s`` keeps its arrival -> FIRST admission
+        meaning; this breaks the later phases out separately."""
+        return {ph: self.phase_admitted_t[ph] - t0
+                for ph, t0 in self.phase_enqueued_t.items()
+                if ph in self.phase_admitted_t}
+
 
 class Scheduler:
     def __init__(self, max_retries: int = 2):
@@ -97,11 +124,17 @@ class Scheduler:
         while self.queue and len(out) < free_capacity:
             r = self.queue.popleft()
             r.state = ReqState.RUNNING
+            now = time.perf_counter()
             if r.admitted_t is None:  # first admission only (queue_wait_s)
-                r.admitted_t = time.perf_counter()
+                r.admitted_t = now
                 if obs_metrics.enabled():
                     _M_ADMITTED.inc()
                     _M_QUEUE_WAIT.observe(r.queue_wait_s)
+            # phase-aware bookkeeping: first admission per phase, and a
+            # requeued handoff completes when the decode pool re-admits it
+            r.phase_admitted_t.setdefault(r.phase, now)
+            if r.handoff_export_t is not None and r.handoff_done_t is None:
+                r.handoff_done_t = now
             self.running[r.req_id] = r
             out.append(r)
         return out

@@ -1,0 +1,241 @@
+"""Phase-disaggregated serving (serving/pool.py + Fleet pools; docs §14):
+
+  * wide-prefill/narrow-decode token identity vs a colocated oracle — every
+    stream byte-identical across the prefill->decode KV handoff, including
+    a request admitted via a radix prefix-cache hit on the prefill pool,
+    with zero fallback compiles (prefill LOADs the shared archive via the
+    rank-stamped path, decode via the exact path);
+  * decode-capacity overflow: a handoff with no free decode slot requeues
+    onto the decode pool with its prefix kept — zero drops, zero retries
+    charged, identical tokens;
+  * a prefill replica crashing MID-FILL salvages its rows cross-pool onto
+    decode replicas (the adopter resumes the fill — the request simply
+    never needs a handoff);
+  * per-pool reshard: the prefill pool switches topology live while the
+    decode pool keeps serving, and the other pool is never touched.
+"""
+import time
+
+import jax
+import pytest
+
+from repro.configs.registry import get_arch
+from repro.core import Archive
+from repro.launch.mesh import MeshSpec, ShardCtx, make_host_mesh, resolve_mesh
+from repro.models.model import Model
+from repro.serving.engine import ServingEngine
+from repro.serving.faults import FaultPlan, FaultSpec, fault_plan
+from repro.serving.fleet import AutoscalePolicy, Fleet, PoolSpec
+from repro.serving.scheduler import ReqState
+
+CFG = get_arch("smollm-360m").reduced()
+# 12-token shared system prompt (three full blocks at block_size=4): the
+# follow-up request must be admitted on the prefill pool via a radix hit
+SYS = [9, 4, 7, 7, 1, 3, 8, 2, 6, 6, 2, 5]
+REQ_A, REQ_B = SYS + [5, 1], SYS + [2, 8, 4]
+PROMPTS = [[5, 9, 2, 4], [11, 3, 6, 1], [7, 7, 7, 1], [2, 9], [13, 4, 9, 2]]
+N_NEW = 8
+
+
+def mk(mesh=None, max_batch=8):
+    eng = ServingEngine(Model(CFG, ShardCtx(mesh=resolve_mesh(mesh))),
+                        max_batch=max_batch, max_seq=64, bucket_mode="pow2",
+                        kv_block_size=4)
+    eng.load_weights(rng=jax.random.PRNGKey(7))
+    return eng
+
+
+@pytest.fixture(scope="module")
+def archive():
+    """One shared lazy archive captured un-meshed: exact LOAD for the
+    un-meshed decode pool, rank-stamped LOAD for the (1,1) prefill pool."""
+    ar, _ = mk(None).save_archive()
+    return Archive.from_bytes(ar.to_bytes(), lazy=True)
+
+
+@pytest.fixture(scope="module")
+def reference():
+    """prompt -> token tuple from cold colocated oracles (one fresh engine
+    per prompt, so no prefix cache and no handoff are involved)."""
+    out = {}
+    for p in PROMPTS + [REQ_A, REQ_B]:
+        eng = mk(None)
+        eng.cold_start_vanilla()
+        r = eng.submit(p, N_NEW)
+        eng.run_until_drained()
+        out[tuple(p)] = tuple(r.generated)
+    return out
+
+
+def pol(**kw):
+    base = dict(min_replicas=1, max_replicas=1,
+                target_inflight_per_replica=64, scale_down_idle_ticks=500)
+    base.update(kw)
+    return AutoscalePolicy(**base)
+
+
+def disagg(archive, *, prefill_mesh=None, decode_mesh=None, factory=mk,
+           prefill_pol=None, decode_pol=None, mode="foundry"):
+    return Fleet(factory_for_mesh=factory, mode=mode, archive=archive,
+                 pools=[PoolSpec("prefill", prefill_pol or pol(),
+                                 prefill_mesh),
+                        PoolSpec("decode", decode_pol or pol(),
+                                 decode_mesh)])
+
+
+def drain(fleet, reqs, budget_s=300.0):
+    t0 = time.perf_counter()
+    while any(q.state not in (ReqState.DONE, ReqState.FAILED) for q in reqs):
+        if fleet.tick() == 0:
+            time.sleep(0.001)
+        assert time.perf_counter() - t0 < budget_s, "fleet wedged"
+
+
+# ---------------------------------------------------------------------------
+# the tentpole: wide prefill, narrow decode, byte-identical streams
+# ---------------------------------------------------------------------------
+def test_disagg_identity_with_prefix_hit(archive, reference):
+    fleet = disagg(archive, prefill_mesh=MeshSpec((1, 1)), decode_mesh=None)
+    fleet.start()
+    assert fleet.disaggregated
+    reqs = [fleet.submit(REQ_A, N_NEW)]
+    drain(fleet, reqs)  # REQ_A's fill commits SYS into the prefill radix tree
+    reqs.append(fleet.submit(REQ_B, N_NEW))  # admitted via a prefix hit
+    reqs += [fleet.submit(p, N_NEW) for p in PROMPTS]
+    drain(fleet, reqs)
+    fleet.drain_background()
+    rep = fleet.report()
+    s = rep.summary()
+
+    assert rep.n_failed == 0 and rep.n_done == len(reqs)
+    for r in reqs:
+        assert tuple(r.generated) == reference[tuple(r.prompt)], \
+            f"req {r.req_id} diverged across the prefill->decode handoff"
+    # every request crossed pools exactly once, nothing fell back
+    assert fleet.handoffs == len(reqs) and fleet.handoff_requeued == 0
+    assert s["fallback_compiles"] == 0 and s["background_errors"] == 0
+    assert s["handoff_wait_p50_s"] is not None
+    assert s["handoff_wait_p95_s"] >= s["handoff_wait_p50_s"]
+    # both phases show up in the per-phase queue-wait breakdown
+    assert set(s["phase_queue_wait_p50_s"]) == {"prefill", "decode"}
+    # the prefill pool's radix tree survived the handoffs and served REQ_B
+    pre = fleet.pools["prefill"]._ready()[0].engine
+    assert pre.prefill_stats["prefix_hits"] >= 1
+    # one capture, two topologies: the wide pool LOADed via stamping, the
+    # narrow one via the exact path — and both phases are in the report
+    modes = {r.mode for r in rep.replicas if r.mode}
+    assert modes == {"foundry", "foundry-stamped"}, modes
+    assert [p["phase"] for p in s["pools"]] == ["prefill", "decode"]
+    assert all(p["steps"] > 0 for p in s["pools"])
+    # requests were stamped with the phase they ended on
+    assert all(r.phase == "decode" for r in reqs)
+    assert all(r.handoff_wait_s is not None for r in reqs)
+
+
+def test_decode_capacity_overflow_requeues_with_prefix(archive, reference):
+    """More finished fills than free decode slots: the overflow handoff
+    requeues onto the decode pool (prefix kept, no retry charged) and every
+    stream still matches the oracle."""
+    fleet = Fleet(
+        factory_for_mesh=lambda m: mk(m, max_batch=2), mode="vanilla",
+        pools=[PoolSpec("prefill", pol()), PoolSpec("decode", pol())])
+    fleet.start()
+    # max_batch=2 everywhere: the prefill pool finishes fills two at a time
+    # while the decode pool is still mid-stream on the previous pair
+    ref = {}
+    for p in PROMPTS:
+        eng = mk(None, max_batch=2)
+        eng.cold_start_vanilla()
+        r = eng.submit(p, 10)
+        eng.run_until_drained()
+        ref[tuple(p)] = tuple(r.generated)
+    reqs = [fleet.submit(PROMPTS[i % len(PROMPTS)], 10) for i in range(6)]
+    drain(fleet, reqs)
+    rep = fleet.report()
+    assert rep.n_failed == 0 and rep.n_done == len(reqs)
+    assert fleet.handoff_requeued > 0, \
+        "6 requests through a 2-slot decode pool must overflow a handoff"
+    assert fleet.handoffs + fleet.handoff_requeued >= len(reqs)
+    assert all(q.retries == 0 for q in reqs), \
+        "capacity overflow is a resource shortfall, not a worker failure"
+    for r in reqs:
+        assert tuple(r.generated) == ref[tuple(r.prompt)], \
+            f"req {r.req_id} diverged across the requeued handoff"
+
+
+def test_prefill_crash_salvages_onto_decode_pool(archive, reference):
+    """A prefill replica dying MID-FILL: supervision exports its rows and
+    the decode pool adopts them cross-pool — the adopter re-derives the fill
+    target and finishes the fill, so the stream never diverges."""
+    fleet = disagg(archive)
+    fleet.start()
+    t0 = time.perf_counter()
+    while len(fleet._ready()) < 2:
+        fleet.tick()
+        time.sleep(0.001)
+        assert time.perf_counter() - t0 < 300, "provision wedged"
+    reqs = [fleet.submit(p, N_NEW) for p in PROMPTS[:4]]
+    fleet.tick()  # fills are in flight on the prefill replica
+    tgt = fleet.pools["prefill"]._ready()[0]
+    assert tgt.load > 0
+    with fault_plan(FaultPlan(
+            FaultSpec(site="engine.decode_step",
+                      tag=f"replica{tgt.stats.replica_id}", times=1,
+                      message="prefill chaos"))):
+        while fleet.crashes == 0:
+            fleet.tick()
+            assert time.perf_counter() - t0 < 300, "crash never fired"
+    assert fleet.pools["prefill"].crashes == 1
+    assert fleet.pools["decode"].crashes == 0
+    drain(fleet, reqs)
+    rep = fleet.report()
+    assert rep.n_failed == 0 and rep.n_done == len(reqs)
+    assert rep.salvaged_requests + rep.crash_requeued_requests > 0
+    for r in reqs:
+        assert tuple(r.generated) == reference[tuple(r.prompt)], \
+            f"req {r.req_id} diverged across the prefill crash"
+    assert rep.summary()["fallback_compiles"] == 0  # respawn = warm LOAD
+
+
+def test_per_pool_reshard_does_not_wedge_the_other_pool(archive, reference):
+    """The prefill pool reshards live (un-meshed -> (1,1) stamped) while the
+    decode pool keeps completing handoffs; the decode pool's topology and
+    reshard history are untouched."""
+    fleet = disagg(archive)
+    fleet.start()
+    with pytest.raises(ValueError, match="pass pool="):
+        fleet.reshard(make_host_mesh())  # multi-pool fleet: must name one
+    reqs = [fleet.submit(p, N_NEW) for p in PROMPTS[:3]]
+    t0 = time.perf_counter()
+    while len(fleet._ready()) < 2:
+        fleet.tick()
+        time.sleep(0.001)
+        assert time.perf_counter() - t0 < 300, "provision wedged"
+    for _ in range(2):
+        fleet.tick()
+    rep = fleet.reshard(make_host_mesh(), pool="prefill")
+    assert rep.pool == "prefill"
+    k = 0
+    while fleet._reshard is not None:
+        reqs.append(fleet.submit(PROMPTS[k % len(PROMPTS)], N_NEW))
+        k += 1
+        if fleet.tick() == 0:
+            time.sleep(0.001)
+        assert time.perf_counter() - t0 < 300, "reshard wedged"
+    assert rep.done and rep.aborted is None
+    drain(fleet, reqs)
+    fleet.drain_background()
+    frep = fleet.report()
+    assert frep.n_failed == 0 and frep.n_done == len(reqs)
+    for r in reqs:
+        assert tuple(r.generated) == reference[tuple(r.prompt)], \
+            f"req {r.req_id} diverged across the per-pool reshard"
+    # the switch was scoped to the prefill pool
+    assert fleet.pools["prefill"].mesh is not None
+    assert fleet.pools["decode"].mesh is None
+    assert not fleet.pools["decode"].reshard_reports
+    assert [s["pool"] for s in frep.summary()["reshards"]] == ["prefill"]
+    # decode replicas were serving (not wedged) during and after the switch
+    assert fleet.pools["decode"].step_walls
+    assert fleet.handoffs > 0
+    assert frep.summary()["fallback_compiles"] == 0

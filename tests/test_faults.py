@@ -21,7 +21,8 @@ from repro.serving.engine import ServingEngine
 from repro.serving.faults import (FAULT_SITES, FaultPlan, FaultSpec,
                                   InjectedFault, InjectedIOError, fault_plan,
                                   fault_point)
-from repro.serving.fleet import AutoscalePolicy, Fleet, ReplicaState
+from repro.serving.fleet import (AutoscalePolicy, Fleet, PoolSpec,
+                                 ReplicaState)
 from repro.serving.scheduler import ReqState, Scheduler
 
 CFG = get_arch("smollm-360m").reduced()
@@ -353,6 +354,39 @@ def test_verify_failure_on_respawn_degrades_to_nonstrict(archive_path,
     assert rep.respawns == 1
     for q in reqs:
         assert tuple(q.generated) == reference[tuple(q.prompt)]
+
+
+def test_handoff_fault_requeues_onto_decode_pool(archive_path, reference):
+    """A fault in the prefill->decode handoff window (the request exists
+    only as a detached RowBundle) must requeue the request onto the DECODE
+    pool with its prefix kept — no retry charged, no token divergence."""
+    fleet = Fleet(factory, mode="foundry", archive=Archive.load(archive_path),
+                  pools=[PoolSpec("prefill", small_policy(max_replicas=1)),
+                         PoolSpec("decode", small_policy(max_replicas=1))])
+    fleet.start()
+    _tick_until(fleet, lambda: len(fleet._ready()) == 2, "provision")
+    reqs = [fleet.submit(p, N_NEW) for p in PROMPTS[:3]]
+    with fault_plan(FaultPlan(FaultSpec(site="kv.handoff", nth=1, times=1,
+                                        message="handoff chaos"))) as plan:
+        _tick_until(fleet, lambda: fleet.handoff_requeued > 0,
+                    "handoff fault", budget=2000)
+        assert plan.fired("kv.handoff") == 1
+    _tick_until(fleet, lambda: fleet._unresolved() == 0, "drain")
+    rep = fleet.report()
+    assert rep.n_failed == 0 and rep.n_done == len(reqs)
+    assert fleet.handoff_requeued == 1
+    assert fleet.handoffs == len(reqs) - 1  # the faulted one never adopted
+    assert all(q.retries == 0 for q in reqs), \
+        "a failed handoff is not a worker failure; no retry may be charged"
+    # the requeued request still crossed phases and completed on decode
+    assert all(q.phase == "decode" for q in reqs)
+    assert all(q.handoff_wait_s is not None for q in reqs)
+    for q in reqs:
+        assert tuple(q.generated) == reference[tuple(q.prompt)], \
+            f"req {q.req_id} diverged across the faulted handoff"
+    s = rep.summary()
+    assert s["handoffs"] == len(reqs) - 1 and s["handoff_requeued"] == 1
+    assert s["fallback_compiles"] == 0
 
 
 # -- scheduler retry accounting (satellite) ------------------------------
